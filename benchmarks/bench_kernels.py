@@ -1,0 +1,43 @@
+"""Kernel microbenchmarks: comparator-network sorts vs XLA sort at the
+row-bucket granularity the MoE dispatch and serving admission use.
+
+On this CPU container the Pallas kernels run in interpret mode (Python), so
+the *timed* comparison uses the traced jnp implementations of the identical
+networks; the Pallas kernels themselves are validated for correctness in
+tests/test_kernels.py and their TPU cost is derived in the roofline."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitonic import bitonic_sort
+from repro.core.oets import oets_sort
+
+from .common import emit, timeit
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for rows, cols in [(8, 128), (32, 256), (64, 512)]:
+        x = jnp.asarray(rng.integers(0, 2**31, (rows, cols)).astype(np.int32))
+
+        oets = jax.jit(jax.vmap(oets_sort))
+        bit = jax.jit(jax.vmap(bitonic_sort))
+        xla = jax.jit(lambda v: jnp.sort(v, axis=-1))
+
+        t_oets = timeit(oets, x)
+        t_bit = timeit(bit, x)
+        t_xla = timeit(xla, x)
+        n_phase_oets = cols
+        n_phase_bit = int(np.log2(cols) * (np.log2(cols) + 1) / 2)
+        emit(f"kernels/oets/{rows}x{cols}", t_oets * 1e6, f"phases={n_phase_oets}")
+        emit(f"kernels/bitonic/{rows}x{cols}", t_bit * 1e6,
+             f"phases={n_phase_bit};vs_oets={t_oets / t_bit:.2f}x")
+        emit(f"kernels/xla_sort/{rows}x{cols}", t_xla * 1e6,
+             f"vs_bitonic={t_bit / t_xla:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""MoE dispatch: the paper's sort-based bucketing vs the one-hot einsum
+baseline, at increasing token counts. The sort dispatch is O(T k log Tk + T k d)
+while the einsum dispatch is O(T E C) in memory/compute — the crossover is
+the systems argument for sort-based routing at scale."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.moe import init_moe, moe
+from repro.models.param import Builder, finalize
+from repro.parallel.sharding import Rules
+
+from .common import emit, timeit
+
+
+def main():
+    rules = Rules()
+    base = get_smoke_config("granite-moe-1b-a400m").replace(d_model=128)
+    b = Builder(jax.random.PRNGKey(0), dtype=jnp.float32)
+    params, _ = finalize(init_moe(b, base))
+
+    for tokens in (256, 1024, 4096):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, tokens, base.d_model))
+        for impl in ("sort", "einsum"):
+            cfg = base.replace(moe=dataclasses.replace(base.moe, impl=impl))
+            fn = jax.jit(lambda p, v, c=cfg: moe(c, p, v, rules)[0])
+            t = timeit(fn, params, x)
+            emit(f"moe_dispatch/{impl}/T={tokens}", t * 1e6,
+                 f"E={base.moe.n_experts};k={base.moe.top_k}")
+
+
+if __name__ == "__main__":
+    main()

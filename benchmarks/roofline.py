@@ -1,0 +1,61 @@
+"""Roofline report: reads the dry-run artifacts and prints the three-term
+table per (arch x shape x mesh) — the §Roofline source of truth.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*", "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r):
+    t = r["roofline"]
+    dom = t["bottleneck"].replace("_s", "")
+    frac = None
+    total = t["compute_s"] + t["memory_s"] + t["collective_s"]
+    if total > 0:
+        frac = t["compute_s"] / max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return (f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{t['compute_s']:.3e} {t['memory_s']:.3e} {t['collective_s']:.3e} "
+            f"{dom:10s} "
+            f"{(r.get('useful_flops_ratio') or 0):.2f} "
+            f"{frac if frac is not None else 0:.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if not recs:
+        print("no artifacts; run: python -m repro.launch.dryrun")
+        return
+    if args.csv:
+        for r in recs:
+            t = r["roofline"]
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+                  f"{max(t['compute_s'], t['memory_s'], t['collective_s']) * 1e6:.1f},"
+                  f"bottleneck={t['bottleneck']}")
+        return
+    print(f"{'arch':24s} {'shape':12s} {'mesh':8s} "
+          f"{'compute_s':>9s} {'memory_s':>9s} {'collect_s':>9s} {'dominant':10s} "
+          f"{'useful':>6s} {'c/max':>5s}")
+    for r in recs:
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table + framework benches.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableX]
+"""
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "table1_preprocessing",
+    "table2_3_datastructure",
+    "table4_scaling",
+    "bench_kernels",
+    "bench_moe_dispatch",
+    "bench_serving",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.main()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    # roofline table from dry-run artifacts, when present
+    try:
+        from benchmarks import roofline
+        print("# --- roofline (from dry-run artifacts) ---", flush=True)
+        sys.argv = ["roofline", "--csv"]
+        roofline.main()
+    except Exception:
+        traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == '__main__':
+    main()

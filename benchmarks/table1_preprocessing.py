@@ -1,0 +1,43 @@
+"""Paper Table 1: pre-processing phases.
+
+Phases on a synthetic corpus matched to the paper's datasets by element
+count (the paper's DS1 ~ 190KB of text ~ 30k words; DS2 ~ 1.38MB ~ 230k):
+  1. remove special characters,
+  2. distribute words into per-length sub-arrays (bucketize),
+  3. pack to the dense fixed-width array (the paper's 3-D char array).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.bucketing import bucketize_words
+from repro.data.synthetic import synthetic_words, words_from_text
+
+from .common import emit
+
+
+def run(n_words: int, label: str):
+    words = synthetic_words(n_words, seed=0)
+    text = " ".join(words) + "?!,." * 100
+
+    t0 = time.perf_counter()
+    cleaned = words_from_text(text)
+    t_clean = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    buckets = bucketize_words(cleaned)
+    t_bucket = time.perf_counter() - t0
+
+    emit(f"table1/clean/{label}", t_clean * 1e6, f"words={len(cleaned)}")
+    emit(f"table1/bucketize_pack/{label}", t_bucket * 1e6,
+         f"buckets={len(buckets.lengths)};capacity={buckets.keys.shape[1] if buckets.keys.size else 0}")
+
+
+def main():
+    run(30_000, "ds1~190KB")
+    run(230_000, "ds2~1.38MB")
+
+
+if __name__ == "__main__":
+    main()

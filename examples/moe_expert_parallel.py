@@ -1,0 +1,50 @@
+"""The paper's technique at mesh scale inside a model: explicit
+expert-parallel MoE dispatch (sort -> bucket -> ONE all_to_all -> local
+experts -> return) across 8 devices, checked against the single-device
+GSPMD implementation.
+
+    PYTHONPATH=src python examples/moe_expert_parallel.py
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import AxisType  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models.moe import init_moe, moe  # noqa: E402
+from repro.models.moe_ep import ep_moe  # noqa: E402
+from repro.models.param import Builder, finalize  # noqa: E402
+from repro.parallel.sharding import Rules  # noqa: E402
+
+
+def main():
+    cfg = get_smoke_config("granite-moe-1b-a400m")
+    cfg = cfg.replace(moe=dataclasses.replace(
+        cfg.moe, n_experts=8, top_k=2, capacity_factor=8.0, n_shared=0))
+
+    b = Builder(jax.random.PRNGKey(0), dtype=jnp.float32)
+    params, _ = finalize(init_moe(b, cfg))
+    tokens = 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, tokens, cfg.d_model))
+
+    y_ref, _ = moe(cfg, params, x, Rules())  # GSPMD reference
+
+    mesh = jax.make_mesh((8,), ("ep",), axis_types=(AxisType.Auto,))
+    y_ep, _ = ep_moe(cfg, mesh, "ep", x.reshape(tokens, cfg.d_model),
+                     params["router"], params["w_in"], params["w_out"])
+
+    err = float(jnp.max(jnp.abs(y_ep.reshape(1, tokens, -1) - y_ref)))
+    print(f"8-way expert-parallel dispatch (1 expert/device, sort-bucketed, "
+          f"one all_to_all each way)\nmax |EP - GSPMD| = {err:.2e}")
+    assert err < 2e-4
+    print("moe_expert_parallel complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the paper's algorithm end-to-end in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Sort a word list with the paper's pipeline (bucket by length -> parallel
+   comparator sort -> shortlex order).
+2. Same comparator network as a Pallas TPU kernel (interpret mode on CPU).
+3. The technique inside an LM: sort-based MoE dispatch on a tiny model.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bucketed_sort_words, pack_words, unpack_words
+from repro.data import synthetic_words
+from repro.kernels import sort_rows, sort_rows_ref
+from repro.configs import get_smoke_config
+from repro.models import forward, init_lm
+from repro.parallel.sharding import Rules
+
+
+def demo_paper_pipeline():
+    words = synthetic_words(2_000, seed=0)
+    out = bucketed_sort_words(words, algorithm="oets")
+    expect = sorted(words, key=lambda w: (len(w), w))
+    assert out == expect
+    print(f"[1] bucketed OETS sorted {len(words)} words "
+          f"({len(set(len(w) for w in words))} length buckets) -> shortlex OK")
+
+
+def demo_pallas_kernel():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 10**6, (8, 256)).astype(np.int32))
+    out = sort_rows(x, algorithm="oets")          # Pallas kernel (interpret on CPU)
+    ref = sort_rows_ref(x)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+    print("[2] Pallas OETS kernel == jnp oracle on (8,256) rows OK")
+
+
+def demo_moe_lm():
+    cfg = get_smoke_config("granite-moe-1b-a400m")  # MoE arch, sort dispatch
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)}
+    logits, aux, _ = forward(cfg, params, batch, Rules())
+    print(f"[3] granite-moe forward with sort-based dispatch: "
+          f"logits {tuple(logits.shape)}, aux-loss {float(aux):.4f} OK")
+
+
+if __name__ == "__main__":
+    demo_paper_pipeline()
+    demo_pallas_kernel()
+    demo_moe_lm()
+    print("quickstart complete")

@@ -1,0 +1,46 @@
+"""Serve a small model with batched requests through the paper's
+length-bucketed admission scheduler.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import init_lm
+from repro.parallel.sharding import Rules
+from repro.serve import BucketedScheduler, Engine, Request
+
+
+def main():
+    cfg = get_smoke_config("minicpm3-4b")  # MLA: compressed-latent decode
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, Rules(), max_seq=96)
+    sched = BucketedScheduler(engine, batch_size=8, bounds=[8, 16, 32, 48])
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(f"req-{i}",
+                    list(rng.integers(1, cfg.vocab_size, int(rng.integers(3, 48)))),
+                    max_new=8)
+            for i in range(24)]
+
+    stats = BucketedScheduler.padding_stats(reqs, bounds=[8, 16, 32, 48])
+    print(f"padding waste: global-batch {stats['global_waste']:.1%} -> "
+          f"bucketed {stats['bucketed_waste']:.1%}")
+
+    t0 = time.time()
+    results = sched.run(reqs)
+    dt = time.time() - t0
+    toks = sum(len(r.tokens) for r in results)
+    print(f"served {len(results)} requests / {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s on CPU smoke model)")
+    sample = results[0]
+    print(f"sample {sample.request_id}: {sample.tokens}")
+    print("serve_lm complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Fault-tolerant checkpointing: atomic manifest+npy snapshots, keep-N GC,
+async save thread, reshard-on-restore for elastic recovery."""
+
+from .manager import CheckpointManager, latest_step, restore, save
+
+__all__ = ["CheckpointManager", "save", "restore", "latest_step"]

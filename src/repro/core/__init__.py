@@ -1,0 +1,23 @@
+"""Core sorting library: the paper's contribution as composable JAX modules.
+
+Layers of the hierarchy (lane -> block -> device):
+  packing      fixed-width key packing (paper's dense 3-D array insight)
+  oets         odd-even transposition sort = parallel bubble sort (paper-faithful)
+  bitonic      O(log^2 n)-phase network sort (beyond-paper hillclimb)
+  bucketing    length-bucketed segmented sort (paper's decomposition)
+  distributed  odd-even block sort across mesh devices (bubble sort over ICI)
+"""
+
+from .packing import pack_words, unpack_words, lanes_for_width, SENTINEL_U32
+from .oets import oets_sort, oets_sort_kv, oets_argsort, lex_gt
+from .bitonic import bitonic_sort, bitonic_sort_kv, bitonic_merge, bitonic_merge_kv
+from .bucketing import Buckets, bucketize_words, sort_buckets, bucketed_sort_words
+from .distributed import odd_even_block_sort, distributed_sort, local_merge
+
+__all__ = [
+    "pack_words", "unpack_words", "lanes_for_width", "SENTINEL_U32",
+    "oets_sort", "oets_sort_kv", "oets_argsort", "lex_gt",
+    "bitonic_sort", "bitonic_sort_kv", "bitonic_merge", "bitonic_merge_kv",
+    "Buckets", "bucketize_words", "sort_buckets", "bucketed_sort_words",
+    "odd_even_block_sort", "distributed_sort", "local_merge",
+]

@@ -1,0 +1,118 @@
+"""Bitonic sorting network — the beyond-paper upgrade of the comparator sort.
+
+The paper's comparator network (bubble sort / OETS) needs n phases. A bitonic
+network sorts in O(log^2 n) phases of the *same* vectorized compare-exchange
+primitive, so on a TPU — where a phase is one fused vector op — it is the
+natural hillclimb from the paper's baseline. Kept separate so EXPERIMENTS.md
+can report paper-faithful (OETS) and beyond-paper (bitonic) numbers
+independently.
+
+Also provides ``bitonic_merge`` for merging two sorted blocks in O(log n)
+phases — used by the device-level distributed sort instead of a full
+re-sort of the concatenation.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .oets import lex_gt, _sentinel
+
+__all__ = ["bitonic_sort", "bitonic_sort_kv", "bitonic_merge", "bitonic_merge_kv"]
+
+
+def _pad_pow2(keys, vals):
+    n = keys.shape[0]
+    m = 1 << max(0, (n - 1).bit_length())
+    if m == n:
+        return keys, vals, n
+    pad_k = jnp.full((m - n,) + keys.shape[1:], _sentinel(keys.dtype), keys.dtype)
+    keys = jnp.concatenate([keys, pad_k], axis=0)
+    if vals is not None:
+        pad_v = jnp.zeros((m - n,) + vals.shape[1:], vals.dtype)
+        vals = jnp.concatenate([vals, pad_v], axis=0)
+    return keys, vals, n
+
+
+def _ce_stage(keys, vals, j, direction_mask):
+    """Compare-exchange with partner ``i ^ j``; ascending where mask is True."""
+    n = keys.shape[0]
+    idx = jnp.arange(n)
+    partner = idx ^ j
+    pk = keys[partner]
+    gt = lex_gt(keys, pk)
+    lt = lex_gt(pk, keys)
+    is_lower = idx < partner
+    # ascending block: lower index keeps the min; descending: keeps the max.
+    want_swap = jnp.where(
+        direction_mask,
+        jnp.where(is_lower, gt, lt),
+        jnp.where(is_lower, lt, gt),
+    )
+    ws_k = want_swap.reshape(want_swap.shape + (1,) * (keys.ndim - 1))
+    new_keys = jnp.where(ws_k, pk, keys)
+    if vals is None:
+        return new_keys, None
+    pv = vals[partner]
+    ws_v = want_swap.reshape(want_swap.shape + (1,) * (vals.ndim - 1))
+    return new_keys, jnp.where(ws_v, pv, vals)
+
+
+def _bitonic(keys, vals):
+    keys, vals, n_orig = _pad_pow2(keys, vals)
+    n = keys.shape[0]
+    if n <= 1:
+        return keys[:n_orig], vals if vals is None else vals[:n_orig]
+    idx = jnp.arange(n)
+    for stage in range(1, int(math.log2(n)) + 1):
+        k = 1 << stage
+        direction = (idx & k) == 0  # ascending where bit unset
+        for sub in reversed(range(stage)):
+            keys, vals = _ce_stage(keys, vals, 1 << sub, direction)
+    return keys[:n_orig], vals if vals is None else vals[:n_orig]
+
+
+def bitonic_sort(keys: jax.Array) -> jax.Array:
+    """Sort ascending along axis 0; (n,) or (n, L) lex keys. Any n (padded)."""
+    out, _ = _bitonic(keys, None)
+    return out
+
+
+def bitonic_sort_kv(keys: jax.Array, vals: jax.Array):
+    out, v = _bitonic(keys, vals)
+    return out, v
+
+
+def _merge_network(keys, vals):
+    """Merge phases only (input must be bitonic, e.g. asc ++ desc)."""
+    n = keys.shape[0]
+    direction = jnp.ones((n,), dtype=bool)  # fully ascending
+    sub = n >> 1
+    while sub >= 1:
+        keys, vals = _ce_stage(keys, vals, sub, direction)
+        sub >>= 1
+    return keys, vals
+
+
+def bitonic_merge(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Merge two ascending-sorted blocks of equal pow2 length in O(log n) phases."""
+    if a.shape != b.shape:
+        raise ValueError("blocks must have equal shapes")
+    n = a.shape[0]
+    if n & (n - 1):
+        raise ValueError("block length must be a power of two")
+    keys = jnp.concatenate([a, b[::-1]], axis=0)  # ascending ++ descending = bitonic
+    out, _ = _merge_network(keys, None)
+    return out
+
+
+def bitonic_merge_kv(ak, av, bk, bv):
+    n = ak.shape[0]
+    if n & (n - 1):
+        raise ValueError("block length must be a power of two")
+    keys = jnp.concatenate([ak, bk[::-1]], axis=0)
+    vals = jnp.concatenate([av, bv[::-1]], axis=0)
+    return _merge_network(keys, vals)

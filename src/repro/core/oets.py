@@ -1,0 +1,167 @@
+"""Odd-even transposition sort (OETS) — the parallel formulation of bubble sort.
+
+The paper parallelizes bubble sort across length-buckets but keeps the
+in-bucket sort a serial compare-swap chain. A serial chain has zero
+parallelism on a TPU vector unit, so we use the textbook parallel-time
+formulation of the same comparator network: n alternating phases, each doing
+~n/2 *independent* neighbour compare-exchanges. Total comparisons remain
+n(n-1)/2 — exactly the count the paper quotes — but each phase is one fused
+vector op across all lanes.
+
+All functions support multi-lane keys ``(n, L) uint32`` compared
+lane-lexicographically (see ``core/packing.py``) as well as plain 1-D arrays
+of any comparable dtype. Key-value variants carry a payload through the same
+permutation (used by the MoE sort-based dispatch).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "lex_gt",
+    "oets_sort",
+    "oets_sort_kv",
+    "oets_argsort",
+]
+
+
+def lex_gt(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Lane-lexicographic ``a > b``.
+
+    ``a``/``b``: (..., L) multi-lane keys or (...,) scalars. Returns bool (...).
+    """
+    if a.ndim == b.ndim and a.ndim >= 1 and a.shape[-1:] == b.shape[-1:] and _is_multilane(a):
+        gt = jnp.zeros(a.shape[:-1], dtype=bool)
+        eq = jnp.ones(a.shape[:-1], dtype=bool)
+        for lane in range(a.shape[-1]):
+            al, bl = a[..., lane], b[..., lane]
+            gt = gt | (eq & (al > bl))
+            eq = eq & (al == bl)
+        return gt
+    return a > b
+
+
+def _is_multilane(x: jax.Array) -> bool:
+    # Multi-lane keys are 2-D+ unsigned-int arrays whose trailing axis is lanes.
+    return x.ndim >= 2 and jnp.issubdtype(x.dtype, jnp.unsignedinteger)
+
+
+def _sentinel(dtype) -> jax.Array:
+    if jnp.issubdtype(dtype, jnp.unsignedinteger):
+        return jnp.array(jnp.iinfo(dtype).max, dtype=dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.array(jnp.iinfo(dtype).max, dtype=dtype)
+    return jnp.array(jnp.inf, dtype=dtype)
+
+
+def _compare_exchange(lo, hi, vlo=None, vhi=None):
+    """One vectorized compare-exchange: returns (min, max) (+ payloads)."""
+    swap = lex_gt(lo, hi)
+    if lo.ndim > swap.ndim:  # broadcast over lane axis
+        swap_k = swap[..., None]
+    else:
+        swap_k = swap
+    new_lo = jnp.where(swap_k, hi, lo)
+    new_hi = jnp.where(swap_k, lo, hi)
+    if vlo is None:
+        return new_lo, new_hi
+    swap_v = swap.reshape(swap.shape + (1,) * (vlo.ndim - swap.ndim))
+    new_vlo = jnp.where(swap_v, vhi, vlo)
+    new_vhi = jnp.where(swap_v, vlo, vhi)
+    return new_lo, new_hi, new_vlo, new_vhi
+
+
+def _phase_even(keys, vals):
+    """Pairs (0,1),(2,3),...  ``keys``: (n[, L]) with n even."""
+    n = keys.shape[0]
+    kp = keys.reshape((n // 2, 2) + keys.shape[1:])
+    if vals is None:
+        lo, hi = _compare_exchange(kp[:, 0], kp[:, 1])
+        return jnp.stack([lo, hi], axis=1).reshape(keys.shape), None
+    vp = vals.reshape((n // 2, 2) + vals.shape[1:])
+    lo, hi, vlo, vhi = _compare_exchange(kp[:, 0], kp[:, 1], vp[:, 0], vp[:, 1])
+    return (
+        jnp.stack([lo, hi], axis=1).reshape(keys.shape),
+        jnp.stack([vlo, vhi], axis=1).reshape(vals.shape),
+    )
+
+
+def _phase_odd(keys, vals):
+    """Pairs (1,2),(3,4),...,(n-3,n-2); endpoints fixed. n even."""
+    n = keys.shape[0]
+    if n <= 2:
+        return keys, vals
+    mid_k, mid_v = _phase_even(keys[1 : n - 1], None if vals is None else vals[1 : n - 1])
+    keys = jnp.concatenate([keys[:1], mid_k, keys[n - 1 :]], axis=0)
+    if vals is None:
+        return keys, None
+    vals = jnp.concatenate([vals[:1], mid_v, vals[n - 1 :]], axis=0)
+    return keys, vals
+
+
+def _pad_even(keys, vals):
+    n = keys.shape[0]
+    if n % 2 == 0:
+        return keys, vals, n
+    pad_k = jnp.full((1,) + keys.shape[1:], _sentinel(keys.dtype), dtype=keys.dtype)
+    keys = jnp.concatenate([keys, pad_k], axis=0)
+    if vals is not None:
+        pad_v = jnp.zeros((1,) + vals.shape[1:], dtype=vals.dtype)
+        vals = jnp.concatenate([vals, pad_v], axis=0)
+    return keys, vals, n
+
+
+def _oets(keys, vals, num_phases=None):
+    keys, vals, n_orig = _pad_even(keys, vals)
+    n = keys.shape[0]
+    if n_orig <= 1:
+        return keys[:n_orig], None if vals is None else vals[:n_orig]
+    # One loop iteration = one even + one odd phase. ceil(n/2) iterations
+    # guarantee the full n phases of OETS (sorted for any input).
+    iters = (n + 1) // 2 if num_phases is None else (num_phases + 1) // 2
+
+    if vals is None:
+        def body(_, k):
+            k, _v = _phase_even(k, None)
+            k, _v = _phase_odd(k, None)
+            return k
+
+        keys = lax.fori_loop(0, iters, body, keys)
+        return keys[:n_orig], None
+
+    def body_kv(_, kv):
+        k, v = kv
+        k, v = _phase_even(k, v)
+        k, v = _phase_odd(k, v)
+        return (k, v)
+
+    keys, vals = lax.fori_loop(0, iters, body_kv, (keys, vals))
+    return keys[:n_orig], vals[:n_orig]
+
+
+def oets_sort(keys: jax.Array, num_phases: int | None = None) -> jax.Array:
+    """Sort ascending along axis 0 via odd-even transposition.
+
+    ``keys``: (n,) any comparable dtype, or (n, L) uint32 multi-lane keys.
+    ``num_phases`` (optional) runs a truncated network (for partial sorting
+    experiments); default n phases = fully sorted.
+    """
+    out, _ = _oets(keys, None, num_phases)
+    return out
+
+
+def oets_sort_kv(keys: jax.Array, vals: jax.Array, num_phases: int | None = None):
+    """Sort ``keys`` ascending, carrying ``vals`` through the permutation."""
+    if vals.shape[0] != keys.shape[0]:
+        raise ValueError("keys/vals leading dims differ")
+    return _oets(keys, vals, num_phases)
+
+
+def oets_argsort(keys: jax.Array, num_phases: int | None = None) -> jax.Array:
+    """Permutation indices that sort ``keys`` (stable only up to equal keys)."""
+    idx = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    _, perm = _oets(keys, idx, num_phases)
+    return perm

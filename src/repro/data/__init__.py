@@ -1,0 +1,11 @@
+"""Data substrate: synthetic corpora, the paper's length-bucketed batching
+as a pipeline stage, and a sharded prefetching host loader."""
+
+from .synthetic import synthetic_words, TokenStream, clean_text, words_from_text
+from .bucketing import LengthBucketedBatcher, plan_buckets
+from .loader import ShardedLoader
+
+__all__ = [
+    "synthetic_words", "TokenStream", "clean_text", "words_from_text",
+    "LengthBucketedBatcher", "plan_buckets", "ShardedLoader",
+]

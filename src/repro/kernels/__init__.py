@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot spot the paper optimizes: the
+in-bucket comparator sort. ``ops`` is the public entry; ``ref`` the jnp
+oracle; per-kernel modules hold the pallas_call + BlockSpec definitions."""
+
+from .ops import sort_rows, sort_rows_kv, partition_rows
+from .ref import sort_rows_ref, sort_rows_kv_ref, partition_rows_ref
+
+__all__ = ["sort_rows", "sort_rows_kv", "partition_rows", "sort_rows_ref", "sort_rows_kv_ref", "partition_rows_ref"]

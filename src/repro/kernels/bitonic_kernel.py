@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: bitonic network sort along vector lanes (beyond-paper).
+
+Same layout as the OETS kernel ((ROW_BLOCK, cols) in VMEM, one bucket per
+sublane row) but O(log^2 cols) phases instead of cols. The XOR-partner
+shuffle is expressed as two lane ``roll``s + a bit-select, which lowers to
+cheap lane permutes on the VPU — no gather. cols must be a power of two
+(ops.py pads with the dtype's max sentinel).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["bitonic_rows_kernel", "bitonic_rows_kv_kernel", "bitonic_rows_pallas", "bitonic_rows_kv_pallas"]
+
+
+def _stage(k, v, col, j, direction_asc):
+    """Compare-exchange with partner col ^ j; ascending where mask True."""
+    bit_unset = (col & j) == 0
+    # partner value: col+j for bit-unset lanes (roll left), col-j otherwise.
+    pk = jnp.where(bit_unset, jnp.roll(k, -j, axis=1), jnp.roll(k, j, axis=1))
+    gt = k > pk
+    lt = pk > k
+    swap = jnp.where(direction_asc, jnp.where(bit_unset, gt, lt),
+                     jnp.where(bit_unset, lt, gt))
+    k = jnp.where(swap, pk, k)
+    if v is None:
+        return k, None
+    pv = jnp.where(bit_unset, jnp.roll(v, -j, axis=1), jnp.roll(v, j, axis=1))
+    return k, jnp.where(swap, pv, v)
+
+
+def _network(k, v):
+    ncols = k.shape[1]
+    col = lax.broadcasted_iota(jnp.int32, k.shape, 1)
+    for stage in range(1, int(math.log2(ncols)) + 1):
+        kk = 1 << stage
+        direction_asc = (col & kk) == 0
+        for sub in reversed(range(stage)):
+            k, v = _stage(k, v, col, 1 << sub, direction_asc)
+    return k, v
+
+
+def bitonic_rows_kernel(x_ref, o_ref):
+    k, _ = _network(x_ref[...], None)
+    o_ref[...] = k
+
+
+def bitonic_rows_kv_kernel(k_ref, v_ref, ok_ref, ov_ref):
+    k, v = _network(k_ref[...], v_ref[...])
+    ok_ref[...] = k
+    ov_ref[...] = v
+
+
+def _row_block(rows: int) -> int:
+    return min(rows, 8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "row_block"))
+def bitonic_rows_pallas(x, *, interpret: bool = False, row_block: int | None = None):
+    rows, cols = x.shape
+    if cols & (cols - 1):
+        raise ValueError("cols must be a power of two (pad in ops.py)")
+    rb = row_block or _row_block(rows)
+    return pl.pallas_call(
+        bitonic_rows_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(rows // rb,),
+        in_specs=[pl.BlockSpec((rb, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "row_block"))
+def bitonic_rows_kv_pallas(keys, vals, *, interpret: bool = False, row_block: int | None = None):
+    rows, cols = keys.shape
+    if cols & (cols - 1):
+        raise ValueError("cols must be a power of two (pad in ops.py)")
+    rb = row_block or _row_block(rows)
+    return pl.pallas_call(
+        bitonic_rows_kv_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(keys.shape, keys.dtype),
+            jax.ShapeDtypeStruct(vals.shape, vals.dtype),
+        ),
+        grid=(rows // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        ),
+        interpret=interpret,
+    )(keys, vals)

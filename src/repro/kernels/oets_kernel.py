@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: odd-even transposition sort along vector lanes.
+
+Layout decision (the TPU adaptation of the paper's OpenMP loop): a block of
+``(ROW_BLOCK, cols)`` sits in VMEM; each sublane row is an independent
+length-bucket and the ``cols`` elements live across vector lanes. One OETS
+phase is two ``roll``s + compares + selects — fully lane-parallel on the VPU,
+no gather/scatter. ``cols`` phases sort every row; total compare count per
+row is cols*(cols-1)/2, the paper's n(n-1)/2.
+
+The kernel is written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU with ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["oets_rows_kernel", "oets_rows_kv_kernel", "oets_rows_pallas", "oets_rows_kv_pallas"]
+
+
+def _phase(x, parity, col, ncols):
+    """One OETS phase on (R, C): pairs (j, j+1) for j % 2 == parity."""
+    nxt = jnp.roll(x, -1, axis=1)
+    prv = jnp.roll(x, 1, axis=1)
+    is_left = (col % 2 == parity) & (col < ncols - 1)
+    is_right = (col % 2 == 1 - parity) & (col >= 1)
+    swap_with_next = is_left & (x > nxt)
+    swap_with_prev = is_right & (prv > x)
+    return jnp.where(swap_with_next, nxt, jnp.where(swap_with_prev, prv, x))
+
+
+def oets_rows_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    ncols = x.shape[1]
+    col = lax.broadcasted_iota(jnp.int32, x.shape, 1)
+
+    def body(p, x):
+        return _phase(x, p % 2, col, ncols)
+
+    o_ref[...] = lax.fori_loop(0, ncols, body, x)
+
+
+def oets_rows_kv_kernel(k_ref, v_ref, ok_ref, ov_ref):
+    k = k_ref[...]
+    v = v_ref[...]
+    ncols = k.shape[1]
+    col = lax.broadcasted_iota(jnp.int32, k.shape, 1)
+
+    def body(p, kv):
+        k, v = kv
+        parity = p % 2
+        k_nxt = jnp.roll(k, -1, axis=1)
+        k_prv = jnp.roll(k, 1, axis=1)
+        v_nxt = jnp.roll(v, -1, axis=1)
+        v_prv = jnp.roll(v, 1, axis=1)
+        is_left = (col % 2 == parity) & (col < ncols - 1)
+        is_right = (col % 2 == 1 - parity) & (col >= 1)
+        swap_next = is_left & (k > k_nxt)
+        swap_prev = is_right & (k_prv > k)
+        k = jnp.where(swap_next, k_nxt, jnp.where(swap_prev, k_prv, k))
+        v = jnp.where(swap_next, v_nxt, jnp.where(swap_prev, v_prv, v))
+        return (k, v)
+
+    k, v = lax.fori_loop(0, ncols, body, (k, v))
+    ok_ref[...] = k
+    ov_ref[...] = v
+
+
+def _row_block(rows: int) -> int:
+    # 8 sublanes is the fp32/i32 tile height; keep the VMEM working set small.
+    return min(rows, 8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "row_block"))
+def oets_rows_pallas(x, *, interpret: bool = False, row_block: int | None = None):
+    """Sort each row of (R, C) ascending. R % row_block == 0, C lane-padded
+    by the caller (see ops.py)."""
+    rows, cols = x.shape
+    rb = row_block or _row_block(rows)
+    return pl.pallas_call(
+        oets_rows_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(rows // rb,),
+        in_specs=[pl.BlockSpec((rb, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "row_block"))
+def oets_rows_kv_pallas(keys, vals, *, interpret: bool = False, row_block: int | None = None):
+    rows, cols = keys.shape
+    rb = row_block or _row_block(rows)
+    return pl.pallas_call(
+        oets_rows_kv_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(keys.shape, keys.dtype),
+            jax.ShapeDtypeStruct(vals.shape, vals.dtype),
+        ),
+        grid=(rows // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        ),
+        interpret=interpret,
+    )(keys, vals)

@@ -1,0 +1,119 @@
+"""Public jit'd wrappers around the Pallas sorting kernels.
+
+Handles everything the raw kernels require of their caller:
+  * lane padding (cols -> multiple of 128 for OETS, next pow2 >= 128 for bitonic)
+    with per-dtype +inf/max sentinels so padding sinks to the row tail,
+  * sublane padding (rows -> multiple of the 8-row block),
+  * automatic ``interpret=True`` on CPU (this container), compiled on TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .bitonic_kernel import bitonic_rows_kv_pallas, bitonic_rows_pallas
+from .oets_kernel import oets_rows_kv_pallas, oets_rows_pallas
+from .partition_kernel import partition_rows_pallas
+
+__all__ = ["sort_rows", "sort_rows_kv", "partition_rows"]
+
+_LANES = 128
+_SUBLANES = 8
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _sentinel(dtype):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def _pad_cols(x, target):
+    pad = target - x.shape[1]
+    if pad == 0:
+        return x
+    fill = jnp.full((x.shape[0], pad), _sentinel(x.dtype), x.dtype)
+    return jnp.concatenate([x, fill], axis=1)
+
+
+def _pad_rows(x, multiple):
+    pad = (-x.shape[0]) % multiple
+    if pad == 0:
+        return x
+    fill = jnp.zeros((pad, x.shape[1]), x.dtype)
+    return jnp.concatenate([x, fill], axis=0)
+
+
+def _next_pow2(n):
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def sort_rows(x, algorithm: str = "oets", interpret: bool | None = None):
+    """Sort each row of a (rows, cols) array ascending with a Pallas kernel.
+
+    ``algorithm``: 'oets' (paper-faithful) or 'bitonic' (beyond-paper).
+    """
+    interpret = _auto_interpret(interpret)
+    rows, cols = x.shape
+    if algorithm == "oets":
+        target = max(_LANES, -(-cols // _LANES) * _LANES)
+        fn = oets_rows_pallas
+    elif algorithm == "bitonic":
+        target = max(_LANES, _next_pow2(cols))
+        fn = bitonic_rows_pallas
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    xp = _pad_rows(_pad_cols(x, target), _SUBLANES)
+    out = fn(xp, interpret=interpret)
+    return out[:rows, :cols]
+
+
+def sort_rows_kv(keys, vals, algorithm: str = "oets", interpret: bool | None = None):
+    """Row-wise key-value sort; ``vals`` must share ``keys``' shape/rows."""
+    if keys.shape != vals.shape:
+        raise ValueError("keys and vals must have identical shapes")
+    interpret = _auto_interpret(interpret)
+    rows, cols = keys.shape
+    if algorithm == "oets":
+        target = max(_LANES, -(-cols // _LANES) * _LANES)
+        fn = oets_rows_kv_pallas
+    elif algorithm == "bitonic":
+        target = max(_LANES, _next_pow2(cols))
+        fn = bitonic_rows_kv_pallas
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    kp = _pad_rows(_pad_cols(keys, target), _SUBLANES)
+    vp = _pad_rows(_pad_cols(vals, target), _SUBLANES)  # sentinel vals ignored
+    ok, ov = fn(kp, vp, interpret=interpret)
+    return ok[:rows, :cols], ov[:rows, :cols]
+
+
+def partition_rows(keys, splitters, interpret: bool | None = None):
+    """Bucket each element of (rows, cols) int32 ``keys`` by sorted
+    ``splitters`` (the paper's distribute-into-sub-arrays step).
+
+    Returns (bucket_ids (rows, cols), counts (rows, n_buckets)) with
+    n_buckets = len(splitters) + 1. bucket id = #splitters <= key."""
+    interpret = _auto_interpret(interpret)
+    rows, cols = keys.shape
+    n_spl = int(splitters.shape[0])
+    n_buckets = n_spl + 1
+    spl_pad = jnp.full((1, max(_LANES, -(-n_spl // _LANES) * _LANES)),
+                       jnp.iinfo(jnp.int32).max, jnp.int32)
+    spl_pad = spl_pad.at[0, :n_spl].set(splitters.astype(jnp.int32))
+    cols_p = max(_LANES, -(-cols // _LANES) * _LANES)
+    xp = _pad_rows(_pad_cols(keys.astype(jnp.int32), cols_p), _SUBLANES)
+    bid, cnt = partition_rows_pallas(
+        xp, spl_pad, n_splitters=n_spl, n_buckets=n_buckets, interpret=interpret)
+    # padded cols land in the top bucket (sentinel = int32 max); correct the
+    # histogram for them before returning
+    pad_cols = cols_p - cols
+    if pad_cols:
+        cnt = cnt.at[:, n_buckets - 1].add(-pad_cols)
+    return bid[:rows, :cols], cnt[:rows]

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: splitter partitioning — the paper's *distribute
+elements into sub-arrays* step as a vector kernel.
+
+Given row-major keys and a sorted splitter list, emits each element's bucket
+id (count of splitters <= key) and the per-row bucket histogram. This is the
+local phase of the distributed sample sort (core/distributed.py) and the
+length-histogram phase of the paper's pre-processing, fused into one VMEM
+pass: bucket ids come from S broadcast compare-accumulates across lanes,
+histograms from B masked popcounts — no gather/scatter, MXU-free VPU work.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["partition_rows_kernel", "partition_rows_pallas"]
+
+
+def partition_rows_kernel(x_ref, spl_ref, bid_ref, cnt_ref, *, n_splitters, n_buckets):
+    x = x_ref[...]                       # (RB, C)
+    spl = spl_ref[...]                   # (1, S_pad)
+    bucket = jnp.zeros(x.shape, jnp.int32)
+    for j in range(n_splitters):         # static, <= 127
+        bucket = bucket + (x >= spl[0, j]).astype(jnp.int32)
+    bid_ref[...] = bucket
+    for p in range(n_buckets):           # static histogram over lanes
+        cnt_ref[:, p] = jnp.sum((bucket == p).astype(jnp.int32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_splitters", "n_buckets", "interpret", "row_block"))
+def partition_rows_pallas(x, splitters_padded, *, n_splitters: int,
+                          n_buckets: int, interpret: bool = False,
+                          row_block: int | None = None):
+    """x (R, C) int32; splitters_padded (1, S_pad). Returns
+    (bucket_ids (R, C) int32, counts (R, n_buckets) int32)."""
+    rows, cols = x.shape
+    rb = row_block or min(rows, 8)
+    kern = functools.partial(
+        partition_rows_kernel, n_splitters=n_splitters, n_buckets=n_buckets)
+    return pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+            jax.ShapeDtypeStruct((rows, n_buckets), jnp.int32),
+        ),
+        grid=(rows // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, splitters_padded.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+            pl.BlockSpec((rb, n_buckets), lambda i: (i, 0)),
+        ),
+        interpret=interpret,
+    )(x, splitters_padded)

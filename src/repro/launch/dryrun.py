@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+# Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, with zero real allocation:
+  * a compiled executable for the production mesh (proves the sharding plan
+    is coherent: no mismatched collectives, no impossible layouts),
+  * memory_analysis() -> per-device HBM demand (proves it fits / flags what
+    doesn't and why),
+  * cost_analysis() FLOPs/bytes + a collective-bytes breakdown parsed from
+    the partitioned HLO -> the three §Roofline terms.
+
+Artifacts land in artifacts/dryrun/<mesh>/<arch>__<shape>.json and are the
+single source for EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, SHAPES, cells_for, get_config
+from ..models.model import decode_step, forward
+from ..parallel.sharding import Rules
+from ..training.steps import Hyper, make_train_step
+from . import hw
+from .analytics import cell_analytics, hbm_capacity_check
+from .mesh import make_production_mesh
+from .specs import count_params, input_specs
+
+# Per-arch microbatch accumulation for train_4k: chosen so layer-boundary
+# activations fit HBM (see EXPERIMENTS.md §Dry-run memory table).
+TRAIN_ACCUM = {
+    "llama3-405b": 32,
+    "nemotron-4-340b": 32,
+    "deepseek-v2-236b": 8,
+    "glm4-9b": 4,
+    "minicpm3-4b": 2,
+    "musicgen-large": 2,
+    "zamba2-1.2b": 2,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Sum output bytes per collective kind from a partitioned HLO module."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        out.setdefault(op, {"count": 0, "bytes": 0})
+        out[op]["count"] += 1
+        out[op]["bytes"] += _shape_bytes(shape_str)
+    return out
+
+
+def roofline_terms(flops, hbm_bytes, collectives):
+    compute_s = flops / hw.PEAK_FLOPS_BF16
+    memory_s = hbm_bytes / hw.HBM_BW
+    coll_bytes_eff = sum(
+        v["bytes"] * hw.COLLECTIVE_MULTIPLIER[k] for k, v in collectives.items()
+    )
+    collective_s = coll_bytes_eff / hw.ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k] if k.endswith("_s") else -1)
+    return terms
+
+
+def build_step(cfg, cell, rules: Rules, accum: int = 1):
+    if cell.kind == "train":
+        hyper = Hyper(accum=accum)
+        return make_train_step(cfg, rules, hyper)
+    if cell.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, _, cache = forward(cfg, params, batch, rules, return_cache=True)
+            return logits, cache
+        return prefill_step
+    def serve_step(params, cache, tok, cur):
+        return decode_step(cfg, params, cache, tok, cur, rules)
+    return serve_step
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             rules: Rules | None = None, accum: int | None = None,
+             extra_tag: str = "", cfg_overrides: dict | None = None):
+    cfg = get_config(arch_id)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    cell = SHAPES[shape_name]
+    rules = rules or Rules()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if accum is None:
+        accum = TRAIN_ACCUM.get(arch_id, 1) if cell.kind == "train" else 1
+
+    step = build_step(cfg, cell, rules, accum)
+    args, shardings = input_specs(cfg, cell, rules, mesh)
+    donate = (0, 1) if cell.kind == "train" else ((1,) if cell.kind == "decode" else ())
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(
+            step, in_shardings=shardings, donate_argnums=donate
+        ).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        flops = float(cost.get("flops", 0.0))
+        hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:
+        cost, flops, hbm_bytes = {"error": str(e)}, 0.0, 0.0
+
+    collectives = parse_collectives(compiled.as_text())
+    terms = roofline_terms(flops, hbm_bytes, collectives)
+    analytic = cell_analytics(cfg, cell, multi_pod, accum)
+    capacity = hbm_capacity_check(cfg, cell, multi_pod, accum)
+
+    total_p, active_p = count_params(cfg)
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = 6 if cell.kind == "train" else 2
+    model_flops_global = mult * active_p * tokens
+    n_dev = mesh.size
+    model_flops_per_dev = model_flops_global / n_dev
+    useful_ratio = model_flops_per_dev / flops if flops else None
+
+    record = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "accum": accum,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "collectives": collectives,
+        "roofline": terms,          # HLO-derived (scan bodies counted once!)
+        "analytic": analytic,       # closed-form, primary for §Roofline
+        "hbm_capacity": capacity,
+        "params_total": total_p,
+        "params_active": active_p,
+        "model_flops_per_device": model_flops_per_dev,
+        "useful_flops_ratio": useful_ratio,
+        "memory_analysis": mem_info,
+        "tag": extra_tag,
+    }
+    return record
+
+
+def artifact_path(record, out_dir="artifacts/dryrun"):
+    d = os.path.join(out_dir, record["mesh"])
+    os.makedirs(d, exist_ok=True)
+    tag = f"__{record['tag']}" if record["tag"] else ""
+    return os.path.join(d, f"{record['arch']}__{record['shape']}{tag}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        cells = cells_for(cfg)
+        for cell in cells:
+            if args.shape != "all" and cell.name != args.shape:
+                continue
+            for mp in meshes:
+                tagp = f"{arch} x {cell.name} x {'2x16x16' if mp else '16x16'}"
+                probe = {"arch": arch, "shape": cell.name,
+                         "mesh": "2x16x16" if mp else "16x16", "tag": ""}
+                path = artifact_path(probe, args.out)
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tagp}")
+                    continue
+                try:
+                    rec = run_cell(arch, cell.name, mp)
+                    with open(artifact_path(rec, args.out), "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(f"[ok]   {tagp}: compile={rec['compile_s']}s "
+                          f"flops/dev={rec['flops_per_device']:.3e} "
+                          f"bottleneck={r['bottleneck']}")
+                except Exception as e:
+                    failures.append((tagp, str(e)))
+                    print(f"[FAIL] {tagp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        for t, e in failures:
+            print(" -", t, e.splitlines()[0] if e else "")
+        raise SystemExit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Mesh construction. Functions, never module-level constants — importing
+this module must not touch jax device state (the dry-run sets
+XLA_FLAGS before its first jax call; tests run on 1 device)."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_elastic_mesh", "make_test_mesh"]
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds the 2-pod DCN axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_elastic_mesh(n_devices: int, model_parallel: int = 1):
+    """Largest (data, model) mesh the surviving devices can form —
+    the ElasticSupervisor rebuilds with this after a failure."""
+    model = model_parallel
+    while model > 1 and n_devices % model:
+        model //= 2
+    data = n_devices // model
+    return _mk((data, model), ("data", "model"))
+
+
+def make_test_mesh():
+    """Whatever this host has (1 device in CI, 8 with XLA_FLAGS)."""
+    n = len(jax.devices())
+    if n >= 4:
+        return _mk((n // 2, 2), ("data", "model"))
+    return _mk((n, 1), ("data", "model"))

@@ -1,0 +1,125 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+``input_specs`` builds the exact argument pytrees (abstract, zero
+allocation) that ``train_step`` / ``prefill_step`` / ``serve_step`` are
+lowered against, together with matching NamedShardings derived from the
+logical-axis rules.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from ..configs import ShapeCell
+from ..models.config import ModelConfig
+from ..models.model import init_cache, init_lm
+from ..models.param import tree_specs
+from ..optim import init_opt_state, opt_state_axes
+from ..parallel.sharding import Rules
+
+__all__ = ["input_specs", "abstract_state", "shardings_for", "count_params"]
+
+
+def _dt(name):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def shardings_for(axes_tree, rules: Rules, mesh, value_tree=None):
+    specs = tree_specs(axes_tree, rules, mesh, value_tree)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+def abstract_state(cfg: ModelConfig, rules: Rules, mesh, with_opt: bool = True):
+    """(params_sds, params_shardings[, opt_sds, opt_shardings])."""
+    params, axes = init_lm(cfg, abstract=True)
+    p_shard = shardings_for(axes, rules, mesh, params)
+    if not with_opt:
+        return params, p_shard
+    opt = init_opt_state(params, moment_dtype=_dt(cfg.optim_dtype), abstract=True)
+    o_axes = opt_state_axes(axes)
+    o_shard = shardings_for(o_axes, rules, mesh, opt)
+    return params, p_shard, opt, o_shard
+
+
+def _ns(mesh, rules: Rules, axes, shape):
+    return NamedSharding(mesh, rules.shape_spec(axes, shape, dict(mesh.shape)))
+
+
+def _batch_specs(cfg: ModelConfig, cell: ShapeCell, rules: Rules, mesh, with_labels: bool):
+    b, s = cell.global_batch, cell.seq_len
+    tree, shard = {}, {}
+    if cfg.input_kind == "tokens":
+        tree["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        shard["tokens"] = _ns(mesh, rules, ("batch", "seq"), (b, s))
+    else:
+        tree["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), _dt(cfg.compute_dtype))
+        shard["frames"] = _ns(mesh, rules, ("batch", "seq", "act_embed"), (b, s, cfg.d_model))
+    if cfg.rope_kind == "mrope":
+        tree["positions"] = jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+        shard["positions"] = _ns(mesh, rules, ("batch", "seq", None), (b, s, 3))
+    if with_labels:
+        tree["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        shard["labels"] = _ns(mesh, rules, ("batch", "seq"), (b, s))
+    return tree, shard
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, rules: Rules, mesh):
+    """Returns (args_sds, args_shardings) for the cell's step function.
+
+    train:   (params, opt_state, batch, step)
+    prefill: (params, batch)
+    decode:  (params, cache, tok, cur_index)
+    """
+    if cell.kind == "train":
+        params, p_sh, opt, o_sh = abstract_state(cfg, rules, mesh)
+        batch, b_sh = _batch_specs(cfg, cell, rules, mesh, with_labels=True)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        s_sh = NamedSharding(mesh, jax.sharding.PartitionSpec())
+        return (params, opt, batch, step), (p_sh, o_sh, b_sh, s_sh)
+
+    if cell.kind == "prefill":
+        params, p_sh = abstract_state(cfg, rules, mesh, with_opt=False)
+        batch, b_sh = _batch_specs(cfg, cell, rules, mesh, with_labels=False)
+        return (params, batch), (p_sh, b_sh)
+
+    if cell.kind == "decode":
+        params, p_sh = abstract_state(cfg, rules, mesh, with_opt=False)
+        cache, c_axes = init_cache(cfg, cell.global_batch, cell.seq_len, abstract=True)
+        c_sh = shardings_for(c_axes, rules, mesh, cache)
+        if cfg.input_kind == "tokens":
+            tok = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+            t_sh = _ns(mesh, rules, ("cache_batch", None), tok.shape)
+        else:
+            tok = jax.ShapeDtypeStruct((cell.global_batch, 1, cfg.d_model), _dt(cfg.compute_dtype))
+            t_sh = _ns(mesh, rules, ("cache_batch", None, None), tok.shape)
+        cur = jax.ShapeDtypeStruct((), jnp.int32)
+        cur_sh = NamedSharding(mesh, jax.sharding.PartitionSpec())
+        return (params, cache, tok, cur), (p_sh, c_sh, t_sh, cur_sh)
+
+    raise ValueError(f"unknown cell kind {cell.kind!r}")
+
+
+def count_params(cfg: ModelConfig):
+    """(total, active) parameter counts from the abstract tree."""
+    params, _ = init_lm(cfg, abstract=True)
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    total = 0
+    expert = 0
+    for path, leaf in leaves:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        keys = jax.tree_util.keystr(path)
+        if "moe" in keys and ("w_in" in keys or "w_out" in keys):
+            expert += n
+    active = total - expert
+    if cfg.moe is not None and expert:
+        active += expert * cfg.moe.top_k // cfg.moe.n_experts
+    return total, active

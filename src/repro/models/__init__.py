@@ -1,0 +1,11 @@
+"""Composable model zoo: every assigned architecture is assembled from the
+same primitive set (attention variants, MoE with sort-based dispatch, Mamba2
+SSD, hybrid groups) driven purely by ModelConfig."""
+
+from .config import MLACfg, ModelConfig, MoECfg, SSMCfg, smoke_variant
+from .model import decode_step, forward, init_cache, init_lm, lm_loss
+
+__all__ = [
+    "ModelConfig", "MoECfg", "MLACfg", "SSMCfg", "smoke_variant",
+    "init_lm", "forward", "lm_loss", "decode_step", "init_cache",
+]

@@ -1,0 +1,266 @@
+"""Attention variants: GQA (llama3/glm4/nemotron/...) and MLA
+(deepseek-v2/minicpm3), with training, prefill (cache-building) and decode
+(cache-consuming) paths.
+
+MLA decode uses the weight-absorption trick: queries are projected into the
+KV latent space so attention runs directly against the compressed cache
+(kv_lora + qk_rope per token) — the production reason MLA exists. The naive
+and absorbed paths are equivalence-tested in tests/test_models.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import Rules, constrain
+from .config import ModelConfig
+from .layers import apply_rope, init_norm, rmsnorm
+from .param import Builder
+
+__all__ = ["init_attention", "attention", "init_attn_cache"]
+
+
+def _softmax_attend(scores, mask, dtype):
+    scores = scores.astype(jnp.float32)
+    scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    return jax.nn.softmax(scores, axis=-1).astype(dtype)
+
+
+def _causal_mask(t: int, s: int):
+    # queries occupy the last t positions of an s-length context
+    q_pos = jnp.arange(t)[:, None] + (s - t)
+    return q_pos >= jnp.arange(s)[None, :]
+
+
+def _decode_mask(s: int, cur_index, extra_dims: int):
+    """Valid-context mask for one-token decode: positions <= cur_index.
+
+    ``cur_index`` scalar (synchronized decode) or (B,) (continuous batching:
+    each request sits at its own position). Shaped (B|1, 1*extra, 1, s) so it
+    broadcasts against (B, ..., T=1, s) score tensors."""
+    cur = jnp.asarray(cur_index)
+    if cur.ndim == 0:
+        m = jnp.arange(s) <= cur                        # (s,)
+        return m.reshape((1,) * (extra_dims + 1) + (s,))
+    m = jnp.arange(s)[None, :] <= cur[:, None]          # (B, s)
+    return m.reshape((m.shape[0],) + (1,) * extra_dims + (s,))
+
+
+def _cache_write(cache_arr, new, cur_index):
+    """Write a one-token entry at cur_index (scalar or per-row (B,))."""
+    new = new.astype(cache_arr.dtype)
+    cur = jnp.asarray(cur_index)
+    if cur.ndim == 0:
+        idx = (jnp.zeros((), jnp.int32), cur) + (jnp.zeros((), jnp.int32),) * (cache_arr.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache_arr, new, idx)
+    s = cache_arr.shape[1]
+    onehot = jnp.arange(s)[None, :] == cur[:, None]     # (B, s)
+    oh = onehot.reshape(onehot.shape + (1,) * (cache_arr.ndim - 2))
+    return jnp.where(oh, new, cache_arr)
+
+
+# ---------------- GQA ----------------
+
+def _gqa_chunked(q, keys, vals, scale, chunk, dt):
+    """Streaming-softmax attention over KV chunks (flash-attention pattern).
+
+    Never materializes the (T, S) score matrix: running max/normalizer/
+    accumulator are corrected per chunk. q (B,T,kh,g,d); keys/vals (B,S,kh,d).
+    Causal. Returns ctx (B,T,kh,g,d).
+    """
+    b, t, kh, g, d = q.shape
+    s = keys.shape[1]
+    nc = s // chunk
+    q_pos = jnp.arange(t)[:, None] + (s - t)
+
+    m0 = jnp.full((b, kh, g, t), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, t), jnp.float32)
+    a0 = jnp.zeros((b, t, kh, g, d), jnp.float32)
+
+    def body(carry, i):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(keys, i * chunk, chunk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(vals, i * chunk, chunk, axis=1)
+        sc = jnp.einsum("btkgd,bskd->bkgts", q, ks).astype(jnp.float32) * scale
+        col = i * chunk + jnp.arange(chunk)
+        sc = jnp.where((q_pos >= col[None, :])[None, None, None], sc, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        finite = jnp.isfinite(m_new)
+        corr = jnp.where(finite, jnp.exp(m - m_new), 1.0)
+        p = jnp.where(finite[..., None], jnp.exp(sc - m_new[..., None]), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgts,bskd->btkgd", p.astype(dt), vs).astype(jnp.float32)
+        acc = acc * jnp.moveaxis(corr, 3, 1)[..., None] + pv
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nc))
+    out = acc / jnp.maximum(jnp.moveaxis(l, 3, 1)[..., None], 1e-30)
+    return out.astype(dt)
+
+
+def _init_gqa(b: Builder, cfg: ModelConfig):
+    dm, h, k, d = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": b.param((dm, h, d), ("embed", "heads", None)),
+        "wk": b.param((dm, k, d), ("embed", "kv_heads", None)),
+        "wv": b.param((dm, k, d), ("embed", "kv_heads", None)),
+        "wo": b.param((h, d, dm), ("heads", None, "embed")),
+    }
+
+
+def _gqa(cfg, p, x, cos, sin, rules, cache, cur_index, return_cache):
+    B, T = x.shape[:2]
+    h, kh, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = cfg.q_per_kv
+    dt = x.dtype
+
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dt))
+    if cfg.rope_kind != "none":
+        q = apply_rope(q, cos, sin, cfg.rope_pct)
+        k = apply_rope(k, cos, sin, cfg.rope_pct)
+    q = constrain(q, rules, "batch", "seq", "act_heads", None)
+
+    if cache is not None:
+        # decode: T == 1; write the new KV at cur_index, attend to the prefix
+        keys = _cache_write(cache["k"], k, cur_index)
+        vals = _cache_write(cache["v"], v, cur_index)
+        s = keys.shape[1]
+        mask = _decode_mask(s, cur_index, extra_dims=3)  # (B|1,1,1,1,s)
+        new_cache = {"k": keys, "v": vals}
+        keys, vals = keys.astype(dt), vals.astype(dt)
+    else:
+        keys, vals = k, v
+        s = T
+        mask = _causal_mask(T, s)
+        new_cache = {"k": k, "v": v} if return_cache else None
+
+    qg = q.reshape(B, T, kh, g, d)
+    s_len = keys.shape[1]
+    chunk = cfg.attn_kv_chunk
+    if (cache is None and chunk and T > 1 and s_len > chunk
+            and s_len % chunk == 0):
+        # streaming attention: O(T*chunk) live scores instead of O(T*S)
+        ctx = _gqa_chunked(qg, keys, vals, d ** -0.5, chunk, dt).reshape(B, T, h, d)
+    else:
+        scores = jnp.einsum("btkgd,bskd->bkgts", qg, keys) * (d ** -0.5)
+        probs = _softmax_attend(scores, mask, dt)
+        ctx = jnp.einsum("bkgts,bskd->btkgd", probs, vals).reshape(B, T, h, d)
+    out = jnp.einsum("bthd,hdm->btm", ctx, p["wo"].astype(dt))
+    return out, new_cache
+
+
+# ---------------- MLA ----------------
+
+def _init_mla(b: Builder, cfg: ModelConfig):
+    m = cfg.mla
+    dm, h = cfg.d_model, cfg.n_heads
+    p = {
+        "wkv_a": b.param((dm, m.kv_lora + m.qk_rope), ("embed", "kv_lora")),
+        "kv_norm": init_norm(b, m.kv_lora),
+        "wkv_b": b.param((m.kv_lora, h, m.qk_nope + m.v_head), ("kv_lora", "heads", None)),
+        "wo": b.param((h, m.v_head, dm), ("heads", None, "embed")),
+    }
+    if m.q_lora:
+        p["wq_a"] = b.param((dm, m.q_lora), ("embed", "q_lora"))
+        p["q_norm"] = init_norm(b, m.q_lora)
+        p["wq_b"] = b.param((m.q_lora, h, m.qk_nope + m.qk_rope), ("q_lora", "heads", None))
+    else:
+        p["wq"] = b.param((dm, h, m.qk_nope + m.qk_rope), ("embed", "heads", None))
+    return p
+
+
+def _mla_queries(cfg, p, x, cos, sin):
+    m = cfg.mla
+    dt = x.dtype
+    if m.q_lora:
+        cq = jnp.einsum("btd,dq->btq", x, p["wq_a"].astype(dt))
+        cq = rmsnorm(p["q_norm"], cq, cfg.norm_eps)
+        q = jnp.einsum("btq,qhk->bthk", cq, p["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    qn, qr = q[..., : m.qk_nope], q[..., m.qk_nope :]
+    qr = apply_rope(qr, cos, sin)
+    return qn, qr
+
+
+def _mla(cfg, p, x, cos, sin, rules, cache, cur_index, return_cache):
+    m = cfg.mla
+    B, T = x.shape[:2]
+    h = cfg.n_heads
+    dt = x.dtype
+    scale = (m.qk_nope + m.qk_rope) ** -0.5
+
+    qn, qr = _mla_queries(cfg, p, x, cos, sin)
+    qn = constrain(qn, rules, "batch", "seq", "act_heads", None)
+
+    ckv_full = jnp.einsum("btd,dc->btc", x, p["wkv_a"].astype(dt))
+    ckv, kr = ckv_full[..., : m.kv_lora], ckv_full[..., m.kv_lora :]
+    ckv = rmsnorm(p["kv_norm"], ckv, cfg.norm_eps)
+    kr = apply_rope(kr[:, :, None, :], cos, sin)[:, :, 0, :]  # single shared head
+
+    if cache is not None:
+        # --- absorbed decode path: attend in the compressed latent space ---
+        ckv_c = _cache_write(cache["ckv"], ckv, cur_index)
+        kr_c = _cache_write(cache["kr"], kr, cur_index)
+        s = ckv_c.shape[1]
+        mask = _decode_mask(s, cur_index, extra_dims=2)  # (B|1,1,1,s) vs (B,h,1,s)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+        ckv_all, kr_all = ckv_c.astype(dt), kr_c.astype(dt)
+
+        w_uk = p["wkv_b"].astype(dt)[..., : m.qk_nope]        # (kvl, h, dn)
+        w_uv = p["wkv_b"].astype(dt)[..., m.qk_nope :]        # (kvl, h, dv)
+        q_lat = jnp.einsum("bthn,chn->bthc", qn, w_uk)        # queries -> latent
+        scores = (
+            jnp.einsum("bthc,bsc->bhts", q_lat, ckv_all)
+            + jnp.einsum("bthr,bsr->bhts", qr, kr_all)
+        ) * scale
+        probs = _softmax_attend(scores, mask, dt)
+        ctx_lat = jnp.einsum("bhts,bsc->bthc", probs, ckv_all)
+        ctx = jnp.einsum("bthc,chv->bthv", ctx_lat, w_uv)
+    else:
+        # --- naive path (train / prefill): materialize per-head k,v ---
+        kv = jnp.einsum("btc,chn->bthn", ckv, p["wkv_b"].astype(dt))
+        kn, v = kv[..., : m.qk_nope], kv[..., m.qk_nope :]
+        s = T
+        mask = _causal_mask(T, s)
+        scores = (
+            jnp.einsum("bthn,bshn->bhts", qn, kn)
+            + jnp.einsum("bthr,bsr->bhts", qr, kr)
+        ) * scale
+        probs = _softmax_attend(scores, mask, dt)
+        ctx = jnp.einsum("bhts,bshv->bthv", probs, v)
+        new_cache = {"ckv": ckv, "kr": kr} if return_cache else None
+
+    out = jnp.einsum("bthv,hvm->btm", ctx, p["wo"].astype(dt))
+    return out, new_cache
+
+
+# ---------------- public API ----------------
+
+def init_attention(b: Builder, cfg: ModelConfig):
+    return _init_mla(b, cfg) if cfg.attn == "mla" else _init_gqa(b, cfg)
+
+
+def attention(cfg: ModelConfig, p, x, cos, sin, rules: Rules,
+              cache=None, cur_index=None, return_cache: bool = False):
+    """Returns (out, new_cache). ``cache`` given => decode (T==1);
+    ``return_cache`` => prefill (build cache from this forward)."""
+    fn = _mla if cfg.attn == "mla" else _gqa
+    return fn(cfg, p, x, cos, sin, rules, cache, cur_index, return_cache)
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, seq: int, dtype):
+    """Abstract/concrete per-layer cache shapes (without the layer axis)."""
+    if cfg.attn == "mla":
+        m = cfg.mla
+        return {
+            "ckv": ((batch, seq, m.kv_lora), dtype),
+            "kr": ((batch, seq, m.qk_rope), dtype),
+        }
+    return {
+        "k": ((batch, seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": ((batch, seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }

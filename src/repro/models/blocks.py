@@ -1,0 +1,71 @@
+"""Block-level composition: transformer blocks (attn + MLP/MoE), Mamba2
+blocks, and the Zamba2-style shared-attention hybrid group."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..parallel.sharding import Rules, constrain
+from .attention import attention, init_attention
+from .config import ModelConfig
+from .layers import init_mlp, init_norm, mlp, norm
+from .moe import init_moe, moe
+from .param import Builder
+from .ssm import init_mamba, mamba_decode, mamba_train
+
+__all__ = [
+    "init_transformer_block", "transformer_block",
+    "init_mamba_block", "mamba_block",
+]
+
+
+def init_transformer_block(b: Builder, cfg: ModelConfig, ffn: str, d_ff: int | None = None):
+    """ffn: 'dense' or 'moe'."""
+    p = {
+        "ln1": init_norm(b, cfg.d_model, cfg.norm_kind),
+        "attn": init_attention(b, cfg),
+        "ln2": init_norm(b, cfg.d_model, cfg.norm_kind),
+    }
+    if ffn == "moe":
+        p["moe"] = init_moe(b, cfg)
+    else:
+        p["mlp"] = init_mlp(b, cfg.d_model, d_ff or cfg.d_ff, cfg.mlp_gated)
+    return p
+
+
+def transformer_block(cfg: ModelConfig, p, x, cos, sin, rules: Rules,
+                      cache=None, cur_index=None, return_cache=False,
+                      sort_impl: str = "xla"):
+    """Pre-norm residual block. Returns (x, new_cache, aux_loss)."""
+    h, new_cache = attention(
+        cfg, p["attn"], norm(p["ln1"], x, cfg.norm_eps, cfg.norm_kind),
+        cos, sin, rules, cache, cur_index, return_cache,
+    )
+    x = x + h
+    # residual-region constraint: seq-sharded under sequence parallelism
+    x = constrain(x, rules, "batch", "res_seq", "act_embed")
+    aux = jnp.zeros((), jnp.float32)
+    h2 = norm(p["ln2"], x, cfg.norm_eps, cfg.norm_kind)
+    if "moe" in p:
+        h2, aux = moe(cfg, p["moe"], h2, rules, sort_impl)
+    else:
+        h2 = mlp(p["mlp"], h2, cfg.mlp_act, cfg.mlp_gated, rules)
+    return x + h2, new_cache, aux
+
+
+def init_mamba_block(b: Builder, cfg: ModelConfig):
+    return {
+        "ln": init_norm(b, cfg.d_model, cfg.norm_kind),
+        "mixer": init_mamba(b, cfg),
+    }
+
+
+def mamba_block(cfg: ModelConfig, p, x, rules: Rules,
+                cache=None, return_cache=False, seq_mask=None):
+    """Returns (x, new_cache)."""
+    h = norm(p["ln"], x, cfg.norm_eps, cfg.norm_kind)
+    if cache is not None:
+        h, new_cache = mamba_decode(cfg, p["mixer"], h, cache, rules)
+    else:
+        h, new_cache = mamba_train(cfg, p["mixer"], h, rules, return_cache, seq_mask)
+    return x + h, new_cache

@@ -1,0 +1,119 @@
+"""Shared primitive layers: norms, rotary embeddings (RoPE / M-RoPE /
+partial), dense MLPs. Pure functions over explicit parameter pytrees."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import Rules, constrain
+from .param import Builder
+
+__all__ = [
+    "rmsnorm", "layernorm", "norm", "init_norm",
+    "rope_angles", "apply_rope", "mrope_angles",
+    "init_mlp", "mlp",
+]
+
+
+# ---------------- norms ----------------
+
+def init_norm(b: Builder, d: int, kind: str = "rmsnorm"):
+    p = {"w": b.param((d,), ("act_embed",), init="ones")}
+    if kind == "layernorm":
+        p["b"] = b.param((d,), ("act_embed",), init="zeros")
+    return p
+
+
+def rmsnorm(p, x, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["w"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm(p, x, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["w"].astype(jnp.float32) + p.get("b", 0.0)).astype(dt)
+
+
+def norm(p, x, eps: float, kind: str):
+    return rmsnorm(p, x, eps) if kind == "rmsnorm" else layernorm(p, x, eps)
+
+
+# ---------------- rotary embeddings ----------------
+
+def rope_angles(positions, rot_dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., rot_dim//2), fp32."""
+    half = rot_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions, rot_dim: int, theta: float, sections):
+    """Multimodal RoPE (qwen2-vl): positions (B, S, 3) = (t, h, w) ids.
+
+    The rot_dim//2 frequency slots are partitioned into ``sections``
+    (t/h/w); each section takes its angle from the matching position channel.
+    """
+    half = rot_dim // 2
+    if sum(sections) != half:
+        raise ValueError(f"mrope sections {sections} must sum to {half}")
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang_all = positions[..., None].astype(jnp.float32) * freq  # (B,S,3,half)
+    parts = []
+    start = 0
+    for ch, width in enumerate(sections):
+        parts.append(ang_all[..., ch, start : start + width])
+        start += width
+    ang = jnp.concatenate(parts, axis=-1)  # (B,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, rope_pct: float = 1.0):
+    """x (..., S, H, D); cos/sin (..., S, half). Half-split (NeoX) convention.
+    ``rope_pct < 1`` rotates only the leading fraction of D (glm4)."""
+    d = x.shape[-1]
+    rot = int(d * rope_pct)
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    x1, x2 = xr[..., :half], xr[..., half:]
+    c = cos[..., None, :half].astype(jnp.float32)
+    s = sin[..., None, :half].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------- dense MLP ----------------
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron-4 squared ReLU
+}
+
+
+def init_mlp(b: Builder, d_model: int, d_ff: int, gated: bool):
+    w_in_cols = 2 * d_ff if gated else d_ff
+    return {
+        "w_in": b.param((d_model, w_in_cols), ("embed", "mlp")),
+        "w_out": b.param((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x, act: str, gated: bool, rules: Rules):
+    h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(x.dtype))
+    if gated:
+        u, g = jnp.split(h, 2, axis=-1)
+        h = u * _ACTS[act](g)
+    else:
+        h = _ACTS[act](h)
+    h = constrain(h, rules, "batch", "seq", "act_mlp")
+    return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(x.dtype))

@@ -1,0 +1,375 @@
+"""LM assembly: parameter init (concrete or abstract), train/prefill forward,
+and single-token decode — for every family in the architecture pool.
+
+Structural choices that matter at scale:
+  * scan-over-layers with stacked params keeps HLO size O(1) in depth
+    (a 126-layer llama3-405b train step lowers as a single scanned block);
+  * hybrid (zamba2) runs a static python loop over shared-attention groups,
+    each group = shared transformer block + a scanned slice of Mamba2 layers
+    — no lax.cond in the hot path and the shared KV cache stays compact
+    (n_apps entries, not n_layers);
+  * every parameter/cache leaf carries logical sharding axes (param.py), so
+    dry-run in_shardings are derived, never hand-written.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..parallel.sharding import Rules, constrain
+from .blocks import (
+    init_mamba_block,
+    init_transformer_block,
+    mamba_block,
+    transformer_block,
+)
+from .config import ModelConfig
+from .layers import init_norm, mrope_angles, norm, rope_angles
+from .param import Builder, finalize
+from .ssm import init_ssm_cache
+from .attention import init_attn_cache
+
+__all__ = [
+    "init_lm", "forward", "lm_loss", "decode_step", "init_cache",
+    "default_positions", "hybrid_groups",
+]
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+class _StackedBuilder:
+    """Prepends a layer axis to every parameter (for lax.scan stacking)."""
+
+    def __init__(self, inner: Builder, n: int):
+        self._inner = inner
+        self._n = n
+
+    def param(self, shape, axes, **kw):
+        return self._inner.param((self._n,) + tuple(shape), ("layers",) + tuple(axes), **kw)
+
+
+def hybrid_groups(cfg: ModelConfig):
+    """[(start, end)] mamba-layer slices; a shared attn block precedes each."""
+    period = cfg.hybrid_period
+    return [(s, min(s + period, cfg.n_layers)) for s in range(0, cfg.n_layers, period)]
+
+
+def _plan(cfg: ModelConfig):
+    """[(stack_name, n_layers, kind)] where kind in dense|moe|mamba."""
+    if cfg.family in ("dense", "vlm", "audio"):
+        return [("blocks", cfg.n_layers, "dense")]
+    if cfg.family == "moe":
+        fd = cfg.moe.first_dense
+        plan = []
+        if fd:
+            plan.append(("first", fd, "dense"))
+        plan.append(("blocks", cfg.n_layers - fd, "moe"))
+        return plan
+    if cfg.family in ("ssm", "hybrid"):
+        return [("blocks", cfg.n_layers, "mamba")]
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# ---------------- init ----------------
+
+def init_lm(cfg: ModelConfig, key=None, abstract: bool = False):
+    """Returns (params, logical_axes) pytrees. ``abstract=True`` builds
+    ShapeDtypeStruct leaves — zero allocation (dry-run path)."""
+    b = Builder(key if key is not None else jax.random.PRNGKey(0),
+                abstract=abstract, dtype=_dtype(cfg.param_dtype))
+    tree: Dict[str, Any] = {}
+    if cfg.input_kind == "tokens":
+        tree["embed"] = b.param((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                                scale=cfg.d_model ** -0.5)
+    for name, n, kind in _plan(cfg):
+        sb = _StackedBuilder(b, n)
+        if kind == "mamba":
+            tree[name] = init_mamba_block(sb, cfg)
+        elif kind == "moe":
+            tree[name] = init_transformer_block(sb, cfg, ffn="moe")
+        else:
+            d_ff = cfg.moe.dense_d_ff if (cfg.family == "moe" and cfg.moe.dense_d_ff) else cfg.d_ff
+            tree[name] = init_transformer_block(sb, cfg, ffn="dense", d_ff=d_ff)
+    if cfg.family == "hybrid":
+        tree["shared"] = init_transformer_block(b, cfg, ffn="dense")
+    tree["final_norm"] = init_norm(b, cfg.d_model, cfg.norm_kind)
+    if not cfg.tie_embeddings:
+        tree["head"] = b.param((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return finalize(tree)
+
+
+# ---------------- shared helpers ----------------
+
+def default_positions(cfg: ModelConfig, batch: int, seq: int, offset=0):
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim == 1:
+        off = off[:, None]  # per-request offsets (continuous batching)
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + off
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope_kind == "mrope":
+        return jnp.broadcast_to(pos[:, :, None], (batch, seq, 3))  # text: t=h=w
+    return pos
+
+
+def _rope(cfg: ModelConfig, positions):
+    if cfg.attn is None and cfg.family != "hybrid":
+        return None, None
+    if cfg.attn == "mla":
+        rot = cfg.mla.qk_rope
+    else:
+        rot = int(cfg.head_dim * cfg.rope_pct)
+        rot -= rot % 2
+    if cfg.rope_kind == "none":
+        # degenerate angles = identity rotation
+        z = jnp.zeros(positions.shape[:2] + (rot // 2,), jnp.float32)
+        return jnp.cos(z), jnp.sin(z)
+    if cfg.rope_kind == "mrope":
+        return mrope_angles(positions, rot, cfg.rope_theta, cfg.mrope_sections)
+    return rope_angles(positions, rot, cfg.rope_theta)
+
+
+def _embed(cfg, params, batch, rules: Rules):
+    if cfg.input_kind == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    else:
+        x = batch["frames"]
+    x = x.astype(_dtype(cfg.compute_dtype))
+    # res_seq is None by default; set to "model" in the rules for
+    # Megatron-style sequence parallelism of the residual stream.
+    return constrain(x, rules, "batch", "res_seq", "act_embed")
+
+
+def _head(cfg, params, x, rules: Rules):
+    x = norm(params["final_norm"], x, cfg.norm_eps, cfg.norm_kind)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("btd,dv->btv", x, w.astype(x.dtype))
+    return constrain(logits, rules, "batch", "seq", "act_vocab")
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(f"unknown remat {remat!r}")
+
+
+# ---------------- forward (train / prefill) ----------------
+
+def forward(cfg: ModelConfig, params, batch, rules: Rules,
+            sort_impl: str = "xla", return_cache: bool = False,
+            remat: Optional[str] = None):
+    """Full-sequence forward. Returns (logits, aux_loss, cache|None)."""
+    remat = cfg.remat if remat is None else remat
+    x = _embed(cfg, params, batch, rules)
+    bsz, seq = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, bsz, seq)
+    cos, sin = _rope(cfg, positions)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: Dict[str, Any] = {}
+    seq_mask = batch.get("seq_mask")
+
+    if cfg.family == "hybrid":
+        x, caches, aux_total = _hybrid_forward(
+            cfg, params, x, cos, sin, rules, return_cache, remat, seq_mask)
+    else:
+        for name, n, kind in _plan(cfg):
+            stack = params[name]
+            if kind == "mamba":
+                def body(h, lp):
+                    h, c = mamba_block(cfg, lp, h, rules,
+                                       return_cache=return_cache, seq_mask=seq_mask)
+                    return h, (c, jnp.zeros((), jnp.float32))
+            else:
+                def body(h, lp):
+                    h, c, aux = transformer_block(
+                        cfg, lp, h, cos, sin, rules,
+                        return_cache=return_cache, sort_impl=sort_impl)
+                    return h, (c, aux)
+            x, (stack_cache, auxs) = lax.scan(_maybe_remat(body, remat), x, stack)
+            aux_total = aux_total + jnp.sum(auxs)
+            if return_cache:
+                caches[name] = stack_cache
+
+    logits = _head(cfg, params, x, rules)
+    return logits, aux_total, (caches if return_cache else None)
+
+
+def _hybrid_forward(cfg, params, x, cos, sin, rules, return_cache, remat,
+                    seq_mask=None):
+    """Zamba2: [shared attn block; period x mamba] groups, shared params."""
+    aux_total = jnp.zeros((), jnp.float32)
+    shared_caches = []
+    mamba_caches = []
+
+    def body(h, lp):
+        h, c = mamba_block(cfg, lp, h, rules,
+                           return_cache=return_cache, seq_mask=seq_mask)
+        return h, c
+
+    body = _maybe_remat(body, remat)
+    for start, end in hybrid_groups(cfg):
+        x, sc, _ = transformer_block(
+            cfg, params["shared"], x, cos, sin, rules, return_cache=return_cache)
+        grp = jax.tree.map(lambda a: a[start:end], params["blocks"])
+        x, gc = lax.scan(body, x, grp)
+        if return_cache:
+            shared_caches.append(sc)
+            mamba_caches.append(gc)
+
+    caches = {}
+    if return_cache:
+        caches["shared"] = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *shared_caches)
+        caches["blocks"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, 0), *mamba_caches)
+    return x, caches, aux_total
+
+
+# ---------------- loss ----------------
+
+def lm_loss(cfg: ModelConfig, params, batch, rules: Rules, sort_impl: str = "xla"):
+    """Mean next-token CE (labels < 0 masked) + MoE aux. Returns (loss, metrics)."""
+    logits, aux, _ = forward(cfg, params, batch, rules, sort_impl=sort_impl)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum((lse - ll) * mask) / denom
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------- decode ----------------
+
+def decode_step(cfg: ModelConfig, params, cache, tokens_or_frames, cur_index,
+                rules: Rules, sort_impl: str = "xla"):
+    """One-token decode against a cache. Returns (logits (B,1,V), new_cache)."""
+    if cfg.input_kind == "tokens":
+        batch = {"tokens": tokens_or_frames}
+    else:
+        batch = {"frames": tokens_or_frames}
+    x = _embed(cfg, params, batch, rules)
+    bsz = x.shape[0]
+    positions = default_positions(cfg, bsz, 1, offset=cur_index)
+    cos, sin = _rope(cfg, positions)
+
+    new_cache: Dict[str, Any] = {}
+    if cfg.family == "hybrid":
+        x, new_cache = _hybrid_decode(cfg, params, x, cos, sin, cache, cur_index, rules)
+    else:
+        for name, n, kind in _plan(cfg):
+            stack = params[name]
+            stack_cache = cache[name]
+            if kind == "mamba":
+                def body(h, inp):
+                    lp, lc = inp
+                    h, c = mamba_block(cfg, lp, h, rules, cache=lc)
+                    return h, c
+            else:
+                def body(h, inp):
+                    lp, lc = inp
+                    h, c, _ = transformer_block(
+                        cfg, lp, h, cos, sin, rules,
+                        cache=lc, cur_index=cur_index, sort_impl=sort_impl)
+                    return h, c
+            x, updated = lax.scan(body, x, (stack, stack_cache))
+            new_cache[name] = updated
+
+    logits = _head(cfg, params, x, rules)
+    return logits, new_cache
+
+
+def _hybrid_decode(cfg, params, x, cos, sin, cache, cur_index, rules):
+    shared_caches = []
+    mamba_caches = []
+
+    def body(h, inp):
+        lp, lc = inp
+        h, c = mamba_block(cfg, lp, h, rules, cache=lc)
+        return h, c
+
+    for gi, (start, end) in enumerate(hybrid_groups(cfg)):
+        sc_in = jax.tree.map(lambda a: a[gi], cache["shared"])
+        x, sc, _ = transformer_block(
+            cfg, params["shared"], x, cos, sin, rules,
+            cache=sc_in, cur_index=cur_index)
+        grp = jax.tree.map(lambda a: a[start:end], params["blocks"])
+        gc_in = jax.tree.map(lambda a: a[start:end], cache["blocks"])
+        x, gc = lax.scan(body, x, (grp, gc_in))
+        shared_caches.append(sc)
+        mamba_caches.append(gc)
+
+    new_cache = {
+        "shared": jax.tree.map(lambda *xs: jnp.stack(xs, 0), *shared_caches),
+        "blocks": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *mamba_caches),
+    }
+    return x, new_cache
+
+
+# ---------------- cache construction ----------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, abstract: bool = False):
+    """Decode-cache pytree + logical axes. ``seq`` is the context capacity.
+
+    SSM caches are O(1) in ``seq`` — that is the sub-quadratic story that
+    qualifies ssm/hybrid archs for the long_500k cell."""
+    dtype = _dtype(cfg.compute_dtype)
+
+    def build(shapes_axes):
+        tree, axes = {}, {}
+        for k, ((shape, dt), ax) in shapes_axes.items():
+            tree[k] = jax.ShapeDtypeStruct(shape, dt) if abstract else jnp.zeros(shape, dt)
+            axes[k] = ax
+        return tree, axes
+
+    def attn_entry(n_layers_stack):
+        spec = init_attn_cache(cfg, batch, seq, dtype)
+        if cfg.attn == "mla":
+            ax = {"ckv": ("layers", "cache_batch", "cache_seq", None),
+                  "kr": ("layers", "cache_batch", "cache_seq", None)}
+        else:
+            ax = {"k": ("layers", "cache_batch", "cache_seq", "cache_kv_heads", None),
+                  "v": ("layers", "cache_batch", "cache_seq", "cache_kv_heads", None)}
+        return {
+            k: (((n_layers_stack,) + shape, dt), ax[k])
+            for k, (shape, dt) in spec.items()
+        }
+
+    def ssm_entry(n_layers_stack):
+        spec = init_ssm_cache(cfg, batch, dtype)
+        ax = {"conv": ("layers", "cache_batch", None, "act_mlp"),
+              "ssm": ("layers", "cache_batch", "act_heads", None, None)}
+        return {
+            k: (((n_layers_stack,) + shape, dt), ax[k])
+            for k, (shape, dt) in spec.items()
+        }
+
+    cache: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    if cfg.family == "hybrid":
+        n_apps = len(hybrid_groups(cfg))
+        cache["shared"], axes["shared"] = build(attn_entry(n_apps))
+        cache["blocks"], axes["blocks"] = build(ssm_entry(cfg.n_layers))
+    elif cfg.family == "ssm":
+        cache["blocks"], axes["blocks"] = build(ssm_entry(cfg.n_layers))
+    else:
+        for name, n, kind in _plan(cfg):
+            cache[name], axes[name] = build(attn_entry(n))
+    return cache, axes

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts layer with *sort-based* token dispatch — the paper's
+bucketing technique in the forward pass.
+
+Routing is exactly the paper's problem: distribute elements (tokens) into
+sub-arrays (experts) and process every sub-array in parallel. The ``sort``
+implementation buckets by sorting the flat (token, expert) assignment list by
+expert id — the same bucket-then-parallel-process structure as the paper's
+phase 2+3 — then computes all experts batched. The ``einsum`` implementation
+is the GSPMD one-hot dispatch baseline the sort variant is benchmarked
+against (benchmarks/bench_moe_dispatch.py).
+
+``sort_impl`` selects the sorting engine: 'xla' (production, O(n log n)),
+'oets' (paper-faithful comparator network; used at test scale) or 'bitonic'.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.bitonic import bitonic_sort_kv
+from ..core.oets import oets_sort_kv
+from ..parallel.sharding import Rules, constrain
+from .config import ModelConfig
+from .layers import _ACTS, init_mlp, mlp
+from .param import Builder
+
+__all__ = ["init_moe", "moe", "capacity"]
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * n_tokens * m.top_k / m.n_experts)
+    return max(8, -(-c // 8) * 8)  # sublane-aligned
+
+
+def init_moe(b: Builder, cfg: ModelConfig):
+    m = cfg.moe
+    dm = cfg.d_model
+    w_in_cols = 2 * m.d_expert if cfg.mlp_gated else m.d_expert
+    p = {
+        "router": b.param((dm, m.n_experts), ("embed", "expert"), scale=dm ** -0.5),
+        "w_in": b.param((m.n_experts, dm, w_in_cols), ("expert", "embed", "expert_mlp")),
+        "w_out": b.param((m.n_experts, m.d_expert, dm), ("expert", "expert_mlp", "embed")),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(b, dm, m.n_shared * m.d_shared, cfg.mlp_gated)
+    return p
+
+
+def _route(cfg, p, xf):
+    """Router logits -> (top-k probs, top-k expert ids, aux load-balance loss)."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)
+    if m.router_renorm:
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # Switch-style load-balance aux: E * sum_e (token_frac_e * prob_mass_e)
+    t = xf.shape[0]
+    token_frac = jnp.zeros((m.n_experts,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * m.top_k)
+    prob_mass = jnp.mean(probs, axis=0)
+    aux = m.aux_alpha * m.n_experts * jnp.sum(token_frac * prob_mass)
+    return top_p, top_e, aux
+
+
+def _expert_ffn(cfg, p, buf):
+    """buf (E, C, d) -> (E, C, d), batched over experts."""
+    dt = buf.dtype
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"].astype(dt))
+    if cfg.mlp_gated:
+        u, g = jnp.split(h, 2, axis=-1)
+        h = u * _ACTS[cfg.mlp_act](g)
+    else:
+        h = _ACTS[cfg.mlp_act](h)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(dt))
+
+
+def _sort_assignments(flat_e, flat_payload, impl: str):
+    if impl == "xla":
+        order = jnp.argsort(flat_e, stable=True)
+        return flat_e[order], flat_payload[order]
+    if impl == "oets":
+        return oets_sort_kv(flat_e, flat_payload)
+    if impl == "bitonic":
+        return bitonic_sort_kv(flat_e, flat_payload)
+    raise ValueError(f"unknown sort impl {impl!r}")
+
+
+def _dispatch_sort(cfg, p, xf, rules, sort_impl):
+    """Paper-technique dispatch: bucket tokens by expert via a key-value sort."""
+    m = cfg.moe
+    t, dm = xf.shape
+    cap = capacity(cfg, t)
+    top_p, top_e, aux = _route(cfg, p, xf)
+
+    n = t * m.top_k
+    flat_e = top_e.reshape(n).astype(jnp.int32)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), m.top_k)
+    flat_p = top_p.reshape(n)
+
+    # bucket boundary bookkeeping (the paper's "sizes decided by the
+    # histogram"): sort assignments by expert, rank within bucket, drop
+    # overflow beyond capacity. One kv-sort of (expert_id -> assignment idx)
+    # yields the full bucketing permutation.
+    sorted_e, perm = _sort_assignments(flat_e, jnp.arange(n, dtype=jnp.int32), sort_impl)
+    sorted_t = flat_t[perm]
+    counts = jnp.bincount(flat_e, length=m.n_experts)
+    offsets = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n, dtype=jnp.int32) - offsets[sorted_e].astype(jnp.int32)
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, m.n_experts * cap)
+
+    buf = jnp.zeros((m.n_experts * cap + 1, dm), xf.dtype).at[slot].set(xf[sorted_t])
+    buf = buf[: m.n_experts * cap].reshape(m.n_experts, cap, dm)
+    buf = constrain(buf, rules, "act_expert", None, "act_embed")
+
+    out = _expert_ffn(cfg, p, buf)
+    out_flat = jnp.concatenate(
+        [out.reshape(m.n_experts * cap, dm), jnp.zeros((1, dm), out.dtype)], axis=0
+    )
+    contrib = out_flat[slot]  # (n, d); overflow slots read zeros
+
+    # gate weights follow the same bucketing permutation as the assignments
+    gates = flat_p[perm]
+    y = jnp.zeros((t, dm), xf.dtype).at[sorted_t].add(contrib * gates[:, None].astype(xf.dtype))
+    return y, aux
+
+
+def _dispatch_einsum(cfg, p, xf, rules):
+    """GSPMD-style one-hot dispatch baseline (no sort)."""
+    m = cfg.moe
+    t, dm = xf.shape
+    cap = capacity(cfg, t)
+    top_p, top_e, aux = _route(cfg, p, xf)
+
+    # position of each assignment within its expert bucket
+    onehot = jax.nn.one_hot(top_e, m.n_experts, dtype=jnp.int32)  # (t,k,E)
+    pos = jnp.cumsum(onehot.reshape(t * m.top_k, m.n_experts), axis=0).reshape(
+        t, m.top_k, m.n_experts
+    ) * onehot - 1
+    within_cap = (pos >= 0) & (pos < cap)
+    combine = (top_p[..., None] * within_cap).astype(jnp.float32)        # (t,k,E)
+    disp = jax.nn.one_hot(jnp.where(within_cap, pos, cap), cap + 1, dtype=xf.dtype)[
+        ..., :cap
+    ] * within_cap[..., None].astype(xf.dtype)                           # (t,k,E,C)
+
+    buf = jnp.einsum("td,tkec->ecd", xf, disp)
+    buf = constrain(buf, rules, "act_expert", None, "act_embed")
+    out = _expert_ffn(cfg, p, buf)
+    y = jnp.einsum("tkec,ecd->td", (combine[..., None] * disp).astype(xf.dtype), out)
+    return y, aux
+
+
+def moe(cfg: ModelConfig, p, x, rules: Rules, sort_impl: str = "xla"):
+    """x (B, T, d) -> (y (B, T, d), aux_loss scalar)."""
+    m = cfg.moe
+    b, t, dm = x.shape
+    xf = x.reshape(b * t, dm)
+    if m.impl == "sort":
+        y, aux = _dispatch_sort(cfg, p, xf, rules, sort_impl)
+    elif m.impl == "einsum":
+        y, aux = _dispatch_einsum(cfg, p, xf, rules)
+    else:
+        raise ValueError(f"unknown moe impl {m.impl!r}")
+    if m.n_shared:
+        y = y + mlp(p["shared"], xf, cfg.mlp_act, cfg.mlp_gated, rules)
+    return y.reshape(b, t, dm), aux

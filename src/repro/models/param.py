@@ -1,0 +1,91 @@
+"""Parameter construction with paired sharding metadata.
+
+Each leaf is created once with both its initializer *and* its logical axes,
+so the parameter pytree and the PartitionSpec pytree can never drift apart.
+``abstract=True`` builds ShapeDtypeStruct leaves — that is how the dry-run
+lowers a 405B-parameter train step without allocating a single byte.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PLeaf", "Builder", "finalize", "tree_specs"]
+
+
+@dataclasses.dataclass
+class PLeaf:
+    value: Any          # jax.Array (concrete) or ShapeDtypeStruct (abstract)
+    axes: Tuple         # logical axis names, len == ndim
+
+
+def _is_pleaf(x):
+    return isinstance(x, PLeaf)
+
+
+class Builder:
+    """Creates PLeaf parameters with deterministic per-leaf RNG."""
+
+    def __init__(self, key, abstract: bool = False, dtype=jnp.float32):
+        self._key = key
+        self.abstract = abstract
+        self.dtype = dtype
+        self._count = 0
+
+    def _next_key(self):
+        self._count += 1
+        return jax.random.fold_in(self._key, self._count)
+
+    def param(self, shape, axes, init: str = "normal", scale: float | None = None,
+              dtype=None) -> PLeaf:
+        if len(axes) != len(shape):
+            raise ValueError(f"axes {axes} do not match shape {shape}")
+        dtype = dtype or self.dtype
+        if self.abstract:
+            self._count += 1  # keep RNG stream aligned with concrete builds
+            return PLeaf(jax.ShapeDtypeStruct(tuple(shape), dtype), tuple(axes))
+        k = self._next_key()
+        if init == "normal":
+            if scale is None:
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                scale = fan_in ** -0.5
+            v = (scale * jax.random.normal(k, shape, jnp.float32)).astype(dtype)
+        elif init == "zeros":
+            v = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, dtype)
+        elif init == "ssm_a":  # mamba A_log: log of Uniform[1, 16]
+            v = jnp.log(
+                jax.random.uniform(k, shape, jnp.float32, minval=1.0, maxval=16.0)
+            ).astype(dtype)
+        else:
+            raise ValueError(f"unknown init {init!r}")
+        return PLeaf(v, tuple(axes))
+
+
+def finalize(tree):
+    """Split a PLeaf tree into (params, specs-as-logical-axes) trees."""
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=_is_pleaf)
+    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=_is_pleaf)
+    return params, axes
+
+
+def tree_specs(axes_tree, rules, mesh, value_tree=None):
+    """Logical-axes tree -> PartitionSpec tree for a concrete mesh.
+
+    With ``value_tree`` (arrays or ShapeDtypeStructs of matching structure)
+    the specs are divisibility-aware per leaf shape (required for jit
+    argument shardings)."""
+    is_axes = lambda x: isinstance(x, tuple)
+    if value_tree is None:
+        names = mesh.axis_names
+        return jax.tree.map(lambda a: rules.mesh_spec(a, names), axes_tree, is_leaf=is_axes)
+    sizes = dict(mesh.shape)
+    return jax.tree.map(
+        lambda a, v: rules.shape_spec(a, v.shape, sizes),
+        axes_tree, value_tree, is_leaf=is_axes,
+    )

@@ -1,0 +1,11 @@
+"""Optimizer substrate (no external deps): AdamW with sharded/abstract state,
+global-norm clipping, cosine schedule with warmup."""
+
+from .adamw import AdamWConfig, init_opt_state, adamw_update, opt_state_axes
+from .schedule import cosine_schedule
+from .clip import clip_by_global_norm, global_norm
+
+__all__ = [
+    "AdamWConfig", "init_opt_state", "adamw_update", "opt_state_axes",
+    "cosine_schedule", "clip_by_global_norm", "global_norm",
+]

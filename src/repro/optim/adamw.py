@@ -1,0 +1,75 @@
+"""AdamW with explicit pytree state.
+
+Moment dtype is configurable (``optim_dtype``): bf16 moments halve optimizer
+HBM — one of the distributed-memory tricks that lets the 405B config fit the
+v5e pod (see EXPERIMENTS.md §Dry-run memory table). Moments inherit each
+parameter's sharding (same logical axes), so FSDP shards optimizer state
+exactly like ZeRO-3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "opt_state_axes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def init_opt_state(params, moment_dtype=jnp.float32, abstract: bool = False):
+    def zeros_like(p):
+        if abstract or isinstance(p, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(p.shape, moment_dtype)
+        return jnp.zeros(p.shape, moment_dtype)
+
+    count = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+             else jnp.zeros((), jnp.int32))
+    return {
+        "m": jax.tree.map(zeros_like, params),
+        "v": jax.tree.map(zeros_like, params),
+        "count": count,
+    }
+
+
+def opt_state_axes(param_axes):
+    """Moments shard like their parameters; count is replicated."""
+    return {
+        "m": param_axes,
+        "v": param_axes,
+        "count": (),
+    }
+
+
+def adamw_update(grads, state, params, lr, cfg: AdamWConfig):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** c
+    bc2 = 1.0 - cfg.b2 ** c
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * cfg.b1 + g32 * (1.0 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + g32 * g32 * (1.0 - cfg.b2)
+        step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "count": count}

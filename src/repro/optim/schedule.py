@@ -1,0 +1,20 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule"]
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``min_frac * base_lr``."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

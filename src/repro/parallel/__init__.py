@@ -1,0 +1,6 @@
+"""Distribution substrate: logical-axis sharding rules, remat policies,
+gradient compression, ring collectives, pipeline parallelism."""
+
+from .sharding import Rules, DEFAULT_RULES, constrain, spec_for
+
+__all__ = ["Rules", "DEFAULT_RULES", "constrain", "spec_for"]

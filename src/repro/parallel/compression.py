@@ -1,0 +1,74 @@
+"""Gradient compression for cross-pod all-reduce: int8 quantization with
+error feedback.
+
+Cross-pod (DCN) bandwidth is the scarcest link in a multi-pod job; 4x
+compression of the gradient all-reduce is a standard distributed-optimization
+trick. Error feedback (Karimireddy et al. 2019) accumulates the quantization
+residual locally and adds it to the next step's gradient, so the *average*
+update stays unbiased and SGD converges at the uncompressed rate.
+
+``compressed_psum`` is built for shard_map bodies; the pure quantize /
+dequantize pair is property-tested in tests/test_parallel.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum", "ef_init", "ef_compress"]
+
+
+def quantize_int8(x):
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(tree):
+    return jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), tree)
+
+
+def ef_compress(grads, residual):
+    """Error-feedback compression of a gradient pytree.
+
+    Returns (compressed (q, scale) tree, new_residual). The transmitted value
+    is dequantize(q, scale); residual carries what was rounded away."""
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize_int8(corrected)
+        sent = dequantize_int8(q, s)
+        return (q, s), corrected - sent
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    new_res = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return comp, new_res
+
+
+def compressed_psum(x, axis_name, residual):
+    """int8-compressed all-reduce with error feedback (shard_map body use).
+
+    Quantizes locally, all-reduces the int32-widened payload (the wire format
+    a real deployment would ship), dequantizes with the max scale. Returns
+    (mean-reduced value, new residual)."""
+    corrected = x.astype(jnp.float32) + residual
+    # agree on one scale first (one fp32 pmax) so the int sum is exact
+    amax = jax.lax.pmax(jnp.max(jnp.abs(corrected)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    new_residual = corrected - q.astype(jnp.float32) * scale
+    # wire: int8 payload; reduce widened to int32 to avoid overflow
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.axis_size(axis_name)
+    mean = total.astype(jnp.float32) * scale / n
+    return mean, new_residual

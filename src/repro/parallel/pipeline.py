@@ -1,0 +1,65 @@
+"""Pipeline parallelism over a mesh axis via collective_permute.
+
+GPipe-style forward schedule: P stages live on P devices of the ``pipe``
+axis; microbatches stream through with activations hopping stage-to-stage by
+``lax.ppermute`` each tick. M microbatches finish in M + P - 1 ticks (bubble
+fraction (P-1)/(M+P-1)).
+
+In this framework PP is an *optional* plan: the production mesh uses the
+``pod`` axis for data parallelism by default, but the same axis can be
+repurposed as a 2-stage pipeline for models whose layers do not fit a pod
+(launch/mesh.py). The schedule below is the mechanism; stage_fn is any
+per-stage closure (e.g. half the layer stack).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["pipeline_forward"]
+
+
+def pipeline_forward(stage_fn, stage_params, x_all, axis_name: str):
+    """Run microbatches through P pipeline stages (inside shard_map).
+
+    stage_fn: (stage_params, x) -> y, same shape (stages must be
+    shape-preserving, as transformer stacks are).
+    stage_params: this device's stage parameters.
+    x_all: (M, ...) all microbatch inputs (meaningful on stage 0).
+    Returns (M, ...) outputs (meaningful on the last stage).
+    """
+    n = lax.axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    m = x_all.shape[0]
+    mb_shape = x_all.shape[1:]
+    perm = [(i, i + 1) for i in range(n - 1)]  # chain, not ring
+
+    buf = jnp.zeros(mb_shape, x_all.dtype)
+    outs = jnp.zeros_like(x_all)
+    # the loop carries become device-varying after the first ppermute; mark
+    # the zero-init values varying so the scan carry types match
+    if hasattr(lax, "pcast"):
+        buf = lax.pcast(buf, (axis_name,), to="varying")
+        outs = lax.pcast(outs, (axis_name,), to="varying")
+
+    def tick(t, carry):
+        buf, outs = carry
+        # stage 0 injects microbatch t
+        idx_in = jnp.clip(t, 0, m - 1)
+        x0 = lax.dynamic_index_in_dim(x_all, idx_in, 0, keepdims=False)
+        cur = jnp.where((me == 0) & (t < m), x0, buf)
+        y = stage_fn(stage_params, cur)
+        # last stage retires microbatch t - (n-1)
+        ridx = t - (n - 1)
+        safe = jnp.clip(ridx, 0, m - 1)
+        prev = lax.dynamic_index_in_dim(outs, safe, 0, keepdims=False)
+        rec = jnp.where((me == n - 1) & (ridx >= 0), y, prev)
+        outs = lax.dynamic_update_index_in_dim(outs, rec, safe, 0)
+        # activations hop to the next stage
+        buf = lax.ppermute(y, axis_name, perm)
+        return buf, outs
+
+    _, outs = lax.fori_loop(0, m + n - 1, tick, (buf, outs))
+    return outs

@@ -1,0 +1,71 @@
+"""Ring collectives built from lax.ppermute — the explicit-schedule variant
+of psum used when the compiler's default all-reduce must be overlapped
+manually (e.g. interleaving gradient reduction with the backward pass).
+
+reduce-scatter (P-1 steps) + all-gather (P-1 steps) over the ICI ring: each
+step moves 1/P of the buffer, so link utilization is flat (no incast), which
+is exactly why rings are the default at pod scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["ring_all_reduce", "ring_all_gather"]
+
+
+def _ring_perm(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def ring_all_reduce(x, axis_name: str):
+    """Sum x across ``axis_name`` with an explicit reduce-scatter + all-gather
+    ring. x's leading dim must be divisible by the axis size."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    me = lax.axis_index(axis_name)
+    if x.size % n:
+        raise ValueError(f"buffer size {x.size} not divisible by ring size {n}")
+    chunks = x.reshape(n, -1)
+
+    # reduce-scatter: after P-1 steps, chunk (me+1) % n holds the full sum
+    def rs_step(i, chunks):
+        # chunk index this rank accumulates into at step i
+        idx = (me - i + n) % n
+        send = jnp.take(chunks, ((me - i + 1) + n) % n, axis=0)
+        recv = lax.ppermute(send, axis_name, _ring_perm(n))
+        return chunks.at[idx].add(recv)
+
+    chunks = lax.fori_loop(1, n, lambda i, c: rs_step(i, c), chunks)
+
+    # all-gather: circulate the completed chunks (rank r finished (r+1)%n)
+    def ag_step(i, chunks):
+        idx_send = (me + 2 - i + n) % n
+        send = jnp.take(chunks, idx_send, axis=0)
+        recv = lax.ppermute(send, axis_name, _ring_perm(n))
+        idx_recv = (me + 1 - i + n) % n
+        return chunks.at[idx_recv].set(recv)
+
+    chunks = lax.fori_loop(1, n, lambda i, c: ag_step(i, c), chunks)
+    return chunks.reshape(x.shape)
+
+
+def ring_all_gather(x, axis_name: str):
+    """Concatenate x blocks from every rank along a new leading axis."""
+    n = lax.axis_size(axis_name)
+    out = jnp.zeros((n,) + x.shape, x.dtype)
+    me = lax.axis_index(axis_name)
+    out = lax.dynamic_update_slice(out, x[None], (me,) + (0,) * x.ndim)
+
+    def step(i, state):
+        out, buf = state
+        buf = lax.ppermute(buf, axis_name, _ring_perm(n))
+        src = (me - i + n) % n
+        out = lax.dynamic_update_slice(out, buf[None], (src,) + (0,) * x.ndim)
+        return out, buf
+
+    out, _ = lax.fori_loop(1, n, step, (out, x))
+    return out

@@ -1,0 +1,153 @@
+"""Logical-axis sharding rules (the framework's parallelism plan).
+
+Every parameter/activation dimension is annotated with a *logical* axis name;
+a ``Rules`` table maps logical names to mesh axes. Changing the parallelism
+strategy (pure DP, FSDP x TP, EP, sequence-sharded KV cache...) is a table
+edit, not a model edit — this is what makes the perf hillclimb in
+EXPERIMENTS.md §Perf a config sweep.
+
+Conventions:
+  params:      embed/heads/kv_heads/mlp/vocab/expert/... dimensions
+  activations: batch/seq/act_embed/act_heads/...
+  caches:      cache_batch/cache_seq/kv_heads
+
+GSPMD handles non-divisible dimension/axis pairs by padding, so rules may map
+e.g. 8 KV heads onto a 16-way ``model`` axis; where that wastes memory the
+per-arch config overrides the rule (see configs/).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["Rules", "DEFAULT_RULES", "constrain", "spec_for"]
+
+
+# FSDP (params sharded over `data`) x TP (`model`) x DP over pods — the
+# baseline plan for all dry-run cells.
+DEFAULT_RULES: Mapping[str, object] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "res_seq": None,          # residual-region sequence axis: set to "model"
+                              # for Megatron-style sequence parallelism (SP)
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_expert": "model",
+    "act_vocab": "model",
+    # parameters
+    "layers": None,
+    "embed": "data",          # FSDP: gather per layer inside the scan
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",        # expert parallelism
+    "expert_mlp": None,
+    "q_lora": None,
+    "kv_lora": None,
+    "state": None,
+    "conv": None,
+    # kv / ssm caches
+    "cache_batch": ("data",),
+    "cache_seq": None,
+    "cache_kv_heads": "model",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Immutable logical->mesh mapping with helpers."""
+
+    table: Mapping[str, object] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES)
+    )
+
+    def override(self, **kw) -> "Rules":
+        t = dict(self.table)
+        t.update(kw)
+        return Rules(t)
+
+    def spec(self, axes) -> P:
+        """PartitionSpec for a tuple of logical axis names (None = replicated)."""
+        entries = []
+        for a in axes:
+            if a is None:
+                entries.append(None)
+            else:
+                entries.append(self.table.get(a))
+        return P(*entries)
+
+    def mesh_spec(self, axes, mesh_axis_names) -> P:
+        """Like :meth:`spec` but drops mesh axes absent from the active mesh
+        (so the same rules work on 1-device test meshes and 512-chip pods)."""
+        entries = []
+        for a in axes:
+            m = None if a is None else self.table.get(a)
+            if m is None:
+                entries.append(None)
+            elif isinstance(m, (tuple, list)):
+                kept = tuple(x for x in m if x in mesh_axis_names)
+                entries.append(kept if kept else None)
+            else:
+                entries.append(m if m in mesh_axis_names else None)
+        return P(*entries)
+
+    def shape_spec(self, axes, shape, mesh_axis_sizes) -> P:
+        """Divisibility-aware spec: for each dim keep the longest prefix of
+        mapped mesh axes whose size product divides the dim (jit argument
+        shardings must divide exactly — e.g. 8 KV heads cannot shard over a
+        16-way ``model`` axis and fall back to replication). A mesh axis is
+        used at most once per spec (first logical axis wins), so rule
+        overrides like sequence parallelism cannot produce invalid specs."""
+        entries = []
+        used: set = set()
+        for a, dim in zip(axes, shape):
+            m = None if a is None else self.table.get(a)
+            if m is None:
+                entries.append(None)
+                continue
+            cand = (m,) if isinstance(m, str) else tuple(m)
+            cand = [x for x in cand if x in mesh_axis_sizes and x not in used]
+            kept, prod = [], 1
+            for x in cand:
+                if dim % (prod * mesh_axis_sizes[x]) == 0:
+                    kept.append(x)
+                    prod *= mesh_axis_sizes[x]
+                else:
+                    break
+            used.update(kept)
+            if not kept:
+                entries.append(None)
+            elif len(kept) == 1:
+                entries.append(kept[0])
+            else:
+                entries.append(tuple(kept))
+        return P(*entries)
+
+
+def spec_for(rules: Rules, axes, mesh=None) -> P:
+    names = mesh.axis_names if mesh is not None else None
+    if names is None:
+        am = jax.sharding.get_abstract_mesh()
+        names = () if am.empty else am.axis_names
+    return rules.mesh_spec(axes, names)
+
+
+def constrain(x, rules: Rules, *axes):
+    """``with_sharding_constraint`` against the ambient mesh; no-op when no
+    mesh is active (CPU unit tests) or no referenced axis exists.
+    Divisibility-aware, so partially-shardable dims degrade to replication."""
+    am = jax.sharding.get_abstract_mesh()
+    if am.empty:
+        return x
+    sizes = dict(am.shape)
+    spec = rules.shape_spec(axes, x.shape, sizes)
+    if all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

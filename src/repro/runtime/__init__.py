@@ -1,0 +1,7 @@
+"""Cluster runtime concerns, testable on one host: elastic failure recovery,
+straggler detection, and simulated failure injection."""
+
+from .failure import DeviceFailure, ElasticSupervisor, FailureInjector
+from .straggler import StragglerMonitor
+
+__all__ = ["DeviceFailure", "ElasticSupervisor", "FailureInjector", "StragglerMonitor"]

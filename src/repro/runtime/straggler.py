@@ -1,0 +1,55 @@
+"""Straggler mitigation: per-step timing monitor with EWMA baseline and
+z-score outlier flagging, plus a hook for backup-work dispatch.
+
+At pod scale a straggling host shows up as a slow collective; the monitor
+runs on the coordinator and flags steps whose duration deviates from the
+EWMA by ``threshold`` sigma. The ``on_straggler`` hook is where a deployment
+triggers its mitigation (reshard, evict, or dispatch a backup replica —
+what MapReduce called speculative execution)."""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+__all__ = ["StragglerMonitor"]
+
+
+class StragglerMonitor:
+    def __init__(self, alpha: float = 0.1, threshold: float = 3.0,
+                 warmup: int = 5, min_ratio: float = 1.5,
+                 on_straggler: Optional[Callable] = None):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        # relative floor: jitter within min_ratio x mean is never a straggler,
+        # even when the variance estimate has collapsed on a very steady run
+        self.min_ratio = min_ratio
+        self.on_straggler = on_straggler
+        self.mean = 0.0
+        self.var = 0.0
+        self.count = 0
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, duration: float) -> bool:
+        """Returns True if this step is flagged as a straggler."""
+        self.count += 1
+        if self.count <= self.warmup:
+            # warmup: estimate baseline
+            d = duration - self.mean
+            self.mean += d / self.count
+            self.var += d * (duration - self.mean)
+            return False
+        std = math.sqrt(max(self.var / max(self.count - 1, 1), 1e-12))
+        z = (duration - self.mean) / std
+        is_straggler = z > self.threshold and duration > self.mean * self.min_ratio
+        if is_straggler:
+            self.flagged.append((step, duration))
+            if self.on_straggler:
+                self.on_straggler(step, duration, z)
+        else:
+            # update EWMA baseline with healthy steps only
+            d = duration - self.mean
+            self.mean += self.alpha * d
+            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return is_straggler

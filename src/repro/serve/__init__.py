@@ -1,0 +1,7 @@
+"""Serving engine: jit'd prefill/decode, KV/SSM cache management, and the
+paper's length-bucketed admission scheduler."""
+
+from .engine import Engine, GenerationResult
+from .scheduler import BucketedScheduler, Request
+
+__all__ = ["Engine", "GenerationResult", "BucketedScheduler", "Request"]

@@ -1,0 +1,120 @@
+"""Batched generation engine.
+
+Requests are right-padded to their bucket bound; every request tracks its own
+``cur_index`` so a batch decodes continuously even with heterogeneous prompt
+lengths (per-row cache writes + per-row attention masks — see
+models/attention.py ``_cache_write``/``_decode_mask``). SSM archs mask dt at
+padded prefill positions so states stop exactly at each prompt's end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.model import decode_step, forward, init_cache
+from ..parallel.sharding import Rules
+
+__all__ = ["Engine", "GenerationResult"]
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    request_id: object
+    tokens: List[int]
+
+
+def _pad_cache_to(cache, axes, target_seq: int):
+    """Grow every 'cache_seq' dimension to the decode capacity."""
+
+    def pad(leaf, ax):
+        if "cache_seq" not in ax:
+            return leaf
+        dim = ax.index("cache_seq")  # axes tuples include the stacked 'layers' dim
+        pad_widths = [(0, 0)] * leaf.ndim
+        pad_widths[dim] = (0, target_seq - leaf.shape[dim])
+        return jnp.pad(leaf, pad_widths)
+
+    return jax.tree.map(
+        pad, cache, axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+class Engine:
+    """Prefill + synchronized continuous decode for one model."""
+
+    def __init__(self, cfg: ModelConfig, params, rules: Optional[Rules] = None,
+                 max_seq: int = 256, eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.rules = rules or Rules()
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+
+        @jax.jit
+        def _prefill(params, tokens, seq_mask):
+            logits, _, cache = forward(
+                cfg, params, {"tokens": tokens, "seq_mask": seq_mask},
+                self.rules, return_cache=True,
+            )
+            return logits, cache
+
+        @jax.jit
+        def _decode(params, cache, tok, cur):
+            logits, cache = decode_step(cfg, params, cache, tok, cur, self.rules)
+            return logits[:, 0], cache
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    def generate(self, prompts: List[List[int]], max_new: int = 16,
+                 greedy: bool = True, seed: int = 0) -> List[List[int]]:
+        """Generate for a batch of variable-length prompts (one bucket)."""
+        cfg = self.cfg
+        bsz = len(prompts)
+        lens = np.array([len(p) for p in prompts], np.int32)
+        bound = int(lens.max())
+        toks = np.zeros((bsz, bound), np.int32)
+        mask = np.zeros((bsz, bound), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, : len(p)] = p
+            mask[i, : len(p)] = 1
+
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), jnp.asarray(mask))
+        cache_axes = init_cache(cfg, bsz, bound, abstract=True)[1]
+        cache = _pad_cache_to(cache, cache_axes, self.max_seq)
+
+        # next token comes from each prompt's *last real* logits row
+        last = jnp.asarray(lens - 1)
+        cur_logits = jnp.take_along_axis(
+            logits, last[:, None, None].astype(jnp.int32), axis=1
+        )[:, 0]
+
+        out = [[] for _ in range(bsz)]
+        cur = jnp.asarray(lens)  # position to write the next token
+        key = jax.random.PRNGKey(seed)
+        done = np.zeros((bsz,), bool)
+        for step in range(max_new):
+            if greedy:
+                nxt = jnp.argmax(cur_logits, axis=-1).astype(jnp.int32)
+            else:
+                key, sk = jax.random.split(key)
+                nxt = jax.random.categorical(sk, cur_logits).astype(jnp.int32)
+            nxt_np = np.asarray(nxt)
+            for i in range(bsz):
+                if not done[i]:
+                    out[i].append(int(nxt_np[i]))
+                    if self.eos_id is not None and nxt_np[i] == self.eos_id:
+                        done[i] = True
+            if done.all() or step == max_new - 1:
+                break
+            cur_logits, cache = self._decode(self.params, cache, nxt[:, None], cur)
+            cur = cur + 1
+        return out

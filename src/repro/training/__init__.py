@@ -1,0 +1,6 @@
+"""Training step construction: loss -> grads -> clip -> AdamW, with
+microbatch gradient accumulation."""
+
+from .steps import Hyper, make_train_step, make_eval_step
+
+__all__ = ["Hyper", "make_train_step", "make_eval_step"]

@@ -1,0 +1,85 @@
+"""jit-able train/eval steps.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+suitable for jax.jit with donated params/opt_state. Microbatch gradient
+accumulation (``Hyper.accum``) runs as a lax.scan over batch slices so the
+HLO stays O(1) in the accumulation factor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.model import lm_loss
+from ..optim import AdamWConfig, adamw_update, clip_by_global_norm, cosine_schedule
+from ..parallel.sharding import Rules
+
+__all__ = ["Hyper", "make_train_step", "make_eval_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hyper:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    clip_norm: float = 1.0
+    accum: int = 1              # microbatch gradient accumulation factor
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    sort_impl: str = "xla"
+
+
+def _split_microbatches(batch, accum: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % accum == 0, f"batch {b} not divisible by accum {accum}"
+        return x.reshape((accum, b // accum) + x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, rules: Rules, hyper: Hyper):
+    schedule = cosine_schedule(hyper.lr, hyper.warmup, hyper.total_steps)
+
+    def loss_fn(params, mb):
+        return lm_loss(cfg, params, mb, rules, sort_impl=hyper.sort_impl)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        if hyper.accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_microbatches(batch, hyper.accum)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, l_sum), _ = jax.lax.scan(acc_body, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / hyper.accum, g_sum)
+            loss = l_sum / hyper.accum
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        grads, gnorm = clip_by_global_norm(grads, hyper.clip_norm)
+        lr = schedule(step)
+        params, opt_state = adamw_update(grads, opt_state, params, lr, hyper.adamw)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, rules: Rules, sort_impl: str = "xla"):
+    def eval_step(params, batch):
+        loss, metrics = lm_loss(cfg, params, batch, rules, sort_impl=sort_impl)
+        return dict(metrics, loss=loss)
+
+    return eval_step

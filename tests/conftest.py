@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on 1 CPU device (the dry-run alone sees 512 placeholder devices).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,86 @@
+"""int8 + error-feedback gradient compression in a REAL data-parallel
+training loop (8 devices): compressed-psum training must converge like
+uncompressed-psum training. This closes the loop on EXPERIMENTS §Perf
+iter 4, which models the collective-byte savings — here we show the
+optimizer quality is preserved."""
+
+import os
+import subprocess
+import sys
+
+_COMPRESS_TRAIN = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, AxisType
+from jax import lax
+from repro.parallel.compression import compressed_psum
+
+mesh = jax.make_mesh((8,), ("dp",), axis_types=(AxisType.Auto,))
+rng = np.random.default_rng(0)
+
+D, H, STEPS, B_LOC = 16, 32, 200, 8
+w_true = (rng.normal(size=(D,)) * 0.3).astype(np.float32)
+X = rng.normal(size=(STEPS, 8, B_LOC, D)).astype(np.float32)
+Y = (X @ w_true + 0.01 * rng.normal(size=(STEPS, 8, B_LOC))).astype(np.float32)
+
+p0 = {
+    "w1": jnp.asarray(rng.normal(size=(D, H)).astype(np.float32) * 0.3),
+    "w2": jnp.asarray(rng.normal(size=(H, 1)).astype(np.float32) * 0.3),
+}
+
+def predict(p, x):
+    return (jnp.tanh(x @ p["w1"]) @ p["w2"])[..., 0]
+
+def local_loss(p, x, y):
+    return jnp.mean((predict(p, x) - y) ** 2)
+
+def make_train(compressed):
+    def train(p, xs, ys):  # shard_map body; xs (STEPS, B_LOC, D) local
+        res = jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), p)
+
+        def body(carry, xy):
+            p, res = carry
+            x, y = xy
+            loss, g = jax.value_and_grad(local_loss)(p, x, y)
+            if compressed:
+                flat_g, td = jax.tree.flatten(g)
+                flat_r = td.flatten_up_to(res)
+                outs = [compressed_psum(gi, "dp", ri) for gi, ri in zip(flat_g, flat_r)]
+                g = jax.tree.unflatten(td, [o[0] for o in outs])
+                res = jax.tree.unflatten(td, [o[1] for o in outs])
+            else:
+                g = jax.tree.map(lambda gi: lax.pmean(gi, "dp"), g)
+            p = jax.tree.map(lambda pi, gi: pi - 0.02 * gi, p, g)
+            gl = lax.pmean(loss, "dp")
+            return (p, res), gl
+
+        (p, _), losses = lax.scan(body, (p, res), (xs, ys))
+        return p, losses
+
+    return jax.jit(jax.shard_map(
+        make := train, mesh=mesh,
+        in_specs=(P(), P(None, "dp"), P(None, "dp")),
+        out_specs=(P(), P()),
+    ))
+
+xs = jnp.asarray(X.reshape(STEPS, 8 * B_LOC, D))
+ys = jnp.asarray(Y.reshape(STEPS, 8 * B_LOC))
+
+_, losses_ref = make_train(False)(p0, xs, ys)
+_, losses_cmp = make_train(True)(p0, xs, ys)
+l0, lr_, lc = float(losses_ref[0]), float(losses_ref[-1]), float(losses_cmp[-1])
+assert lr_ < l0 / 5, (l0, lr_)
+assert lc < l0 / 5, (l0, lc)            # compressed training converges too
+assert lc < lr_ * 3 + 1e-3, (lr_, lc)   # and lands near the uncompressed loss
+print("COMPRESS_TRAIN_OK", l0, lr_, lc)
+"""
+
+
+def test_compressed_gradient_training_converges():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", _COMPRESS_TRAIN],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "COMPRESS_TRAIN_OK" in out.stdout

@@ -1,0 +1,125 @@
+"""Properties of the core sort library (the paper's contribution)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    bitonic_merge,
+    bitonic_sort,
+    bitonic_sort_kv,
+    bucketed_sort_words,
+    bucketize_words,
+    lex_gt,
+    oets_argsort,
+    oets_sort,
+    oets_sort_kv,
+    pack_words,
+    sort_buckets,
+    unpack_words,
+)
+
+ints = st.lists(st.integers(-(2**31), 2**31 - 1), min_size=0, max_size=64)
+words = st.lists(st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126),
+                         min_size=0, max_size=20), min_size=0, max_size=60)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ints)
+def test_oets_sorts_any_ints(xs):
+    x = jnp.asarray(np.array(xs, np.int64).astype(np.int32))
+    out = np.asarray(oets_sort(x))
+    assert (out == np.sort(np.asarray(x))).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(ints)
+def test_bitonic_sorts_any_ints(xs):
+    x = jnp.asarray(np.array(xs, np.int64).astype(np.int32))
+    out = np.asarray(bitonic_sort(x))
+    assert (out == np.sort(np.asarray(x))).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(ints)
+def test_oets_kv_is_permutation(xs):
+    x = jnp.asarray(np.array(xs, np.int64).astype(np.int32))
+    vals = jnp.arange(x.shape[0], dtype=jnp.int32)
+    sk, sv = oets_sort_kv(x, vals)
+    # values are a permutation and gather the sorted keys
+    assert sorted(np.asarray(sv).tolist()) == list(range(x.shape[0]))
+    assert (np.asarray(x)[np.asarray(sv)] == np.asarray(sk)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(words)
+def test_packing_roundtrip_and_order(ws):
+    ws = [w.encode()[:20].decode(errors="ignore").replace("\x00", "") for w in ws]
+    keys = pack_words(ws)
+    assert unpack_words(keys) == ws
+    if len(ws) >= 2:
+        perm = np.asarray(oets_argsort(jnp.asarray(keys)))
+        got = [ws[i] for i in perm]
+        assert [w.encode() for w in got] == sorted(w.encode() for w in ws)
+
+
+@settings(max_examples=20, deadline=None)
+@given(words)
+def test_bucketed_sort_is_shortlex(ws):
+    ws = [w for w in ws if w]
+    got = bucketed_sort_words(ws, algorithm="oets")
+    assert [w.encode() for w in got] == sorted(
+        (w.encode() for w in ws), key=lambda b: (len(b), b))
+
+
+def test_multilane_lex_order():
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.integers(0, 2**32, (64, 3), dtype=np.uint32))
+    out = np.asarray(oets_sort(k))
+    order = sorted(range(64), key=lambda i: tuple(np.asarray(k)[i]))
+    assert (out == np.asarray(k)[order]).all()
+    out2 = np.asarray(bitonic_sort(k))
+    assert (out2 == out).all()
+
+
+def test_bitonic_merge_matches_sorted_concat():
+    rng = np.random.default_rng(1)
+    a = jnp.sort(jnp.asarray(rng.integers(0, 100, 64).astype(np.int32)))
+    b = jnp.sort(jnp.asarray(rng.integers(0, 100, 64).astype(np.int32)))
+    m = bitonic_merge(a, b)
+    assert (np.asarray(m) == np.sort(np.concatenate([a, b]))).all()
+
+
+def test_bitonic_kv_carries_payload():
+    rng = np.random.default_rng(2)
+    k = jnp.asarray(rng.integers(0, 40, 50).astype(np.int32))
+    v = jnp.arange(50, dtype=jnp.int32)
+    sk, sv = bitonic_sort_kv(k, v)
+    assert (np.asarray(k)[np.asarray(sv)] == np.asarray(sk)).all()
+
+
+def test_bucket_structure_matches_histogram():
+    ws = ["a", "bb", "cc", "ddd", "x", "yy", "zzz", "q"]
+    b = bucketize_words(ws)
+    assert b.lengths.tolist() == [1, 2, 3]
+    assert b.counts.tolist() == [3, 3, 2]
+    sorted_keys = sort_buckets(jnp.asarray(b.keys), "oets")
+    flat = []
+    for i in range(sorted_keys.shape[0]):
+        flat.extend(unpack_words(np.asarray(sorted_keys)[i, : b.counts[i]]))
+    assert flat == sorted(ws, key=lambda w: (len(w), w))
+
+
+def test_truncated_network_is_partial_sort():
+    # fewer phases => possibly unsorted; n phases => always sorted
+    x = jnp.asarray(np.arange(63, -1, -1, dtype=np.int32))  # worst case
+    full = oets_sort(x)
+    assert (np.asarray(full) == np.arange(64)).all()
+
+
+def test_lex_gt_scalar_and_lanes():
+    a = jnp.asarray(np.array([[1, 2], [3, 1]], np.uint32))
+    b = jnp.asarray(np.array([[1, 3], [2, 9]], np.uint32))
+    assert np.asarray(lex_gt(a, b)).tolist() == [False, True]
+    assert bool(lex_gt(jnp.int32(5), jnp.int32(3)))

@@ -1,0 +1,197 @@
+"""Model zoo: per-arch smoke tests (reduced configs, CPU), decode/forward
+equivalence, and oracle checks for the nontrivial numerics (SSD chunking,
+MLA absorption, MoE dispatch)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, cells_for
+from repro.models import decode_step, forward, init_cache, init_lm, lm_loss
+from repro.models.config import SSMCfg
+from repro.models.moe import moe, init_moe, capacity
+from repro.models.param import Builder, finalize
+from repro.models.ssm import ssd_reference, _ssd_chunked
+from repro.parallel.sharding import Rules
+
+RULES = Rules()
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _batch(cfg, key=KEY, b=B, s=S):
+    if cfg.input_kind == "tokens":
+        return {
+            "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        }
+    return {
+        "frames": jax.random.normal(key, (b, s, cfg.d_model)),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_loss(arch):
+    """Mandated per-arch smoke: reduced config, one forward + loss,
+    output shapes + no NaNs."""
+    cfg = get_smoke_config(arch)
+    params, _ = init_lm(cfg, KEY)
+    batch = _batch(cfg)
+    logits, aux, _ = forward(cfg, params, batch, RULES)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    loss, metrics = lm_loss(cfg, params, batch, RULES)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode_matches_forward(arch):
+    """Step-by-step decode == teacher-forced forward (caches, absorption,
+    recurrences all consistent). MoE capacity raised so no tokens drop."""
+    cfg = get_smoke_config(arch)
+    if cfg.moe:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params, _ = init_lm(cfg, KEY)
+    batch = _batch(cfg)
+    inp = batch.get("tokens", batch.get("frames"))
+    ref, _, _ = forward(cfg, params, {k: v for k, v in batch.items() if k != "labels"}, RULES)
+    cache, _ = init_cache(cfg, B, S)
+    step = jax.jit(lambda p, c, tok, t: decode_step(cfg, p, c, tok, t, RULES))
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, cache, inp[:, t : t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(jnp.stack(outs, 1) - ref)))
+    assert err < 2e-3, err
+
+
+def test_full_configs_have_exact_dims():
+    """The published dimensions, verbatim."""
+    c = get_config("llama3-405b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == \
+        (126, 16384, 128, 8, 53248, 128256)
+    c = get_config("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.moe.n_experts, c.moe.top_k) == \
+        (60, 5120, 128, 160, 6)
+    assert c.mla.kv_lora == 512
+    c = get_config("nemotron-4-340b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == (96, 18432, 73728, 256000)
+    assert c.mlp_act == "relu2"
+    c = get_config("mamba2-370m")
+    assert c.ssm.d_state == 128 and c.attn is None
+    c = get_config("zamba2-1.2b")
+    assert c.hybrid_period == 6 and c.ssm.d_state == 64
+    c = get_config("granite-moe-1b-a400m")
+    assert c.moe.n_experts == 32 and c.moe.top_k == 8 and c.vocab_size == 49155
+    c = get_config("glm4-9b")
+    assert c.n_kv_heads == 2 and c.rope_pct == 0.5
+    c = get_config("qwen2-vl-2b")
+    assert c.rope_kind == "mrope" and c.vocab_size == 151936
+    c = get_config("musicgen-large")
+    assert c.vocab_size == 2048 and c.input_kind == "frames"
+    c = get_config("minicpm3-4b")
+    assert c.mla is not None and c.vocab_size == 73448
+
+
+def test_long_500k_eligibility():
+    names = {get_config(a).name: [c.name for c in cells_for(get_config(a))]
+             for a in ARCH_IDS}
+    assert "long_500k" in names["mamba2-370m"]
+    assert "long_500k" in names["zamba2-1.2b"]
+    for a in ("llama3-405b", "glm4-9b", "nemotron-4-340b", "musicgen-large"):
+        assert "long_500k" not in names[a]
+
+
+def test_ssd_chunked_matches_recurrence():
+    """Mamba2 chunked training path == naive O(T) recurrence oracle."""
+    rng = np.random.default_rng(0)
+    b, t, h, p, n, chunk = 2, 32, 4, 8, 16, 8
+    x = jnp.asarray(rng.normal(size=(b, t, h, p)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, t, h))).astype(np.float32) * 0.1)
+    A = jnp.asarray(-np.abs(rng.normal(size=(h,))).astype(np.float32))
+    B_ = jnp.asarray(rng.normal(size=(b, t, 1, n)).astype(np.float32))
+    C_ = jnp.asarray(rng.normal(size=(b, t, 1, n)).astype(np.float32))
+    y_chunk, s_chunk = _ssd_chunked(x, dt, A, B_, C_, chunk)
+    y_ref, s_ref = ssd_reference(x, dt, A, B_, C_)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_chunk), np.asarray(s_ref), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_sort_vs_einsum_dispatch():
+    """The paper-technique dispatch and the one-hot baseline agree."""
+    cfg = get_smoke_config("granite-moe-1b-a400m")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    b = Builder(KEY, dtype=jnp.float32)
+    p, _ = finalize(init_moe(b, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y_sort, aux_s = moe(cfg.replace(moe=dataclasses.replace(cfg.moe, impl="sort")),
+                        p, x, RULES)
+    y_ein, aux_e = moe(cfg.replace(moe=dataclasses.replace(cfg.moe, impl="einsum")),
+                       p, x, RULES)
+    np.testing.assert_allclose(np.asarray(y_sort), np.asarray(y_ein), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(float(aux_s), float(aux_e), rtol=1e-5)
+
+
+def test_moe_sort_impls_agree():
+    """XLA argsort vs our OETS/bitonic comparator networks inside dispatch."""
+    cfg = get_smoke_config("granite-moe-1b-a400m")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    b = Builder(KEY, dtype=jnp.float32)
+    p, _ = finalize(init_moe(b, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 12, cfg.d_model))
+    ys = [moe(cfg, p, x, RULES, sort_impl=s)[0] for s in ("xla", "oets", "bitonic")]
+    np.testing.assert_allclose(np.asarray(ys[0]), np.asarray(ys[1]), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ys[0]), np.asarray(ys[2]), rtol=2e-4, atol=2e-5)
+
+
+def test_moe_conservation_without_drops():
+    """With huge capacity, every token gets exactly its top-k experts:
+    renormalized gates sum to 1 so the combine is a convex mixture."""
+    cfg = get_smoke_config("granite-moe-1b-a400m")
+    cfg = cfg.replace(moe=dataclasses.replace(
+        cfg.moe, capacity_factor=16.0, router_renorm=True))
+    assert capacity(cfg, 16) >= 16 * cfg.moe.top_k // cfg.moe.n_experts
+    b = Builder(KEY, dtype=jnp.float32)
+    p, _ = finalize(init_moe(b, cfg))
+    # identical tokens => identical routing => identical outputs
+    x = jnp.tile(jax.random.normal(jax.random.PRNGKey(3), (1, 1, cfg.d_model)), (1, 8, 1))
+    y, _ = moe(cfg, p, x, RULES)
+    np.testing.assert_allclose(np.asarray(y[0, 0]), np.asarray(y[0, 5]), rtol=1e-4, atol=1e-5)
+
+
+def test_mla_cache_is_compressed():
+    cfg = get_smoke_config("deepseek-v2-236b")
+    cache, axes = init_cache(cfg, batch=2, seq=32)
+    # MLA cache stores the latent + shared rope key, NOT per-head k/v
+    leaf_names = set(cache["blocks"].keys())
+    assert leaf_names == {"ckv", "kr"}
+    assert cache["blocks"]["ckv"].shape[-1] == cfg.mla.kv_lora
+
+
+def test_ssm_cache_constant_in_context():
+    cfg = get_smoke_config("mamba2-370m")
+    c32, _ = init_cache(cfg, batch=2, seq=32)
+    c64k, _ = init_cache(cfg, batch=2, seq=65536)
+    assert jax.tree.map(lambda a: a.shape, c32) == jax.tree.map(lambda a: a.shape, c64k)
+
+
+def test_hybrid_shared_cache_count():
+    cfg = get_config("zamba2-1.2b")
+    cache, _ = init_cache(cfg, batch=1, seq=8, abstract=True)
+    assert cache["shared"]["k"].shape[0] == 7  # ceil(38/6) applications
+
+
+def test_chunked_attention_matches_full():
+    """Streaming (flash-style) attention == full-score attention."""
+    for arch in ("glm4-9b", "nemotron-4-340b"):
+        cfg = get_smoke_config(arch)
+        params, _ = init_lm(cfg, KEY)
+        batch = {"tokens": jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)}
+        ref, _, _ = forward(cfg, params, batch, RULES)
+        chunked, _, _ = forward(cfg.replace(attn_kv_chunk=8), params, batch, RULES)
+        err = float(jnp.max(jnp.abs(ref - chunked)))
+        assert err < 1e-4, (arch, err)
