@@ -1,10 +1,12 @@
 """Kernel microbenchmarks: comparator-network sorts vs XLA sort at the
-row-bucket granularity the MoE dispatch and serving admission use.
+row-bucket granularity the MoE dispatch and serving admission use, plus the
+single-block vs multi-block (blocksort) scaling sweep.
 
-On this CPU container the Pallas kernels run in interpret mode (Python), so
-the *timed* comparison uses the traced jnp implementations of the identical
-networks; the Pallas kernels themselves are validated for correctness in
-tests/test_kernels.py and their TPU cost is derived in the roofline."""
+On this CPU container the Pallas kernels run in interpret mode, so two
+regimes are reported: the *traced* jnp implementations of the identical
+networks (the historical rows below) and the interpret-mode wall clock of
+the Pallas paths themselves (the sweep), which is what the blocksort
+acceptance tracks. TPU cost is derived in the roofline."""
 
 from __future__ import annotations
 
@@ -13,12 +15,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitonic import bitonic_sort
+from repro.core.blocksort import default_block_size
 from repro.core.oets import oets_sort
+from repro.kernels import sort, sort_rows
 
 from .common import emit, timeit
 
+# Interpret-mode OETS over a single padded block is O(n) phases of O(n) work;
+# past this it stops being measurable in reasonable wall clock (the point of
+# the sweep), so the single-block column is reported as absent beyond it.
+_OETS_MAX_N = 16_384
+_SWEEP_NS = [1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20]
 
-def main():
+
+def traced_networks():
     rng = np.random.default_rng(0)
     for rows, cols in [(8, 128), (32, 256), (64, 512)]:
         x = jnp.asarray(rng.integers(0, 2**31, (rows, cols)).astype(np.int32))
@@ -37,6 +47,34 @@ def main():
              f"phases={n_phase_bit};vs_oets={t_oets / t_bit:.2f}x")
         emit(f"kernels/xla_sort/{rows}x{cols}", t_xla * 1e6,
              f"vs_bitonic={t_bit / t_xla:.2f}x")
+
+
+def blocksort_sweep():
+    """Single-block padded OETS vs the hierarchical blocksort engine on 1-D
+    inputs up to 2^20, interpret-mode wall clock."""
+    rng = np.random.default_rng(1)
+    for n in _SWEEP_NS:
+        x = jnp.asarray(rng.integers(0, 2**31, n).astype(np.int32))
+        iters = 3 if n <= (1 << 14) else 1
+
+        block = default_block_size(n)
+        nb = -(-n // block)
+        t_blk = timeit(lambda v: sort(v, algorithm="blocksort"), x, iters=iters)
+
+        if n <= _OETS_MAX_N:
+            t_oets = timeit(lambda v: sort_rows(v[None, :], algorithm="oets"),
+                            x, iters=iters)
+            speedup = f";vs_singleblock_oets={t_oets / t_blk:.1f}x"
+            emit(f"kernels/oets_singleblock/n{n}", t_oets * 1e6, "phases=n")
+        else:
+            speedup = ";vs_singleblock_oets=n/a(too_slow)"
+        emit(f"kernels/blocksort/n{n}", t_blk * 1e6,
+             f"block={block};nb={nb}{speedup}")
+
+
+def main():
+    traced_networks()
+    blocksort_sweep()
 
 
 if __name__ == "__main__":

@@ -6,7 +6,12 @@ import time
 
 import jax
 
-__all__ = ["timeit", "emit"]
+__all__ = ["timeit", "emit", "RECORDS"]
+
+# Every emit() appends here; benchmarks/run.py drains it into the
+# BENCH_kernels.json trajectory file after each module so regressions are
+# trackable across PRs.
+RECORDS: list[dict] = []
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 5, **kw):
@@ -25,5 +30,7 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 5, **kw):
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
-    """CSV row: name,us_per_call,derived."""
+    """CSV row: name,us_per_call,derived (also recorded for run.py's JSON)."""
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,12 +1,20 @@
 """Benchmark harness: one module per paper table + framework benches.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and appends every run's rows to
+``BENCH_kernels.json`` (a trajectory file: one entry per invocation, so PRs
+can be compared for regressions).
 
     PYTHONPATH=src python -m benchmarks.run [--only tableX]
 """
 
 import argparse
+import json
+import os
 import sys
+import time
 import traceback
+
+_TRAJECTORY = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                           "BENCH_kernels.json")
 
 MODULES = [
     "table1_preprocessing",
@@ -24,9 +32,11 @@ def main() -> None:
     args = ap.parse_args()
 
     failures = []
+    ran = []
     for name in MODULES:
         if args.only and args.only not in name:
             continue
+        ran.append(name)
         mod = __import__(f"benchmarks.{name}", fromlist=["main"])
         print(f"# --- {name} ---", flush=True)
         try:
@@ -42,8 +52,34 @@ def main() -> None:
         roofline.main()
     except Exception:
         traceback.print_exc()
+    _write_trajectory(ran, failures)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
+
+
+def _write_trajectory(modules, failures) -> None:
+    """Append this run's emit() records to BENCH_kernels.json."""
+    from benchmarks.common import RECORDS
+    if not RECORDS:
+        return
+    history = []
+    if os.path.exists(_TRAJECTORY):
+        try:
+            with open(_TRAJECTORY) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    # record which modules ran so partial (--only / failed) runs are
+    # distinguishable from full sweeps when comparing entries across PRs
+    history.append({
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "modules": list(modules),
+        "failures": list(failures),
+        "records": list(RECORDS),
+    })
+    with open(_TRAJECTORY, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"# wrote {len(RECORDS)} records to {_TRAJECTORY}", flush=True)
 
 
 if __name__ == '__main__':

@@ -13,13 +13,13 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
+from repro.parallel.compat import AxisType, make_mesh  # noqa: E402
 
 from repro.core.distributed import distributed_sort  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.integers(0, 10**9, 8 * 4096), dtype=jnp.int32)
 

@@ -14,7 +14,7 @@ import dataclasses  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
+from repro.parallel.compat import AxisType, make_mesh  # noqa: E402
 
 from repro.configs import get_smoke_config  # noqa: E402
 from repro.models.moe import init_moe, moe  # noqa: E402
@@ -35,7 +35,7 @@ def main():
 
     y_ref, _ = moe(cfg, params, x, Rules())  # GSPMD reference
 
-    mesh = jax.make_mesh((8,), ("ep",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("ep",), axis_types=(AxisType.Auto,))
     y_ep, _ = ep_moe(cfg, mesh, "ep", x.reshape(tokens, cfg.d_model),
                      params["router"], params["w_in"], params["w_out"])
 

@@ -5,6 +5,7 @@ Layers of the hierarchy (lane -> block -> device):
   oets         odd-even transposition sort = parallel bubble sort (paper-faithful)
   bitonic      O(log^2 n)-phase network sort (beyond-paper hillclimb)
   bucketing    length-bucketed segmented sort (paper's decomposition)
+  blocksort    multi-block tiled sort (block-local kernels + odd-even merge)
   distributed  odd-even block sort across mesh devices (bubble sort over ICI)
 """
 
@@ -12,6 +13,7 @@ from .packing import pack_words, unpack_words, lanes_for_width, SENTINEL_U32
 from .oets import oets_sort, oets_sort_kv, oets_argsort, lex_gt
 from .bitonic import bitonic_sort, bitonic_sort_kv, bitonic_merge, bitonic_merge_kv
 from .bucketing import Buckets, bucketize_words, sort_buckets, bucketed_sort_words
+from .blocksort import block_sort, block_sort_kv, default_block_size
 from .distributed import odd_even_block_sort, distributed_sort, local_merge
 
 __all__ = [
@@ -19,5 +21,6 @@ __all__ = [
     "oets_sort", "oets_sort_kv", "oets_argsort", "lex_gt",
     "bitonic_sort", "bitonic_sort_kv", "bitonic_merge", "bitonic_merge_kv",
     "Buckets", "bucketize_words", "sort_buckets", "bucketed_sort_words",
+    "block_sort", "block_sort_kv", "default_block_size",
     "odd_even_block_sort", "distributed_sort", "local_merge",
 ]

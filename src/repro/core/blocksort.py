@@ -1,0 +1,197 @@
+"""Hierarchical multi-block sort — the paper's decomposition at tile scale.
+
+The single-block kernels (``kernels/oets_kernel.py``, ``bitonic_kernel.py``)
+pad every row to one VMEM block, so a row wider than a tile either fails or
+pays O(n) OETS phases over the whole width. This module is the scale-out:
+
+  1. split each row into ``nb`` blocks of ``block_size`` lanes (the paper's
+     "distribute the elements into sub-arrays"),
+  2. sort every block locally with the existing OETS/bitonic row kernels —
+     one pallas grid over all blocks of all rows at once,
+  3. run ``nb`` alternating even/odd rounds of the cross-block merge kernel
+     (``kernels/merge_kernel.py``) — odd-even transposition sort lifted from
+     lanes to blocks, with compare-exchange generalised to merge-split.
+
+Round r with parity p merges block pairs (2i+p, 2i+p+1); after ``nb`` rounds
+the row is globally sorted (the 0-1 principle applied block-wise). Handles
+1-D arrays of arbitrary length and (rows, cols) batches whose cols span many
+VMEM blocks, key-only and key-value. ``repro.kernels.ops.sort`` picks this
+path automatically beyond one block; ``block_size`` is the override knob.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.bitonic_kernel import bitonic_rows_kv_pallas, bitonic_rows_pallas
+from ..kernels.merge_kernel import merge_adjacent_kv_pallas, merge_adjacent_pallas
+from ..kernels.oets_kernel import oets_rows_kv_pallas, oets_rows_pallas
+from ..kernels.ops import (_SUBLANES, _as_rows, _auto_interpret, _next_pow2,
+                           _pad_cols)
+
+__all__ = ["block_sort", "block_sort_kv", "default_block_size"]
+
+_MIN_BLOCK = 128          # one lane tile — smallest block the kernels accept
+_DEFAULT_MIN_BLOCK = 512
+# VMEM cap counts every ref the merge kernel holds: each is (8, 2B) x 4B.
+# Key-only merge has 2 refs (in+out) -> 4 MiB at B=32Ki; kv has 4 refs
+# (keys+vals, in+out) -> 4 MiB at B=16Ki. Both leave headroom in a 16 MiB
+# VMEM core for double buffering.
+_MAX_BLOCK = 1 << 15
+_MAX_BLOCK_KV = 1 << 14
+_TARGET_BLOCKS = 16       # merge rounds = num_blocks; keep that small
+
+
+def default_block_size(n: int, kv: bool = False) -> int:
+    """Cost-model block pick for an n-lane row.
+
+    Per-element phase count is ~log^2(B) (local bitonic) + nb * log(2B)
+    (merge rounds, nb = ceil(n/B)), so growing B trades a quadratic-log local
+    term against linearly fewer rounds; the VMEM cap bounds B above (kv
+    carries twice the refs, so its cap is half). Aim for ~_TARGET_BLOCKS
+    blocks, clamped to [512, 32Ki] (key-only) or [512, 16Ki] (kv) lanes."""
+    cap = _MAX_BLOCK_KV if kv else _MAX_BLOCK
+    b = _next_pow2(max(1, -(-n // _TARGET_BLOCKS)))
+    return max(_DEFAULT_MIN_BLOCK, min(cap, b))
+
+
+def _validate_block(block_size, n, kv=False):
+    b = block_size or default_block_size(n, kv=kv)
+    if b < _MIN_BLOCK or b & (b - 1):
+        raise ValueError(
+            f"block_size must be a power of two >= {_MIN_BLOCK}, got {b}")
+    return b
+
+
+def _pad_grid_rows(x):
+    """Pad rows so the kernels' row grid tiles exactly; returns (padded, real).
+
+    rows <= 8 runs as a single (rows,)-high block; beyond that the kernels
+    tile 8 sublanes at a time, so rows must be a multiple of 8."""
+    rows = x.shape[0]
+    if rows <= _SUBLANES or rows % _SUBLANES == 0:
+        return x, rows
+    pad = (-rows) % _SUBLANES
+    fill = jnp.zeros((pad, x.shape[1]), x.dtype)
+    return jnp.concatenate([x, fill], axis=0), rows
+
+
+def _merge_rounds(xs, nb, block, interpret, merge_fn):
+    """nb alternating even/odd block-pair merge rounds over (rows, nb*block).
+
+    ``xs`` is a tuple (keys,) or (keys, vals); untouched edge blocks (the
+    first block on odd rounds, the last on rounds with a dangling block) are
+    carried through by concatenation around the merged span."""
+    npad = nb * block
+    for r in range(nb):
+        parity = r % 2
+        npairs = (nb - parity) // 2
+        if npairs == 0:
+            continue
+        lo = parity * block
+        hi = lo + npairs * 2 * block
+        merged = merge_fn(*(a[:, lo:hi] for a in xs), block=block,
+                          interpret=interpret)
+        if not isinstance(merged, tuple):
+            merged = (merged,)
+        if lo == 0 and hi == npad:
+            xs = merged
+        else:
+            xs = tuple(
+                jnp.concatenate([a[:, :lo], m, a[:, hi:]], axis=1)
+                for a, m in zip(xs, merged))
+    return xs
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "local_algorithm", "interpret"))
+def _block_sort_2d(x, *, block_size, local_algorithm, interpret):
+    rows, n = x.shape
+    nb = -(-n // block_size)
+    npad = nb * block_size
+    x = _pad_cols(x, npad)
+
+    # local phase: every block of every row is one kernel row
+    loc = x.reshape(rows * nb, block_size)
+    loc, real = _pad_grid_rows(loc)
+    fn = bitonic_rows_pallas if local_algorithm == "bitonic" else oets_rows_pallas
+    x = fn(loc, interpret=interpret)[:real].reshape(rows, npad)
+
+    if nb > 1:
+        xp, real_rows = _pad_grid_rows(x)
+        (xp,) = _merge_rounds((xp,), nb, block_size, interpret,
+                              merge_adjacent_pallas)
+        x = xp[:real_rows]
+    return x[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "local_algorithm", "interpret"))
+def _block_sort_kv_2d(keys, vals, *, block_size, local_algorithm, interpret):
+    rows, n = keys.shape
+    nb = -(-n // block_size)
+    npad = nb * block_size
+    # vals pad with their own sentinel so the padding pair (max key, max val)
+    # is the lex maximum under the kernels' (key, val) compare — it can never
+    # displace a real payload even when real keys equal the key sentinel.
+    keys = _pad_cols(keys, npad)
+    vals = _pad_cols(vals, npad)
+
+    lk = keys.reshape(rows * nb, block_size)
+    lv = vals.reshape(rows * nb, block_size)
+    lk, real = _pad_grid_rows(lk)
+    lv, _ = _pad_grid_rows(lv)
+    fn = bitonic_rows_kv_pallas if local_algorithm == "bitonic" else oets_rows_kv_pallas
+    sk, sv = fn(lk, lv, interpret=interpret)
+    keys = sk[:real].reshape(rows, npad)
+    vals = sv[:real].reshape(rows, npad)
+
+    if nb > 1:
+        kp, real_rows = _pad_grid_rows(keys)
+        vp, _ = _pad_grid_rows(vals)
+        kp, vp = _merge_rounds((kp, vp), nb, block_size, interpret,
+                               merge_adjacent_kv_pallas)
+        keys, vals = kp[:real_rows], vp[:real_rows]
+    return keys[:, :n], vals[:, :n]
+
+
+def block_sort(x, *, block_size: int | None = None,
+               local_algorithm: str = "bitonic",
+               interpret: bool | None = None):
+    """Sort a 1-D array or each row of a (rows, cols) array ascending.
+
+    ``block_size``: lanes per block (power of two >= 128); None = cost model.
+    ``local_algorithm``: 'bitonic' (default) or 'oets' for the in-block sort.
+    """
+    if local_algorithm not in ("bitonic", "oets"):
+        raise ValueError(f"unknown local algorithm {local_algorithm!r}")
+    interpret = _auto_interpret(interpret)
+    x2, vec = _as_rows(x)
+    if 0 in x2.shape:
+        return x
+    b = _validate_block(block_size, x2.shape[1])
+    out = _block_sort_2d(x2, block_size=b, local_algorithm=local_algorithm,
+                         interpret=interpret)
+    return out[0] if vec else out
+
+
+def block_sort_kv(keys, vals, *, block_size: int | None = None,
+                  local_algorithm: str = "bitonic",
+                  interpret: bool | None = None):
+    """Key-value variant of :func:`block_sort`; ``vals`` rides the same
+    permutation (equal keys may permute their payloads)."""
+    if keys.shape != vals.shape:
+        raise ValueError("keys and vals must have identical shapes")
+    if local_algorithm not in ("bitonic", "oets"):
+        raise ValueError(f"unknown local algorithm {local_algorithm!r}")
+    interpret = _auto_interpret(interpret)
+    k2, vec = _as_rows(keys)
+    v2, _ = _as_rows(vals)
+    if 0 in k2.shape:
+        return keys, vals
+    b = _validate_block(block_size, k2.shape[1], kv=True)
+    ok, ov = _block_sort_kv_2d(k2, v2, block_size=b,
+                               local_algorithm=local_algorithm,
+                               interpret=interpret)
+    return (ok[0], ov[0]) if vec else (ok, ov)

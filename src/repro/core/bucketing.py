@@ -67,12 +67,20 @@ def sort_buckets(keys: jax.Array, algorithm: str = "oets") -> jax.Array:
 
     ``keys``: (num_buckets, capacity, lanes) uint32, sentinel padded.
     ``algorithm``: 'oets' (paper-faithful parallel bubble sort), 'bitonic'
-    (beyond-paper network), or 'xla' (production baseline).
+    (beyond-paper network), 'pallas' (the unified kernel front-end — one
+    bucket per kernel row, engine auto-picked by capacity, any capacity
+    beyond a single VMEM block included), or 'xla' (production baseline).
     """
     if algorithm == "oets":
         return jax.vmap(oets_sort)(keys)
     if algorithm == "bitonic":
         return jax.vmap(bitonic_sort)(keys)
+    if algorithm == "pallas":
+        if keys.shape[-1] == 1:
+            from ..kernels.ops import sort as kernel_sort
+            return kernel_sort(keys[..., 0])[..., None]
+        # multi-lane lex keys need the variadic comparator; reuse 'xla' below
+        algorithm = "xla"
     if algorithm == "xla":
         # lexicographic sort of multi-lane keys via XLA's variadic sort
         def one(bucket):

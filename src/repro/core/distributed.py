@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..parallel.compat import axis_size
 from .bitonic import bitonic_merge
 
 __all__ = ["local_merge", "odd_even_block_sort", "distributed_sort"]
@@ -67,7 +68,7 @@ def odd_even_block_sort(block, axis_name: str, merge: str = "bitonic",
     To be called *inside* ``shard_map``. ``block``: this device's (B,) shard.
     Returns the sorted shard (globally ascending across the axis).
     """
-    num = lax.axis_size(axis_name)
+    num = axis_size(axis_name)
     me = lax.axis_index(axis_name)
     block = local_sort(block, axis=0) if local_sort is jnp.sort else local_sort(block)
 
@@ -111,7 +112,7 @@ def sample_sort(block, axis_name: str, capacity: int | None = None,
     safe worst case B). Elements beyond capacity would be dropped; callers
     needing a hard guarantee keep the default.
     """
-    num = lax.axis_size(axis_name)
+    num = axis_size(axis_name)
     b = block.shape[0]
     cap = capacity if capacity is not None else b
     sentinel = jnp.array(jnp.iinfo(block.dtype).max if
@@ -152,7 +153,9 @@ def distributed_sort(x, mesh, axis: str = "data", merge: str = "bitonic"):
     """Sort a 1-D array sharded over ``axis`` of ``mesh``. Host-facing wrapper."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    fn = jax.shard_map(
+    from ..parallel.compat import shard_map
+
+    fn = shard_map(
         functools.partial(odd_even_block_sort, axis_name=axis, merge=merge),
         mesh=mesh,
         in_specs=P(axis),

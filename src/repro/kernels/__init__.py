@@ -1,8 +1,17 @@
 """Pallas TPU kernels for the compute hot spot the paper optimizes: the
-in-bucket comparator sort. ``ops`` is the public entry; ``ref`` the jnp
-oracle; per-kernel modules hold the pallas_call + BlockSpec definitions."""
+in-bucket comparator sort. ``ops`` is the public entry (``sort``/``sort_kv``
+auto-pick the engine; ``sort_rows`` is the raw single-block path); ``ref``
+the jnp oracle; per-kernel modules hold the pallas_call + BlockSpec
+definitions, including the cross-block merge used by ``core/blocksort``."""
 
-from .ops import sort_rows, sort_rows_kv, partition_rows
-from .ref import sort_rows_ref, sort_rows_kv_ref, partition_rows_ref
+from .merge_kernel import merge_adjacent_kv_pallas, merge_adjacent_pallas
+from .ops import (choose_plan, partition_rows, sort, sort_kv, sort_rows,
+                  sort_rows_kv)
+from .ref import partition_rows_ref, sort_rows_kv_ref, sort_rows_ref
 
-__all__ = ["sort_rows", "sort_rows_kv", "partition_rows", "sort_rows_ref", "sort_rows_kv_ref", "partition_rows_ref"]
+__all__ = [
+    "sort", "sort_kv", "choose_plan",
+    "sort_rows", "sort_rows_kv", "partition_rows",
+    "merge_adjacent_pallas", "merge_adjacent_kv_pallas",
+    "sort_rows_ref", "sort_rows_kv_ref", "partition_rows_ref",
+]

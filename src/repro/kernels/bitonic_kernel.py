@@ -25,14 +25,21 @@ def _stage(k, v, col, j, direction_asc):
     bit_unset = (col & j) == 0
     # partner value: col+j for bit-unset lanes (roll left), col-j otherwise.
     pk = jnp.where(bit_unset, jnp.roll(k, -j, axis=1), jnp.roll(k, j, axis=1))
-    gt = k > pk
-    lt = pk > k
+    if v is None:
+        gt = k > pk
+        lt = pk > k
+    else:
+        # (key, val) lex compare: keeps the padding pair (sentinel, sentinel)
+        # strictly maximal so it cannot displace a real payload when a real
+        # key equals the sentinel (long-distance swaps are not stable).
+        pv = jnp.where(bit_unset, jnp.roll(v, -j, axis=1), jnp.roll(v, j, axis=1))
+        gt = (k > pk) | ((k == pk) & (v > pv))
+        lt = (pk > k) | ((pk == k) & (pv > v))
     swap = jnp.where(direction_asc, jnp.where(bit_unset, gt, lt),
                      jnp.where(bit_unset, lt, gt))
     k = jnp.where(swap, pk, k)
     if v is None:
         return k, None
-    pv = jnp.where(bit_unset, jnp.roll(v, -j, axis=1), jnp.roll(v, j, axis=1))
     return k, jnp.where(swap, pv, v)
 
 

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: cross-block odd-even *merge* passes.
+
+This is the block-level analogue of one OETS compare-exchange: where the
+in-block kernels swap neighbouring *lanes*, this kernel "swaps" neighbouring
+*blocks* — each grid step loads two adjacent sorted blocks of ``block`` lanes
+into VMEM and merges them, leaving the smaller half in the left block and the
+larger half in the right. ``core/blocksort.py`` alternates even/odd pairings
+of this kernel until the whole row is globally sorted, exactly as OETS
+alternates even/odd lane pairings.
+
+The merge itself is a bitonic merge network specialised for asc++asc input:
+one reflected compare-exchange (partner ``(2B-1) - i``, i.e. the lane-reversed
+array) splits the pair into a low half and a high half, then ``log2(B)``
+XOR-partner stages (the same two-``roll`` bit-select as the bitonic sort
+kernel) finish each half. ``log2(2B)`` phases total, all lane-parallel VPU
+work, no gather/scatter. ``block`` must be a power of two (the orchestrator
+guarantees it).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "merge_rows_kernel",
+    "merge_rows_kv_kernel",
+    "merge_adjacent_pallas",
+    "merge_adjacent_kv_pallas",
+]
+
+
+def _merge_network(k, v, block):
+    """Merge (RB, 2*block) rows whose halves are each sorted ascending."""
+    col = lax.broadcasted_iota(jnp.int32, k.shape, 1)
+
+    # Reflected stage: compare lane i with lane (2B-1)-i, min to the low half.
+    # Turns asc++asc into low-half/high-half, each bitonic. With payloads the
+    # compare is (key, val) lex — see the kv note in bitonic_kernel._stage:
+    # padding pairs (sentinel, sentinel) stay strictly maximal, so they can
+    # never displace a real payload that shares the sentinel key.
+    pk = jnp.flip(k, axis=1)
+    lower = col < block
+    if v is None:
+        gt, lt = k > pk, pk > k
+    else:
+        pv = jnp.flip(v, axis=1)
+        gt = (k > pk) | ((k == pk) & (v > pv))
+        lt = (pk > k) | ((pk == k) & (pv > v))
+    swap = jnp.where(lower, gt, lt)
+    k = jnp.where(swap, pk, k)
+    if v is not None:
+        v = jnp.where(swap, pv, v)
+
+    # XOR-partner clean-up stages, ascending everywhere. j < block, so the
+    # rolls never cross the half boundary for any lane's true partner.
+    j = block // 2
+    while j >= 1:
+        bit_unset = (col & j) == 0
+        pk = jnp.where(bit_unset, jnp.roll(k, -j, axis=1), jnp.roll(k, j, axis=1))
+        if v is None:
+            swap = jnp.where(bit_unset, k > pk, pk > k)
+        else:
+            pv = jnp.where(bit_unset, jnp.roll(v, -j, axis=1), jnp.roll(v, j, axis=1))
+            swap = jnp.where(bit_unset,
+                             (k > pk) | ((k == pk) & (v > pv)),
+                             (pk > k) | ((pk == k) & (pv > v)))
+        k = jnp.where(swap, pk, k)
+        if v is not None:
+            v = jnp.where(swap, pv, v)
+        j //= 2
+    return k, v
+
+
+def merge_rows_kernel(x_ref, o_ref, *, block):
+    k, _ = _merge_network(x_ref[...], None, block)
+    o_ref[...] = k
+
+
+def merge_rows_kv_kernel(k_ref, v_ref, ok_ref, ov_ref, *, block):
+    k, v = _merge_network(k_ref[...], v_ref[...], block)
+    ok_ref[...] = k
+    ov_ref[...] = v
+
+
+def _row_block(rows: int) -> int:
+    return min(rows, 8)
+
+
+def _check(rows, cols, block, row_block):
+    if block < 1 or block & (block - 1):
+        raise ValueError("block must be a power of two")
+    if cols % (2 * block):
+        raise ValueError("cols must cover whole pairs of blocks")
+    rb = row_block or _row_block(rows)
+    if rows % rb:
+        raise ValueError("rows must be a multiple of the row block")
+    return rb, cols // (2 * block)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "row_block"))
+def merge_adjacent_pallas(x, *, block: int, interpret: bool = False,
+                          row_block: int | None = None):
+    """One merge round over (R, npairs * 2 * block): pair p (cols
+    [2pB, 2pB+2B)) is merged in place. Each pair's halves must be sorted
+    ascending; the caller slices the row to select even or odd pairing."""
+    rows, cols = x.shape
+    rb, npairs = _check(rows, cols, block, row_block)
+    kern = functools.partial(merge_rows_kernel, block=block)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(rows // rb, npairs),
+        in_specs=[pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "row_block"))
+def merge_adjacent_kv_pallas(keys, vals, *, block: int, interpret: bool = False,
+                             row_block: int | None = None):
+    rows, cols = keys.shape
+    rb, npairs = _check(rows, cols, block, row_block)
+    kern = functools.partial(merge_rows_kv_kernel, block=block)
+    return pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct(keys.shape, keys.dtype),
+            jax.ShapeDtypeStruct(vals.shape, vals.dtype),
+        ),
+        grid=(rows // rb, npairs),
+        in_specs=[
+            pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j)),
+        ),
+        interpret=interpret,
+    )(keys, vals)

@@ -60,8 +60,11 @@ def oets_rows_kv_kernel(k_ref, v_ref, ok_ref, ov_ref):
         v_prv = jnp.roll(v, 1, axis=1)
         is_left = (col % 2 == parity) & (col < ncols - 1)
         is_right = (col % 2 == 1 - parity) & (col >= 1)
-        swap_next = is_left & (k > k_nxt)
-        swap_prev = is_right & (k_prv > k)
+        # (key, val) lex compare: the val tie-break keeps the padding pair
+        # (sentinel key, sentinel val) strictly maximal, so padding can never
+        # displace a real payload when real keys equal the sentinel.
+        swap_next = is_left & ((k > k_nxt) | ((k == k_nxt) & (v > v_nxt)))
+        swap_prev = is_right & ((k_prv > k) | ((k_prv == k) & (v_prv > v)))
         k = jnp.where(swap_next, k_nxt, jnp.where(swap_prev, k_prv, k))
         v = jnp.where(swap_next, v_nxt, jnp.where(swap_prev, v_prv, v))
         return (k, v)

@@ -1,10 +1,22 @@
 """Public jit'd wrappers around the Pallas sorting kernels.
 
-Handles everything the raw kernels require of their caller:
-  * lane padding (cols -> multiple of 128 for OETS, next pow2 >= 128 for bitonic)
-    with per-dtype +inf/max sentinels so padding sinks to the row tail,
-  * sublane padding (rows -> multiple of the 8-row block),
-  * automatic ``interpret=True`` on CPU (this container), compiled on TPU.
+Entry points:
+  * ``sort(x)`` / ``sort_kv(keys, vals)`` — the unified front-end. Accepts
+    1-D arrays or (rows, cols) batches of any width and picks the engine from
+    a small cost model (``choose_plan``): single-tile rows run the OETS
+    kernel, single-block pow2-padded rows the bitonic kernel, and anything
+    wider the hierarchical block sort (``core/blocksort.py`` — block-local
+    sort + cross-block odd-even merge rounds). ``algorithm``/``block_size``
+    override the model.
+  * ``sort_rows`` / ``sort_rows_kv`` — the single-block row kernels
+    (every row padded to one VMEM block; width is bounded by the tile).
+  * ``partition_rows`` — splitter bucketing (the paper's distribute step).
+
+These wrappers handle everything the raw kernels require of their caller:
+lane padding (cols -> multiple of 128 for OETS, next pow2 >= 128 for
+bitonic) with per-dtype +inf/max sentinels so padding sinks to the row tail,
+sublane padding (rows -> multiple of the 8-row block), and automatic
+``interpret=True`` on CPU (this container), compiled on TPU.
 """
 
 from __future__ import annotations
@@ -16,10 +28,15 @@ from .bitonic_kernel import bitonic_rows_kv_pallas, bitonic_rows_pallas
 from .oets_kernel import oets_rows_kv_pallas, oets_rows_pallas
 from .partition_kernel import partition_rows_pallas
 
-__all__ = ["sort_rows", "sort_rows_kv", "partition_rows"]
+__all__ = ["sort", "sort_kv", "choose_plan", "sort_rows", "sort_rows_kv",
+           "partition_rows"]
 
 _LANES = 128
 _SUBLANES = 8
+# widest row the single-block kernels handle before the hierarchical path
+# wins: one pow2 VMEM block of 1024 lanes (bitonic: 55 phases; beyond this
+# blocksort's local-sort + merge-round phase count is strictly lower).
+_MAX_SINGLE_BLOCK = 1024
 
 
 def _auto_interpret(interpret):
@@ -54,8 +71,74 @@ def _next_pow2(n):
     return 1 << max(0, (n - 1).bit_length())
 
 
+def _as_rows(x):
+    """Promote a 1-D array to a single kernel row; returns (2-D view, was_1d)."""
+    if x.ndim == 1:
+        return x[None, :], True
+    if x.ndim == 2:
+        return x, False
+    raise ValueError("expected a 1-D or 2-D array")
+
+
+def choose_plan(cols: int, algorithm: str = "auto",
+                block_size: int | None = None):
+    """Pick (algorithm, block_size) for ``cols``-wide rows.
+
+    The cost model orders the engines by total comparator phases per row:
+    ``oets`` (cols phases) only pays off within one lane tile where its
+    padding is tightest; ``bitonic`` (log^2 phases, pow2 padding) up to one
+    VMEM block; ``blocksort`` beyond, where padding to a single giant block
+    would explode phase count and VMEM. Explicit ``algorithm`` overrides."""
+    if algorithm != "auto":
+        return algorithm, block_size
+    if cols <= _LANES:
+        return "oets", None
+    if _next_pow2(cols) <= _MAX_SINGLE_BLOCK:
+        return "bitonic", None
+    return "blocksort", block_size
+
+
+def sort(x, algorithm: str = "auto", block_size: int | None = None,
+         interpret: bool | None = None):
+    """Sort a 1-D array or each row of a (rows, cols) array ascending.
+
+    ``algorithm``: 'auto' (cost model), 'oets', 'bitonic', or 'blocksort'.
+    ``block_size``: blocksort block override (power of two >= 128).
+    """
+    x2, vec = _as_rows(x)
+    if 0 in x2.shape:
+        return x
+    algo, block = choose_plan(x2.shape[1], algorithm, block_size)
+    if algo == "blocksort":
+        from ..core.blocksort import block_sort  # lazy: core imports kernels
+        out = block_sort(x2, block_size=block, interpret=interpret)
+    else:
+        out = sort_rows(x2, algorithm=algo, interpret=interpret)
+    return out[0] if vec else out
+
+
+def sort_kv(keys, vals, algorithm: str = "auto",
+            block_size: int | None = None, interpret: bool | None = None):
+    """Key-value counterpart of :func:`sort`; ``vals`` rides the keys'
+    permutation (equal keys may permute their payloads)."""
+    if keys.shape != vals.shape:
+        raise ValueError("keys and vals must have identical shapes")
+    k2, vec = _as_rows(keys)
+    v2, _ = _as_rows(vals)
+    if 0 in k2.shape:
+        return keys, vals
+    algo, block = choose_plan(k2.shape[1], algorithm, block_size)
+    if algo == "blocksort":
+        from ..core.blocksort import block_sort_kv
+        ok, ov = block_sort_kv(k2, v2, block_size=block, interpret=interpret)
+    else:
+        ok, ov = sort_rows_kv(k2, v2, algorithm=algo, interpret=interpret)
+    return (ok[0], ov[0]) if vec else (ok, ov)
+
+
 def sort_rows(x, algorithm: str = "oets", interpret: bool | None = None):
-    """Sort each row of a (rows, cols) array ascending with a Pallas kernel.
+    """Sort each row of a (rows, cols) array ascending with a single-block
+    Pallas kernel (every row padded to one VMEM block).
 
     ``algorithm``: 'oets' (paper-faithful) or 'bitonic' (beyond-paper).
     """
@@ -89,7 +172,11 @@ def sort_rows_kv(keys, vals, algorithm: str = "oets", interpret: bool | None = N
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
     kp = _pad_rows(_pad_cols(keys, target), _SUBLANES)
-    vp = _pad_rows(_pad_cols(vals, target), _SUBLANES)  # sentinel vals ignored
+    # vals pad with their own sentinel on purpose: the kernels compare
+    # (key, val) lexicographically, so the padding pair (max, max) stays
+    # strictly maximal and can never displace a real payload even when real
+    # keys equal the key sentinel. Do not "simplify" to zero padding.
+    vp = _pad_rows(_pad_cols(vals, target), _SUBLANES)
     ok, ov = fn(kp, vp, interpret=interpret)
     return ok[:rows, :cols], ov[:rows, :cols]
 
@@ -111,9 +198,11 @@ def partition_rows(keys, splitters, interpret: bool | None = None):
     xp = _pad_rows(_pad_cols(keys.astype(jnp.int32), cols_p), _SUBLANES)
     bid, cnt = partition_rows_pallas(
         xp, spl_pad, n_splitters=n_spl, n_buckets=n_buckets, interpret=interpret)
-    # padded cols land in the top bucket (sentinel = int32 max); correct the
-    # histogram for them before returning
+    # Padded *cols* of real rows are sentinels (int32 max) and land in the top
+    # bucket — subtract them there. Padded *rows* are zero-filled (their
+    # elements land in bucket 0, not the top bucket), so the correction must
+    # only touch the real rows or it drives their top-bucket count negative.
     pad_cols = cols_p - cols
     if pad_cols:
-        cnt = cnt.at[:, n_buckets - 1].add(-pad_cols)
+        cnt = cnt.at[:rows, n_buckets - 1].add(-pad_cols)
     return bid[:rows, :cols], cnt[:rows]

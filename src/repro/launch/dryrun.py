@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from ..configs import ARCH_IDS, SHAPES, cells_for, get_config
 from ..models.model import decode_step, forward
+from ..parallel.compat import set_mesh
 from ..parallel.sharding import Rules
 from ..training.steps import Hyper, make_train_step
 from . import hw
@@ -126,7 +127,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     donate = (0, 1) if cell.kind == "train" else ((1,) if cell.kind == "decode" else ())
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(
             step, in_shardings=shardings, donate_argnums=donate
         ).lower(*args)

@@ -5,13 +5,14 @@ XLA_FLAGS before its first jax call; tests run on 1 device)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from ..parallel.compat import AxisType, make_mesh
 
 __all__ = ["make_production_mesh", "make_elastic_mesh", "make_test_mesh"]
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

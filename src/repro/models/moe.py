@@ -10,7 +10,10 @@ is the GSPMD one-hot dispatch baseline the sort variant is benchmarked
 against (benchmarks/bench_moe_dispatch.py).
 
 ``sort_impl`` selects the sorting engine: 'xla' (production, O(n log n)),
-'oets' (paper-faithful comparator network; used at test scale) or 'bitonic'.
+'oets' (paper-faithful comparator network; used at test scale), 'bitonic',
+or 'pallas' — the unified kernel front-end (``repro.kernels.ops.sort_kv``)
+whose cost model auto-picks OETS / bitonic / tiled blocksort from the
+assignment-list length, so dispatch scales past one VMEM block.
 """
 
 from __future__ import annotations
@@ -20,6 +23,7 @@ import jax.numpy as jnp
 
 from ..core.bitonic import bitonic_sort_kv
 from ..core.oets import oets_sort_kv
+from ..kernels.ops import sort_kv as kernel_sort_kv
 from ..parallel.sharding import Rules, constrain
 from .config import ModelConfig
 from .layers import _ACTS, init_mlp, mlp
@@ -84,6 +88,8 @@ def _sort_assignments(flat_e, flat_payload, impl: str):
         return oets_sort_kv(flat_e, flat_payload)
     if impl == "bitonic":
         return bitonic_sort_kv(flat_e, flat_payload)
+    if impl == "pallas":
+        return kernel_sort_kv(flat_e, flat_payload)
     raise ValueError(f"unknown sort impl {impl!r}")
 
 

@@ -22,6 +22,7 @@ from jax import lax
 
 from ..models.config import ModelConfig
 from ..models.moe import capacity as _capacity
+from ..parallel.compat import axis_size, shard_map
 
 __all__ = ["ep_moe_shard", "ep_moe"]
 
@@ -36,7 +37,7 @@ def ep_moe_shard(cfg: ModelConfig, xf, router_w, w_in_local, w_out_local,
     Returns (y (T_loc, d), aux-loss scalar shaped (1,)).
     """
     m = cfg.moe
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     t_loc, dm = xf.shape
     e, e_loc = m.n_experts, m.n_experts // p
     cap = _capacity(cfg, t_loc)  # per (local tokens, global experts)
@@ -95,7 +96,7 @@ def ep_moe(cfg: ModelConfig, mesh, axis_name, xf, router_w, w_in, w_out):
     from jax.sharding import PartitionSpec as P
 
     body = functools.partial(ep_moe_shard, cfg, axis_name=axis_name)
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(axis_name), P(), P(axis_name), P(axis_name)),
         out_specs=(P(axis_name), P(axis_name)),

@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .compat import axis_size
+
 __all__ = ["quantize_int8", "dequantize_int8", "compressed_psum", "ef_init", "ef_compress"]
 
 
@@ -69,6 +71,6 @@ def compressed_psum(x, axis_name, residual):
     new_residual = corrected - q.astype(jnp.float32) * scale
     # wire: int8 payload; reduce widened to int32 to avoid overflow
     total = jax.lax.psum(q.astype(jnp.int32), axis_name)
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     mean = total.astype(jnp.float32) * scale / n
     return mean, new_residual

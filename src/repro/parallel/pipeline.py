@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from .compat import axis_size
 from jax import lax
 
 __all__ = ["pipeline_forward"]
@@ -30,7 +32,7 @@ def pipeline_forward(stage_fn, stage_params, x_all, axis_name: str):
     x_all: (M, ...) all microbatch inputs (meaningful on stage 0).
     Returns (M, ...) outputs (meaningful on the last stage).
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     me = lax.axis_index(axis_name)
     m = x_all.shape[0]
     mb_shape = x_all.shape[1:]

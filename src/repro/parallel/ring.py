@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from .compat import axis_size
 from jax import lax
 
 __all__ = ["ring_all_reduce", "ring_all_gather"]
@@ -23,7 +25,7 @@ def _ring_perm(n: int):
 def ring_all_reduce(x, axis_name: str):
     """Sum x across ``axis_name`` with an explicit reduce-scatter + all-gather
     ring. x's leading dim must be divisible by the axis size."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     me = lax.axis_index(axis_name)
@@ -55,7 +57,7 @@ def ring_all_reduce(x, axis_name: str):
 
 def ring_all_gather(x, axis_name: str):
     """Concatenate x blocks from every rank along a new leading axis."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     out = jnp.zeros((n,) + x.shape, x.dtype)
     me = lax.axis_index(axis_name)
     out = lax.dynamic_update_slice(out, x[None], (me,) + (0,) * x.ndim)

@@ -24,6 +24,8 @@ from typing import Mapping
 import jax
 from jax.sharding import PartitionSpec as P
 
+from .compat import get_abstract_mesh
+
 __all__ = ["Rules", "DEFAULT_RULES", "constrain", "spec_for"]
 
 
@@ -93,7 +95,10 @@ class Rules:
                 entries.append(None)
             elif isinstance(m, (tuple, list)):
                 kept = tuple(x for x in m if x in mesh_axis_names)
-                entries.append(kept if kept else None)
+                # normalize 1-tuples to the bare axis (newer jax does this in
+                # PartitionSpec itself; older versions keep the tuple)
+                entries.append(None if not kept else
+                               kept[0] if len(kept) == 1 else kept)
             else:
                 entries.append(m if m in mesh_axis_names else None)
         return P(*entries)
@@ -134,7 +139,7 @@ class Rules:
 def spec_for(rules: Rules, axes, mesh=None) -> P:
     names = mesh.axis_names if mesh is not None else None
     if names is None:
-        am = jax.sharding.get_abstract_mesh()
+        am = get_abstract_mesh()
         names = () if am.empty else am.axis_names
     return rules.mesh_spec(axes, names)
 
@@ -143,7 +148,7 @@ def constrain(x, rules: Rules, *axes):
     """``with_sharding_constraint`` against the ambient mesh; no-op when no
     mesh is active (CPU unit tests) or no referenced axis exists.
     Divisibility-aware, so partially-shardable dims degrade to replication."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am.empty:
         return x
     sizes = dict(am.shape)

@@ -10,11 +10,12 @@ import sys
 
 _COMPRESS_TRAIN = r"""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 from jax import lax
+from repro.parallel.compat import AxisType, make_mesh, shard_map
 from repro.parallel.compression import compressed_psum
 
-mesh = jax.make_mesh((8,), ("dp",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("dp",), axis_types=(AxisType.Auto,))
 rng = np.random.default_rng(0)
 
 D, H, STEPS, B_LOC = 16, 32, 200, 8
@@ -56,7 +57,7 @@ def make_train(compressed):
         (p, _), losses = lax.scan(body, (p, res), (xs, ys))
         return p, losses
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         make := train, mesh=mesh,
         in_specs=(P(), P(None, "dp"), P(None, "dp")),
         out_specs=(P(), P()),
@@ -79,7 +80,7 @@ def test_compressed_gradient_training_converges():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"  # 8 host devices; never probe TPU
     out = subprocess.run([sys.executable, "-c", _COMPRESS_TRAIN],
                          capture_output=True, text=True, env=env, timeout=600)
     assert out.returncode == 0, out.stderr[-4000:]

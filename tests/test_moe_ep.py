@@ -7,9 +7,9 @@ import sys
 _EP_SCRIPT = r"""
 import dataclasses
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
 
 from repro.configs import get_smoke_config
+from repro.parallel.compat import AxisType, make_mesh
 from repro.models.moe import init_moe, moe
 from repro.models.moe_ep import ep_moe
 from repro.models.param import Builder, finalize
@@ -31,7 +31,7 @@ x = jax.random.normal(jax.random.PRNGKey(1), (1, T, cfg.d_model))
 y_ref, aux_ref = moe(cfg, params, x, rules)
 
 # explicit EP over 8 devices
-mesh = jax.make_mesh((8,), ("ep",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("ep",), axis_types=(AxisType.Auto,))
 y_ep, aux_ep = ep_moe(
     cfg, mesh, "ep",
     x.reshape(T, cfg.d_model),
@@ -48,7 +48,7 @@ def test_ep_moe_matches_gspmd():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"  # 8 host devices; never probe TPU
     out = subprocess.run([sys.executable, "-c", _EP_SCRIPT],
                          capture_output=True, text=True, env=env, timeout=600)
     assert out.returncode == 0, out.stderr[-4000:]

@@ -8,7 +8,8 @@ import sys
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.parallel.compression import dequantize_int8, ef_compress, ef_init, quantize_int8
 from repro.parallel.sharding import DEFAULT_RULES, Rules
@@ -72,13 +73,14 @@ def test_error_feedback_unbiased_over_steps():
 
 _MULTIDEV_SCRIPT = r"""
 import numpy as np, jax, jax.numpy as jnp, functools
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 from repro.core.distributed import distributed_sort, odd_even_block_sort
+from repro.parallel.compat import AxisType, make_mesh, shard_map
 from repro.parallel.ring import ring_all_reduce
 from repro.parallel.pipeline import pipeline_forward
 from repro.parallel.compression import compressed_psum
 
-mesh = jax.make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
 rng = np.random.default_rng(0)
 
 # distributed odd-even block sort == global sort, all merge strategies
@@ -93,7 +95,7 @@ assert (distributed_sort(xd, mesh, axis="d", merge="bitonic") == jnp.sort(xd)).a
 
 # ring all-reduce == psum
 y = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
-f = jax.jit(jax.shard_map(lambda v: ring_all_reduce(v, "d"),
+f = jax.jit(shard_map(lambda v: ring_all_reduce(v, "d"),
                           mesh=mesh, in_specs=P("d"), out_specs=P("d")))
 assert np.allclose(np.asarray(f(y)), np.tile(np.asarray(y).sum(0), (8, 1)), atol=1e-4)
 
@@ -102,7 +104,7 @@ ws = jnp.asarray(rng.normal(size=(8, 4, 4)).astype(np.float32) * 0.5)
 mbs = jnp.asarray(rng.normal(size=(5, 3, 4)).astype(np.float32))
 def stage(w, x):
     return jnp.tanh(x @ w)
-pf = jax.jit(jax.shard_map(
+pf = jax.jit(shard_map(
     lambda w, xs: pipeline_forward(lambda wi, x: stage(wi[0], x), w, xs, "d")[None],
     mesh=mesh, in_specs=(P("d"), P()), out_specs=P("d")))
 outs = pf(ws, mbs)[-1]  # outputs land on the last stage
@@ -114,7 +116,7 @@ assert np.allclose(np.asarray(outs), np.asarray(ref), atol=1e-5), "pipeline"
 # compressed psum close to true mean
 def body(v, r):
     return compressed_psum(v, "d", r)
-h = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P("d"), P("d")), out_specs=(P("d"), P("d"))))
+h = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("d"), P("d")), out_specs=(P("d"), P("d"))))
 m, _ = h(y, jnp.zeros_like(y))
 true = np.tile(np.asarray(y).mean(0), (8, 1))
 assert np.abs(np.asarray(m) - true).max() < 0.05
@@ -128,7 +130,7 @@ def test_multidevice_suite():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"  # 8 host devices; never probe TPU
     out = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],
                          capture_output=True, text=True, env=env, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
@@ -138,10 +140,11 @@ def test_multidevice_suite():
 _SAMPLESORT_SCRIPT = r"""
 import functools
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 from repro.core.distributed import sample_sort
+from repro.parallel.compat import AxisType, make_mesh, shard_map
 
-mesh = jax.make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
 rng = np.random.default_rng(0)
 def body(blk):
     vals, count = sample_sort(blk, axis_name="d")
@@ -149,7 +152,7 @@ def body(blk):
 for n_per, seed in ((64, 0), (128, 1), (32, 2)):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.integers(0, 10**6, 8 * n_per), dtype=jnp.int32)
-    fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("d"),
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P("d"),
                                out_specs=(P("d"), P("d"))))
     vals, counts = fn(x)
     vals_np = np.asarray(vals).reshape(8, -1)
@@ -167,7 +170,7 @@ def test_sample_sort_multidevice():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"  # 8 host devices; never probe TPU
     out = subprocess.run([sys.executable, "-c", _SAMPLESORT_SCRIPT],
                          capture_output=True, text=True, env=env, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
