@@ -17,7 +17,7 @@ import numpy as np
 from repro.core.bitonic import bitonic_sort
 from repro.core.blocksort import default_block_size
 from repro.core.oets import oets_sort
-from repro.kernels import sort, sort_rows
+from repro.kernels import choose_plan, sort, sort_lex, sort_rows
 
 from .common import emit, timeit
 
@@ -72,9 +72,39 @@ def blocksort_sweep():
              f"block={block};nb={nb}{speedup}")
 
 
+def lex_lanes_sweep():
+    """Variadic lex engine cost vs lane count (the paper's multi-character
+    words pack 4 chars per uint32 lane): rows of 8 buckets x 128 slots,
+    lanes in {1, 2, 4, 8}, against the XLA variadic-sort oracle. Lane 0 is
+    drawn from a tiny alphabet so the deeper lanes actually break ties.
+    cols=128 keeps the interpret-mode compile inside one lane tile — the
+    lane-count scaling is the measurement, not the width."""
+    rng = np.random.default_rng(2)
+    rows, cols = 8, 128
+    engine = choose_plan(cols)[0]
+    for n_lanes in (1, 2, 4, 8):
+        lanes = [jnp.asarray(rng.integers(0, 4 if l == 0 else 2**32,
+                                          (rows, cols), dtype=np.uint64)
+                             .astype(np.uint32))
+                 for l in range(n_lanes)]
+
+        t_lex = timeit(lambda *ls: sort_lex(list(ls)), *lanes, iters=3)
+
+        def xla_oracle(*ls):
+            return jax.lax.sort(list(ls), num_keys=len(ls))
+
+        t_xla = timeit(jax.jit(xla_oracle), *lanes, iters=3)
+        # vs_X follows the file's other-over-self convention: >1 means the
+        # lex engine beats the oracle (interpret mode on CPU stays < 1; the
+        # TPU cost is modelled in the roofline)
+        emit(f"kernels/sort_lex/lanes{n_lanes}/{rows}x{cols}", t_lex * 1e6,
+             f"engine={engine};vs_xla={t_xla / t_lex:.2f}x")
+
+
 def main():
     traced_networks()
     blocksort_sweep()
+    lex_lanes_sweep()
 
 
 if __name__ == "__main__":

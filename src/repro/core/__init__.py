@@ -13,7 +13,8 @@ from .packing import pack_words, unpack_words, lanes_for_width, SENTINEL_U32
 from .oets import oets_sort, oets_sort_kv, oets_argsort, lex_gt
 from .bitonic import bitonic_sort, bitonic_sort_kv, bitonic_merge, bitonic_merge_kv
 from .bucketing import Buckets, bucketize_words, sort_buckets, bucketed_sort_words
-from .blocksort import block_sort, block_sort_kv, default_block_size
+from .blocksort import (block_sort, block_sort_kv, block_sort_lex,
+                        default_block_size)
 from .distributed import odd_even_block_sort, distributed_sort, local_merge
 
 __all__ = [
@@ -21,6 +22,6 @@ __all__ = [
     "oets_sort", "oets_sort_kv", "oets_argsort", "lex_gt",
     "bitonic_sort", "bitonic_sort_kv", "bitonic_merge", "bitonic_merge_kv",
     "Buckets", "bucketize_words", "sort_buckets", "bucketed_sort_words",
-    "block_sort", "block_sort_kv", "default_block_size",
+    "block_sort", "block_sort_kv", "block_sort_lex", "default_block_size",
     "odd_even_block_sort", "distributed_sort", "local_merge",
 ]

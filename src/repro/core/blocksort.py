@@ -15,8 +15,13 @@ pays O(n) OETS phases over the whole width. This module is the scale-out:
 Round r with parity p merges block pairs (2i+p, 2i+p+1); after ``nb`` rounds
 the row is globally sorted (the 0-1 principle applied block-wise). Handles
 1-D arrays of arbitrary length and (rows, cols) batches whose cols span many
-VMEM blocks, key-only and key-value. ``repro.kernels.ops.sort`` picks this
-path automatically beyond one block; ``block_size`` is the override knob.
+VMEM blocks.
+
+Every entry point is a view over one tuple-based core (``block_sort_lex``):
+the kernels compare full lexicographic tuples (``kernels/lex.py``), so
+key-only is the 1-tuple, key-value the 2-tuple, and multi-lane word keys any
+wider tuple. ``repro.kernels.ops.sort``/``sort_lex`` pick this path
+automatically beyond one block; ``block_size`` is the override knob.
 """
 
 from __future__ import annotations
@@ -26,40 +31,43 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..kernels.bitonic_kernel import bitonic_rows_kv_pallas, bitonic_rows_pallas
-from ..kernels.merge_kernel import merge_adjacent_kv_pallas, merge_adjacent_pallas
-from ..kernels.oets_kernel import oets_rows_kv_pallas, oets_rows_pallas
+from ..kernels.bitonic_kernel import bitonic_rows_lex_pallas
+from ..kernels.merge_kernel import merge_adjacent_lex_pallas
+from ..kernels.oets_kernel import oets_rows_lex_pallas
 from ..kernels.ops import (_SUBLANES, _as_rows, _auto_interpret, _next_pow2,
                            _pad_cols)
 
-__all__ = ["block_sort", "block_sort_kv", "default_block_size"]
+__all__ = ["block_sort", "block_sort_kv", "block_sort_lex",
+           "default_block_size"]
 
 _MIN_BLOCK = 128          # one lane tile — smallest block the kernels accept
 _DEFAULT_MIN_BLOCK = 512
 # VMEM cap counts every ref the merge kernel holds: each is (8, 2B) x 4B.
-# Key-only merge has 2 refs (in+out) -> 4 MiB at B=32Ki; kv has 4 refs
-# (keys+vals, in+out) -> 4 MiB at B=16Ki. Both leave headroom in a 16 MiB
-# VMEM core for double buffering.
+# Key-only merge has 2 refs (in+out) -> 4 MiB at B=32Ki; every further array
+# in the tuple (payload or extra key lane) adds 2 refs, halving the cap at
+# each doubling: kv (4 refs) -> 4 MiB at B=16Ki. All leave headroom in a
+# 16 MiB VMEM core for double buffering.
 _MAX_BLOCK = 1 << 15
-_MAX_BLOCK_KV = 1 << 14
 _TARGET_BLOCKS = 16       # merge rounds = num_blocks; keep that small
 
 
-def default_block_size(n: int, kv: bool = False) -> int:
+def default_block_size(n: int, kv: bool = False, n_arrays: int | None = None) -> int:
     """Cost-model block pick for an n-lane row.
 
     Per-element phase count is ~log^2(B) (local bitonic) + nb * log(2B)
     (merge rounds, nb = ceil(n/B)), so growing B trades a quadratic-log local
-    term against linearly fewer rounds; the VMEM cap bounds B above (kv
-    carries twice the refs, so its cap is half). Aim for ~_TARGET_BLOCKS
-    blocks, clamped to [512, 32Ki] (key-only) or [512, 16Ki] (kv) lanes."""
-    cap = _MAX_BLOCK_KV if kv else _MAX_BLOCK
+    term against linearly fewer rounds; the VMEM cap bounds B above — each
+    array in the sorted tuple carries in+out refs, so the cap halves per
+    pow2 tuple width (``kv=True`` is shorthand for ``n_arrays=2``). Aim for
+    ~_TARGET_BLOCKS blocks, clamped to [512, 32Ki / pow2(n_arrays)] lanes."""
+    t = n_arrays if n_arrays is not None else (2 if kv else 1)
+    cap = max(_MIN_BLOCK, _MAX_BLOCK // _next_pow2(t))
     b = _next_pow2(max(1, -(-n // _TARGET_BLOCKS)))
     return max(_DEFAULT_MIN_BLOCK, min(cap, b))
 
 
-def _validate_block(block_size, n, kv=False):
-    b = block_size or default_block_size(n, kv=kv)
+def _validate_block(block_size, n, n_arrays):
+    b = block_size or default_block_size(n, n_arrays=n_arrays)
     if b < _MIN_BLOCK or b & (b - 1):
         raise ValueError(
             f"block_size must be a power of two >= {_MIN_BLOCK}, got {b}")
@@ -79,10 +87,10 @@ def _pad_grid_rows(x):
     return jnp.concatenate([x, fill], axis=0), rows
 
 
-def _merge_rounds(xs, nb, block, interpret, merge_fn):
+def _merge_rounds(xs, nb, block, interpret):
     """nb alternating even/odd block-pair merge rounds over (rows, nb*block).
 
-    ``xs`` is a tuple (keys,) or (keys, vals); untouched edge blocks (the
+    ``xs`` is a tuple of lane/payload arrays; untouched edge blocks (the
     first block on odd rounds, the last on rounds with a dangling block) are
     carried through by concatenation around the merged span."""
     npad = nb * block
@@ -93,10 +101,8 @@ def _merge_rounds(xs, nb, block, interpret, merge_fn):
             continue
         lo = parity * block
         hi = lo + npairs * 2 * block
-        merged = merge_fn(*(a[:, lo:hi] for a in xs), block=block,
-                          interpret=interpret)
-        if not isinstance(merged, tuple):
-            merged = (merged,)
+        merged = merge_adjacent_lex_pallas(
+            *(a[:, lo:hi] for a in xs), block=block, interpret=interpret)
         if lo == 0 and hi == npad:
             xs = merged
         else:
@@ -107,53 +113,62 @@ def _merge_rounds(xs, nb, block, interpret, merge_fn):
 
 
 @functools.partial(jax.jit, static_argnames=("block_size", "local_algorithm", "interpret"))
-def _block_sort_2d(x, *, block_size, local_algorithm, interpret):
-    rows, n = x.shape
+def _block_sort_tuple_2d(arrs, *, block_size, local_algorithm, interpret):
+    """Tuple core: sort each row of same-shape 2-D ``arrs`` by lex compare."""
+    rows, n = arrs[0].shape
     nb = -(-n // block_size)
     npad = nb * block_size
-    x = _pad_cols(x, npad)
+    # every array pads with its own dtype sentinel so the padding tuple is
+    # the lex maximum under the kernels' full-tuple compare — it can never
+    # displace a real payload even when real keys equal the key sentinel.
+    arrs = [_pad_cols(a, npad) for a in arrs]
 
     # local phase: every block of every row is one kernel row
-    loc = x.reshape(rows * nb, block_size)
-    loc, real = _pad_grid_rows(loc)
-    fn = bitonic_rows_pallas if local_algorithm == "bitonic" else oets_rows_pallas
-    x = fn(loc, interpret=interpret)[:real].reshape(rows, npad)
+    loc = [a.reshape(rows * nb, block_size) for a in arrs]
+    real = loc[0].shape[0]
+    loc = [_pad_grid_rows(a)[0] for a in loc]
+    fn = (bitonic_rows_lex_pallas if local_algorithm == "bitonic"
+          else oets_rows_lex_pallas)
+    arrs = [s[:real].reshape(rows, npad)
+            for s in fn(*loc, interpret=interpret)]
 
     if nb > 1:
-        xp, real_rows = _pad_grid_rows(x)
-        (xp,) = _merge_rounds((xp,), nb, block_size, interpret,
-                              merge_adjacent_pallas)
-        x = xp[:real_rows]
-    return x[:, :n]
+        padded = [_pad_grid_rows(a)[0] for a in arrs]
+        real_rows = rows
+        merged = _merge_rounds(tuple(padded), nb, block_size, interpret)
+        arrs = [m[:real_rows] for m in merged]
+    return tuple(a[:, :n] for a in arrs)
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "local_algorithm", "interpret"))
-def _block_sort_kv_2d(keys, vals, *, block_size, local_algorithm, interpret):
-    rows, n = keys.shape
-    nb = -(-n // block_size)
-    npad = nb * block_size
-    # vals pad with their own sentinel so the padding pair (max key, max val)
-    # is the lex maximum under the kernels' (key, val) compare — it can never
-    # displace a real payload even when real keys equal the key sentinel.
-    keys = _pad_cols(keys, npad)
-    vals = _pad_cols(vals, npad)
+def block_sort_lex(arrs, *, block_size: int | None = None,
+                   local_algorithm: str = "bitonic",
+                   interpret: bool | None = None):
+    """Sort a tuple of same-shape 1-D arrays or (rows, cols) batches as
+    lexicographic tuples (lane 0 most significant; trailing arrays are
+    payload/tie-break lanes). Returns the sorted tuple.
 
-    lk = keys.reshape(rows * nb, block_size)
-    lv = vals.reshape(rows * nb, block_size)
-    lk, real = _pad_grid_rows(lk)
-    lv, _ = _pad_grid_rows(lv)
-    fn = bitonic_rows_kv_pallas if local_algorithm == "bitonic" else oets_rows_kv_pallas
-    sk, sv = fn(lk, lv, interpret=interpret)
-    keys = sk[:real].reshape(rows, npad)
-    vals = sv[:real].reshape(rows, npad)
-
-    if nb > 1:
-        kp, real_rows = _pad_grid_rows(keys)
-        vp, _ = _pad_grid_rows(vals)
-        kp, vp = _merge_rounds((kp, vp), nb, block_size, interpret,
-                               merge_adjacent_kv_pallas)
-        keys, vals = kp[:real_rows], vp[:real_rows]
-    return keys[:, :n], vals[:, :n]
+    ``block_size``: lanes per block (power of two >= 128); None = cost model
+    (cap halves per pow2 tuple width — VMEM holds in+out refs per array).
+    ``local_algorithm``: 'bitonic' (default) or 'oets' for the in-block sort.
+    """
+    if local_algorithm not in ("bitonic", "oets"):
+        raise ValueError(f"unknown local algorithm {local_algorithm!r}")
+    arrs = list(arrs)
+    if not arrs:
+        raise ValueError("need at least one array to sort")
+    if any(a.shape != arrs[0].shape for a in arrs[1:]):
+        raise ValueError("all lex arrays must have identical shapes")
+    interpret = _auto_interpret(interpret)
+    views = [_as_rows(a) for a in arrs]
+    vec = views[0][1]
+    arrs2 = [v[0] for v in views]
+    if 0 in arrs2[0].shape:
+        return tuple(arrs)
+    b = _validate_block(block_size, arrs2[0].shape[1], len(arrs2))
+    out = _block_sort_tuple_2d(tuple(arrs2), block_size=b,
+                               local_algorithm=local_algorithm,
+                               interpret=interpret)
+    return tuple(o[0] for o in out) if vec else out
 
 
 def block_sort(x, *, block_size: int | None = None,
@@ -164,34 +179,19 @@ def block_sort(x, *, block_size: int | None = None,
     ``block_size``: lanes per block (power of two >= 128); None = cost model.
     ``local_algorithm``: 'bitonic' (default) or 'oets' for the in-block sort.
     """
-    if local_algorithm not in ("bitonic", "oets"):
-        raise ValueError(f"unknown local algorithm {local_algorithm!r}")
-    interpret = _auto_interpret(interpret)
-    x2, vec = _as_rows(x)
-    if 0 in x2.shape:
-        return x
-    b = _validate_block(block_size, x2.shape[1])
-    out = _block_sort_2d(x2, block_size=b, local_algorithm=local_algorithm,
-                         interpret=interpret)
-    return out[0] if vec else out
+    (out,) = block_sort_lex((x,), block_size=block_size,
+                            local_algorithm=local_algorithm,
+                            interpret=interpret)
+    return out
 
 
 def block_sort_kv(keys, vals, *, block_size: int | None = None,
                   local_algorithm: str = "bitonic",
                   interpret: bool | None = None):
     """Key-value variant of :func:`block_sort`; ``vals`` rides the same
-    permutation (equal keys may permute their payloads)."""
+    permutation as the 2nd (tie-break) lex lane."""
     if keys.shape != vals.shape:
         raise ValueError("keys and vals must have identical shapes")
-    if local_algorithm not in ("bitonic", "oets"):
-        raise ValueError(f"unknown local algorithm {local_algorithm!r}")
-    interpret = _auto_interpret(interpret)
-    k2, vec = _as_rows(keys)
-    v2, _ = _as_rows(vals)
-    if 0 in k2.shape:
-        return keys, vals
-    b = _validate_block(block_size, k2.shape[1], kv=True)
-    ok, ov = _block_sort_kv_2d(k2, v2, block_size=b,
-                               local_algorithm=local_algorithm,
-                               interpret=interpret)
-    return (ok[0], ov[0]) if vec else (ok, ov)
+    return block_sort_lex((keys, vals), block_size=block_size,
+                          local_algorithm=local_algorithm,
+                          interpret=interpret)

@@ -4,8 +4,12 @@
 input datasets into many additional temporary sub-arrays according to a
 number of characters in each word" — buckets are independent, so they sort
 in parallel. On CPU the paper assigns one bucket per OpenMP thread; on TPU we
-pad buckets to a common capacity and ``vmap`` the comparator sort across the
-bucket axis (sublanes), which is the SPMD rendering of the same decomposition.
+pad buckets to a common capacity and either ``vmap`` the traced comparator
+sort across the bucket axis (the 'oets'/'bitonic' algorithms) or — the
+production path — hand the whole (num_buckets, capacity, lanes) tensor to
+``kernels.ops.segmented_sort`` ('pallas'), one batched lexicographic kernel
+launch over all buckets at any lane count and capacity. Both are SPMD
+renderings of the same decomposition.
 
 The concatenation of sorted buckets in increasing length order yields
 *shortlex* order (length-major, then alphabetic) — exactly the order the
@@ -62,25 +66,26 @@ def bucketize_words(words, capacity: int | None = None) -> Buckets:
     return Buckets(keys=keys, counts=counts, lengths=np.asarray(lengths, np.int32))
 
 
-def sort_buckets(keys: jax.Array, algorithm: str = "oets") -> jax.Array:
+def sort_buckets(keys: jax.Array, algorithm: str = "oets",
+                 counts: jax.Array | None = None) -> jax.Array:
     """Sort every bucket independently (vmap over the bucket axis).
 
     ``keys``: (num_buckets, capacity, lanes) uint32, sentinel padded.
     ``algorithm``: 'oets' (paper-faithful parallel bubble sort), 'bitonic'
-    (beyond-paper network), 'pallas' (the unified kernel front-end — one
-    bucket per kernel row, engine auto-picked by capacity, any capacity
-    beyond a single VMEM block included), or 'xla' (production baseline).
+    (beyond-paper network), 'pallas' (the fused ``kernels.ops.segmented_sort``
+    pipeline — one batched lex kernel launch over all buckets, any lane
+    count and any capacity including the multi-block blocksort tier), or
+    'xla' (production baseline). ``counts`` (optional, (num_buckets,)) lets
+    the 'pallas' path re-mask slots beyond each bucket's count to the
+    sentinel; ``None`` trusts the tensor's existing sentinel padding.
     """
     if algorithm == "oets":
         return jax.vmap(oets_sort)(keys)
     if algorithm == "bitonic":
         return jax.vmap(bitonic_sort)(keys)
     if algorithm == "pallas":
-        if keys.shape[-1] == 1:
-            from ..kernels.ops import sort as kernel_sort
-            return kernel_sort(keys[..., 0])[..., None]
-        # multi-lane lex keys need the variadic comparator; reuse 'xla' below
-        algorithm = "xla"
+        from ..kernels.ops import segmented_sort
+        return segmented_sort(keys, counts)
     if algorithm == "xla":
         # lexicographic sort of multi-lane keys via XLA's variadic sort
         def one(bucket):
@@ -98,7 +103,8 @@ def bucketed_sort_words(words, algorithm: str = "oets") -> list:
     buckets = bucketize_words(words)
     if buckets.keys.size == 0:
         return []
-    sorted_keys = np.asarray(sort_buckets(jnp.asarray(buckets.keys), algorithm))
+    sorted_keys = np.asarray(sort_buckets(jnp.asarray(buckets.keys), algorithm,
+                                          counts=jnp.asarray(buckets.counts)))
     out = []
     for i in range(sorted_keys.shape[0]):
         cnt = int(buckets.counts[i])

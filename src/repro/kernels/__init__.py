@@ -1,17 +1,24 @@
 """Pallas TPU kernels for the compute hot spot the paper optimizes: the
 in-bucket comparator sort. ``ops`` is the public entry (``sort``/``sort_kv``
-auto-pick the engine; ``sort_rows`` is the raw single-block path); ``ref``
-the jnp oracle; per-kernel modules hold the pallas_call + BlockSpec
-definitions, including the cross-block merge used by ``core/blocksort``."""
+auto-pick the engine; ``sort_lex`` is the variadic lexicographic front-end;
+``segmented_sort`` the fused bucket pipeline; ``sort_rows`` the raw
+single-block path); ``ref`` the jnp oracle; per-kernel modules hold the
+pallas_call + BlockSpec definitions — all variadic over lex lane tuples via
+the shared comparator in ``lex.py`` — including the cross-block merge used
+by ``core/blocksort``."""
 
-from .merge_kernel import merge_adjacent_kv_pallas, merge_adjacent_pallas
-from .ops import (choose_plan, partition_rows, sort, sort_kv, sort_rows,
-                  sort_rows_kv)
+from .lex import lex_gt_lanes
+from .merge_kernel import (merge_adjacent_kv_pallas, merge_adjacent_lex_pallas,
+                           merge_adjacent_pallas)
+from .ops import (choose_plan, partition_rows, segmented_sort, sort, sort_kv,
+                  sort_lex, sort_rows, sort_rows_kv, sort_rows_lex)
 from .ref import partition_rows_ref, sort_rows_kv_ref, sort_rows_ref
 
 __all__ = [
-    "sort", "sort_kv", "choose_plan",
-    "sort_rows", "sort_rows_kv", "partition_rows",
+    "sort", "sort_kv", "sort_lex", "segmented_sort", "choose_plan",
+    "sort_rows", "sort_rows_kv", "sort_rows_lex", "partition_rows",
+    "lex_gt_lanes",
     "merge_adjacent_pallas", "merge_adjacent_kv_pallas",
+    "merge_adjacent_lex_pallas",
     "sort_rows_ref", "sort_rows_kv_ref", "partition_rows_ref",
 ]

@@ -5,6 +5,10 @@ sublane row) but O(log^2 cols) phases instead of cols. The XOR-partner
 shuffle is expressed as two lane ``roll``s + a bit-select, which lowers to
 cheap lane permutes on the VPU — no gather. cols must be a power of two
 (ops.py pads with the dtype's max sentinel).
+
+Variadic like the OETS kernel: ``bitonic_rows_lex_pallas(*arrs)`` sorts
+tuples of same-shape arrays by lexicographic compare (``kernels/lex.py``);
+key-only and key-value are the 1- and 2-tuple special cases.
 """
 
 from __future__ import annotations
@@ -17,52 +21,51 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-__all__ = ["bitonic_rows_kernel", "bitonic_rows_kv_kernel", "bitonic_rows_pallas", "bitonic_rows_kv_pallas"]
+from .lex import lex_gt_lanes, select_lanes
+
+__all__ = [
+    "bitonic_rows_lex_kernel",
+    "bitonic_rows_lex_pallas",
+    "bitonic_rows_pallas",
+    "bitonic_rows_kv_pallas",
+]
 
 
-def _stage(k, v, col, j, direction_asc):
+def _stage(arrs, col, j, direction_asc):
     """Compare-exchange with partner col ^ j; ascending where mask True."""
     bit_unset = (col & j) == 0
     # partner value: col+j for bit-unset lanes (roll left), col-j otherwise.
-    pk = jnp.where(bit_unset, jnp.roll(k, -j, axis=1), jnp.roll(k, j, axis=1))
-    if v is None:
-        gt = k > pk
-        lt = pk > k
-    else:
-        # (key, val) lex compare: keeps the padding pair (sentinel, sentinel)
-        # strictly maximal so it cannot displace a real payload when a real
-        # key equals the sentinel (long-distance swaps are not stable).
-        pv = jnp.where(bit_unset, jnp.roll(v, -j, axis=1), jnp.roll(v, j, axis=1))
-        gt = (k > pk) | ((k == pk) & (v > pv))
-        lt = (pk > k) | ((pk == k) & (pv > v))
+    partners = [
+        jnp.where(bit_unset, jnp.roll(a, -j, axis=1), jnp.roll(a, j, axis=1))
+        for a in arrs
+    ]
+    # Full-tuple lex compare (trailing payload lanes are the tie-break):
+    # keeps the all-sentinel padding tuple strictly maximal so it cannot
+    # displace a real payload when a real key equals the sentinel
+    # (long-distance swaps are not stable).
+    gt = lex_gt_lanes(arrs, partners)
+    lt = lex_gt_lanes(partners, arrs)
     swap = jnp.where(direction_asc, jnp.where(bit_unset, gt, lt),
                      jnp.where(bit_unset, lt, gt))
-    k = jnp.where(swap, pk, k)
-    if v is None:
-        return k, None
-    return k, jnp.where(swap, pv, v)
+    return select_lanes(swap, partners, arrs)
 
 
-def _network(k, v):
-    ncols = k.shape[1]
-    col = lax.broadcasted_iota(jnp.int32, k.shape, 1)
+def _network(arrs):
+    ncols = arrs[0].shape[1]
+    col = lax.broadcasted_iota(jnp.int32, arrs[0].shape, 1)
     for stage in range(1, int(math.log2(ncols)) + 1):
         kk = 1 << stage
         direction_asc = (col & kk) == 0
         for sub in reversed(range(stage)):
-            k, v = _stage(k, v, col, 1 << sub, direction_asc)
-    return k, v
+            arrs = _stage(arrs, col, 1 << sub, direction_asc)
+    return arrs
 
 
-def bitonic_rows_kernel(x_ref, o_ref):
-    k, _ = _network(x_ref[...], None)
-    o_ref[...] = k
-
-
-def bitonic_rows_kv_kernel(k_ref, v_ref, ok_ref, ov_ref):
-    k, v = _network(k_ref[...], v_ref[...])
-    ok_ref[...] = k
-    ov_ref[...] = v
+def bitonic_rows_lex_kernel(*refs):
+    n = len(refs) // 2
+    out = _network(tuple(r[...] for r in refs[:n]))
+    for r, o in zip(refs[n:], out):
+        r[...] = o
 
 
 def _row_block(rows: int) -> int:
@@ -70,41 +73,33 @@ def _row_block(rows: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "row_block"))
+def bitonic_rows_lex_pallas(*arrs, interpret: bool = False,
+                            row_block: int | None = None):
+    """Sort each row of the (R, C) tuple ``arrs`` ascending by lexicographic
+    tuple compare; C must be a power of two (pad in ops.py)."""
+    rows, cols = arrs[0].shape
+    if cols & (cols - 1):
+        raise ValueError("cols must be a power of two (pad in ops.py)")
+    rb = row_block or _row_block(rows)
+    spec = pl.BlockSpec((rb, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        bitonic_rows_lex_kernel,
+        out_shape=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrs),
+        grid=(rows // rb,),
+        in_specs=[spec] * len(arrs),
+        out_specs=tuple([spec] * len(arrs)),
+        interpret=interpret,
+    )(*arrs)
+
+
 def bitonic_rows_pallas(x, *, interpret: bool = False, row_block: int | None = None):
-    rows, cols = x.shape
-    if cols & (cols - 1):
-        raise ValueError("cols must be a power of two (pad in ops.py)")
-    rb = row_block or _row_block(rows)
-    return pl.pallas_call(
-        bitonic_rows_kernel,
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        grid=(rows // rb,),
-        in_specs=[pl.BlockSpec((rb, cols), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((rb, cols), lambda i: (i, 0)),
-        interpret=interpret,
-    )(x)
+    """Key-only special case."""
+    (out,) = bitonic_rows_lex_pallas(x, interpret=interpret, row_block=row_block)
+    return out
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "row_block"))
-def bitonic_rows_kv_pallas(keys, vals, *, interpret: bool = False, row_block: int | None = None):
-    rows, cols = keys.shape
-    if cols & (cols - 1):
-        raise ValueError("cols must be a power of two (pad in ops.py)")
-    rb = row_block or _row_block(rows)
-    return pl.pallas_call(
-        bitonic_rows_kv_kernel,
-        out_shape=(
-            jax.ShapeDtypeStruct(keys.shape, keys.dtype),
-            jax.ShapeDtypeStruct(vals.shape, vals.dtype),
-        ),
-        grid=(rows // rb,),
-        in_specs=[
-            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
-            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
-        ],
-        out_specs=(
-            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
-            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
-        ),
-        interpret=interpret,
-    )(keys, vals)
+def bitonic_rows_kv_pallas(keys, vals, *, interpret: bool = False,
+                           row_block: int | None = None):
+    """Key-value special case: the payload is the 2nd (tie-break) lane."""
+    return bitonic_rows_lex_pallas(keys, vals, interpret=interpret,
+                                   row_block=row_block)

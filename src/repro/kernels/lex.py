@@ -1,0 +1,58 @@
+"""Shared lexicographic comparator for the Pallas sort kernels.
+
+Every comparator engine in this package (OETS, bitonic, cross-block merge)
+reduces to the same primitive: compare two tuples of per-lane arrays
+lane-by-lane and swap *all* lanes together. The paper's multi-character
+words pack into multiple uint32 lanes (``core/packing.py``), so the
+compare-exchange must break ties lane-by-lane — exactly the ``(key, val)``
+compare the kv kernels already did, generalised to any number of lanes.
+
+Conventions shared by all engines:
+
+  * A sort operates on a tuple ``arrs = (k0, k1, ..., v...)`` of same-shape
+    2-D arrays. *Every* array participates in the compare, in tuple order:
+    leading entries are key lanes (most-significant first), trailing entries
+    are payloads that double as final tie-breaks. Payloads therefore ride
+    the exact permutation the keys choose, and the all-sentinel padding
+    tuple stays strictly lex-maximal unless a real element equals the
+    sentinel in **every** lane (see ``ops.sort_lex`` for the contract).
+  * Partner selection (roll / flip / XOR-shuffle) is applied identically to
+    every lane before comparing, so the helpers here take *lists* of arrays
+    and return element-wise boolean masks ready for ``jnp.where``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["lex_gt_lanes", "map_lanes", "select_lanes"]
+
+
+def lex_gt_lanes(a_lanes, b_lanes):
+    """Element-wise lexicographic ``a > b`` over parallel lane lists.
+
+    ``a_lanes``/``b_lanes``: equal-length sequences of same-shape arrays.
+    Lane 0 is most significant; later lanes break ties. Returns a boolean
+    array of the common shape. Dtypes may differ per lane (each lane
+    compares within its own dtype).
+    """
+    a0, b0 = a_lanes[0], b_lanes[0]
+    gt = a0 > b0
+    if len(a_lanes) == 1:
+        return gt
+    eq = a0 == b0
+    for a, b in zip(a_lanes[1:-1], b_lanes[1:-1]):
+        gt = gt | (eq & (a > b))
+        eq = eq & (a == b)
+    a, b = a_lanes[-1], b_lanes[-1]
+    return gt | (eq & (a > b))
+
+
+def map_lanes(fn, arrs):
+    """Apply ``fn`` (a partner shuffle: roll/flip/...) to every lane."""
+    return [fn(a) for a in arrs]
+
+
+def select_lanes(mask, on_true, on_false):
+    """``jnp.where`` broadcast across parallel lane lists (the swap step)."""
+    return [jnp.where(mask, t, f) for t, f in zip(on_true, on_false)]

@@ -15,6 +15,10 @@ XOR-partner stages (the same two-``roll`` bit-select as the bitonic sort
 kernel) finish each half. ``log2(2B)`` phases total, all lane-parallel VPU
 work, no gather/scatter. ``block`` must be a power of two (the orchestrator
 guarantees it).
+
+Variadic like the in-block kernels: ``merge_adjacent_lex_pallas(*arrs)``
+merges tuples of same-shape arrays by lexicographic compare
+(``kernels/lex.py``); key-only and key-value are the 1- and 2-tuple cases.
 """
 
 from __future__ import annotations
@@ -26,65 +30,52 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from .lex import lex_gt_lanes, map_lanes, select_lanes
+
 __all__ = [
-    "merge_rows_kernel",
-    "merge_rows_kv_kernel",
+    "merge_rows_lex_kernel",
+    "merge_adjacent_lex_pallas",
     "merge_adjacent_pallas",
     "merge_adjacent_kv_pallas",
 ]
 
 
-def _merge_network(k, v, block):
+def _merge_network(arrs, block):
     """Merge (RB, 2*block) rows whose halves are each sorted ascending."""
-    col = lax.broadcasted_iota(jnp.int32, k.shape, 1)
+    col = lax.broadcasted_iota(jnp.int32, arrs[0].shape, 1)
 
     # Reflected stage: compare lane i with lane (2B-1)-i, min to the low half.
-    # Turns asc++asc into low-half/high-half, each bitonic. With payloads the
-    # compare is (key, val) lex — see the kv note in bitonic_kernel._stage:
-    # padding pairs (sentinel, sentinel) stay strictly maximal, so they can
-    # never displace a real payload that shares the sentinel key.
-    pk = jnp.flip(k, axis=1)
+    # Turns asc++asc into low-half/high-half, each bitonic. The compare is
+    # full-tuple lex (see kernels/lex.py): trailing payload lanes break ties,
+    # so padding tuples (sentinel, ..., sentinel) stay strictly maximal and
+    # can never displace a real payload that shares the sentinel key.
+    partners = map_lanes(lambda a: jnp.flip(a, axis=1), arrs)
     lower = col < block
-    if v is None:
-        gt, lt = k > pk, pk > k
-    else:
-        pv = jnp.flip(v, axis=1)
-        gt = (k > pk) | ((k == pk) & (v > pv))
-        lt = (pk > k) | ((pk == k) & (pv > v))
-    swap = jnp.where(lower, gt, lt)
-    k = jnp.where(swap, pk, k)
-    if v is not None:
-        v = jnp.where(swap, pv, v)
+    swap = jnp.where(lower, lex_gt_lanes(arrs, partners),
+                     lex_gt_lanes(partners, arrs))
+    arrs = select_lanes(swap, partners, arrs)
 
     # XOR-partner clean-up stages, ascending everywhere. j < block, so the
     # rolls never cross the half boundary for any lane's true partner.
     j = block // 2
     while j >= 1:
         bit_unset = (col & j) == 0
-        pk = jnp.where(bit_unset, jnp.roll(k, -j, axis=1), jnp.roll(k, j, axis=1))
-        if v is None:
-            swap = jnp.where(bit_unset, k > pk, pk > k)
-        else:
-            pv = jnp.where(bit_unset, jnp.roll(v, -j, axis=1), jnp.roll(v, j, axis=1))
-            swap = jnp.where(bit_unset,
-                             (k > pk) | ((k == pk) & (v > pv)),
-                             (pk > k) | ((pk == k) & (pv > v)))
-        k = jnp.where(swap, pk, k)
-        if v is not None:
-            v = jnp.where(swap, pv, v)
+        partners = [
+            jnp.where(bit_unset, jnp.roll(a, -j, axis=1), jnp.roll(a, j, axis=1))
+            for a in arrs
+        ]
+        swap = jnp.where(bit_unset, lex_gt_lanes(arrs, partners),
+                         lex_gt_lanes(partners, arrs))
+        arrs = select_lanes(swap, partners, arrs)
         j //= 2
-    return k, v
+    return arrs
 
 
-def merge_rows_kernel(x_ref, o_ref, *, block):
-    k, _ = _merge_network(x_ref[...], None, block)
-    o_ref[...] = k
-
-
-def merge_rows_kv_kernel(k_ref, v_ref, ok_ref, ov_ref, *, block):
-    k, v = _merge_network(k_ref[...], v_ref[...], block)
-    ok_ref[...] = k
-    ov_ref[...] = v
+def merge_rows_lex_kernel(*refs, block):
+    n = len(refs) // 2
+    out = _merge_network(tuple(r[...] for r in refs[:n]), block)
+    for r, o in zip(refs[n:], out):
+        r[...] = o
 
 
 def _row_block(rows: int) -> int:
@@ -103,44 +94,36 @@ def _check(rows, cols, block, row_block):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret", "row_block"))
+def merge_adjacent_lex_pallas(*arrs, block: int, interpret: bool = False,
+                              row_block: int | None = None):
+    """One merge round over (R, npairs * 2 * block): pair p (cols
+    [2pB, 2pB+2B)) is merged in place, comparing full lexicographic tuples.
+    Each pair's halves must be sorted ascending; the caller slices the row to
+    select even or odd pairing. Returns the merged tuple."""
+    rows, cols = arrs[0].shape
+    rb, npairs = _check(rows, cols, block, row_block)
+    kern = functools.partial(merge_rows_lex_kernel, block=block)
+    spec = pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j))
+    return pl.pallas_call(
+        kern,
+        out_shape=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrs),
+        grid=(rows // rb, npairs),
+        in_specs=[spec] * len(arrs),
+        out_specs=tuple([spec] * len(arrs)),
+        interpret=interpret,
+    )(*arrs)
+
+
 def merge_adjacent_pallas(x, *, block: int, interpret: bool = False,
                           row_block: int | None = None):
-    """One merge round over (R, npairs * 2 * block): pair p (cols
-    [2pB, 2pB+2B)) is merged in place. Each pair's halves must be sorted
-    ascending; the caller slices the row to select even or odd pairing."""
-    rows, cols = x.shape
-    rb, npairs = _check(rows, cols, block, row_block)
-    kern = functools.partial(merge_rows_kernel, block=block)
-    return pl.pallas_call(
-        kern,
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        grid=(rows // rb, npairs),
-        in_specs=[pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j))],
-        out_specs=pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j)),
-        interpret=interpret,
-    )(x)
+    """Key-only special case."""
+    (out,) = merge_adjacent_lex_pallas(x, block=block, interpret=interpret,
+                                       row_block=row_block)
+    return out
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret", "row_block"))
 def merge_adjacent_kv_pallas(keys, vals, *, block: int, interpret: bool = False,
                              row_block: int | None = None):
-    rows, cols = keys.shape
-    rb, npairs = _check(rows, cols, block, row_block)
-    kern = functools.partial(merge_rows_kv_kernel, block=block)
-    return pl.pallas_call(
-        kern,
-        out_shape=(
-            jax.ShapeDtypeStruct(keys.shape, keys.dtype),
-            jax.ShapeDtypeStruct(vals.shape, vals.dtype),
-        ),
-        grid=(rows // rb, npairs),
-        in_specs=[
-            pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j)),
-            pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j)),
-        ],
-        out_specs=(
-            pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j)),
-            pl.BlockSpec((rb, 2 * block), lambda i, j: (i, j)),
-        ),
-        interpret=interpret,
-    )(keys, vals)
+    """Key-value special case: the payload is the 2nd (tie-break) lane."""
+    return merge_adjacent_lex_pallas(keys, vals, block=block,
+                                     interpret=interpret, row_block=row_block)

@@ -7,6 +7,11 @@ phase is two ``roll``s + compares + selects — fully lane-parallel on the VPU,
 no gather/scatter. ``cols`` phases sort every row; total compare count per
 row is cols*(cols-1)/2, the paper's n(n-1)/2.
 
+The engine is *variadic*: ``oets_rows_lex_pallas(*arrs)`` sorts a tuple of
+same-shape arrays as lexicographic tuples (lane 0 most significant, trailing
+arrays double as payload/tie-break — see ``kernels/lex.py``). The key-only
+and key-value entry points are the 1- and 2-tuple special cases.
+
 The kernel is written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
 validated on CPU with ``interpret=True``.
 """
@@ -20,58 +25,43 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-__all__ = ["oets_rows_kernel", "oets_rows_kv_kernel", "oets_rows_pallas", "oets_rows_kv_pallas"]
+from .lex import lex_gt_lanes, map_lanes
+
+__all__ = [
+    "oets_rows_lex_kernel",
+    "oets_rows_lex_pallas",
+    "oets_rows_pallas",
+    "oets_rows_kv_pallas",
+]
 
 
-def _phase(x, parity, col, ncols):
-    """One OETS phase on (R, C): pairs (j, j+1) for j % 2 == parity."""
-    nxt = jnp.roll(x, -1, axis=1)
-    prv = jnp.roll(x, 1, axis=1)
-    is_left = (col % 2 == parity) & (col < ncols - 1)
-    is_right = (col % 2 == 1 - parity) & (col >= 1)
-    swap_with_next = is_left & (x > nxt)
-    swap_with_prev = is_right & (prv > x)
-    return jnp.where(swap_with_next, nxt, jnp.where(swap_with_prev, prv, x))
+def oets_rows_lex_kernel(*refs):
+    """Variadic OETS: refs = n input refs then n output refs; every array
+    swaps on the full-tuple lexicographic compare."""
+    n = len(refs) // 2
+    arrs = tuple(r[...] for r in refs[:n])
+    ncols = arrs[0].shape[1]
+    col = lax.broadcasted_iota(jnp.int32, arrs[0].shape, 1)
 
-
-def oets_rows_kernel(x_ref, o_ref):
-    x = x_ref[...]
-    ncols = x.shape[1]
-    col = lax.broadcasted_iota(jnp.int32, x.shape, 1)
-
-    def body(p, x):
-        return _phase(x, p % 2, col, ncols)
-
-    o_ref[...] = lax.fori_loop(0, ncols, body, x)
-
-
-def oets_rows_kv_kernel(k_ref, v_ref, ok_ref, ov_ref):
-    k = k_ref[...]
-    v = v_ref[...]
-    ncols = k.shape[1]
-    col = lax.broadcasted_iota(jnp.int32, k.shape, 1)
-
-    def body(p, kv):
-        k, v = kv
+    def body(p, arrs):
         parity = p % 2
-        k_nxt = jnp.roll(k, -1, axis=1)
-        k_prv = jnp.roll(k, 1, axis=1)
-        v_nxt = jnp.roll(v, -1, axis=1)
-        v_prv = jnp.roll(v, 1, axis=1)
+        nxt = map_lanes(lambda a: jnp.roll(a, -1, axis=1), arrs)
+        prv = map_lanes(lambda a: jnp.roll(a, 1, axis=1), arrs)
         is_left = (col % 2 == parity) & (col < ncols - 1)
         is_right = (col % 2 == 1 - parity) & (col >= 1)
-        # (key, val) lex compare: the val tie-break keeps the padding pair
-        # (sentinel key, sentinel val) strictly maximal, so padding can never
-        # displace a real payload when real keys equal the sentinel.
-        swap_next = is_left & ((k > k_nxt) | ((k == k_nxt) & (v > v_nxt)))
-        swap_prev = is_right & ((k_prv > k) | ((k_prv == k) & (v_prv > v)))
-        k = jnp.where(swap_next, k_nxt, jnp.where(swap_prev, k_prv, k))
-        v = jnp.where(swap_next, v_nxt, jnp.where(swap_prev, v_prv, v))
-        return (k, v)
+        # Full-tuple lex compare: trailing (payload) lanes are the final
+        # tie-break, which keeps the all-sentinel padding tuple strictly
+        # maximal, so padding can never displace a real payload when real
+        # keys equal the sentinel.
+        swap_next = is_left & lex_gt_lanes(arrs, nxt)
+        swap_prev = is_right & lex_gt_lanes(prv, arrs)
+        return tuple(
+            jnp.where(swap_next, nx, jnp.where(swap_prev, pv, a))
+            for a, nx, pv in zip(arrs, nxt, prv))
 
-    k, v = lax.fori_loop(0, ncols, body, (k, v))
-    ok_ref[...] = k
-    ov_ref[...] = v
+    out = lax.fori_loop(0, ncols, body, arrs)
+    for r, o in zip(refs[n:], out):
+        r[...] = o
 
 
 def _row_block(rows: int) -> int:
@@ -80,39 +70,32 @@ def _row_block(rows: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "row_block"))
+def oets_rows_lex_pallas(*arrs, interpret: bool = False,
+                         row_block: int | None = None):
+    """Sort each row of the (R, C) tuple ``arrs`` ascending by lexicographic
+    tuple compare. R % row_block == 0, C lane-padded by the caller (ops.py).
+    Returns the sorted tuple."""
+    rows, cols = arrs[0].shape
+    rb = row_block or _row_block(rows)
+    spec = pl.BlockSpec((rb, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        oets_rows_lex_kernel,
+        out_shape=tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrs),
+        grid=(rows // rb,),
+        in_specs=[spec] * len(arrs),
+        out_specs=tuple([spec] * len(arrs)),
+        interpret=interpret,
+    )(*arrs)
+
+
 def oets_rows_pallas(x, *, interpret: bool = False, row_block: int | None = None):
-    """Sort each row of (R, C) ascending. R % row_block == 0, C lane-padded
-    by the caller (see ops.py)."""
-    rows, cols = x.shape
-    rb = row_block or _row_block(rows)
-    return pl.pallas_call(
-        oets_rows_kernel,
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        grid=(rows // rb,),
-        in_specs=[pl.BlockSpec((rb, cols), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((rb, cols), lambda i: (i, 0)),
-        interpret=interpret,
-    )(x)
+    """Key-only special case: sort each row of (R, C) ascending."""
+    (out,) = oets_rows_lex_pallas(x, interpret=interpret, row_block=row_block)
+    return out
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "row_block"))
-def oets_rows_kv_pallas(keys, vals, *, interpret: bool = False, row_block: int | None = None):
-    rows, cols = keys.shape
-    rb = row_block or _row_block(rows)
-    return pl.pallas_call(
-        oets_rows_kv_kernel,
-        out_shape=(
-            jax.ShapeDtypeStruct(keys.shape, keys.dtype),
-            jax.ShapeDtypeStruct(vals.shape, vals.dtype),
-        ),
-        grid=(rows // rb,),
-        in_specs=[
-            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
-            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
-        ],
-        out_specs=(
-            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
-            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
-        ),
-        interpret=interpret,
-    )(keys, vals)
+def oets_rows_kv_pallas(keys, vals, *, interpret: bool = False,
+                        row_block: int | None = None):
+    """Key-value special case: the payload is the 2nd (tie-break) lane."""
+    return oets_rows_lex_pallas(keys, vals, interpret=interpret,
+                                row_block=row_block)

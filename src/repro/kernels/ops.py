@@ -8,8 +8,17 @@ Entry points:
     wider the hierarchical block sort (``core/blocksort.py`` — block-local
     sort + cross-block odd-even merge rounds). ``algorithm``/``block_size``
     override the model.
-  * ``sort_rows`` / ``sort_rows_kv`` — the single-block row kernels
-    (every row padded to one VMEM block; width is bounded by the tile).
+  * ``sort_lex(keys_lanes, vals=None)`` — the variadic lexicographic
+    front-end: sorts tuples of same-shape arrays lane-by-lane (lane 0 most
+    significant), the multi-character word keys of the paper's pipeline
+    (``core/packing.py``). Same engine tiers as ``sort``.
+  * ``segmented_sort(keys, counts)`` — the fused bucket pipeline: one
+    batched lex kernel launch over a whole (num_buckets, capacity, lanes)
+    bucket tensor with per-bucket count masking (``core/bucketing``'s
+    'pallas' path).
+  * ``sort_rows`` / ``sort_rows_kv`` / ``sort_rows_lex`` — the single-block
+    row kernels (every row padded to one VMEM block; width bounded by the
+    tile).
   * ``partition_rows`` — splitter bucketing (the paper's distribute step).
 
 These wrappers handle everything the raw kernels require of their caller:
@@ -17,6 +26,18 @@ lane padding (cols -> multiple of 128 for OETS, next pow2 >= 128 for
 bitonic) with per-dtype +inf/max sentinels so padding sinks to the row tail,
 sublane padding (rows -> multiple of the 8-row block), and automatic
 ``interpret=True`` on CPU (this container), compiled on TPU.
+
+Sentinel / dtype contract: padding uses the dtype's maximum (``iinfo.max``
+for ints — including signed, where it is the positive max, never -1 — and
+``+inf`` for floats). Real elements *equal* to the sentinel still sort
+correctly: key-only outputs are sliced back to the real width, and kv/lex
+payload lanes participate in the compare as final tie-breaks, keeping the
+all-sentinel padding tuple strictly maximal. float32 NaN: the comparator
+networks are swap-based, so the output is always a *permutation* of the
+input, but NaN compares false against everything and never moves — elements
+on opposite sides of a NaN may stay unsorted relative to each other (unlike
+``jnp.sort``, which sinks NaNs to the tail). Callers that may see NaNs
+should quarantine them first; ``tests/test_ops_dtypes.py`` pins this.
 """
 
 from __future__ import annotations
@@ -24,12 +45,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .bitonic_kernel import bitonic_rows_kv_pallas, bitonic_rows_pallas
-from .oets_kernel import oets_rows_kv_pallas, oets_rows_pallas
+from .bitonic_kernel import bitonic_rows_lex_pallas
+from .oets_kernel import oets_rows_lex_pallas
 from .partition_kernel import partition_rows_pallas
 
-__all__ = ["sort", "sort_kv", "choose_plan", "sort_rows", "sort_rows_kv",
-           "partition_rows"]
+__all__ = ["sort", "sort_kv", "sort_lex", "segmented_sort", "choose_plan",
+           "sort_rows", "sort_rows_kv", "sort_rows_lex", "partition_rows"]
 
 _LANES = 128
 _SUBLANES = 8
@@ -88,7 +109,9 @@ def choose_plan(cols: int, algorithm: str = "auto",
     ``oets`` (cols phases) only pays off within one lane tile where its
     padding is tightest; ``bitonic`` (log^2 phases, pow2 padding) up to one
     VMEM block; ``blocksort`` beyond, where padding to a single giant block
-    would explode phase count and VMEM. Explicit ``algorithm`` overrides."""
+    would explode phase count and VMEM. The model is width-driven only —
+    lex lane count scales every engine's compare cost by the same factor,
+    so the tier boundaries do not move. Explicit ``algorithm`` overrides."""
     if algorithm != "auto":
         return algorithm, block_size
     if cols <= _LANES:
@@ -105,35 +128,91 @@ def sort(x, algorithm: str = "auto", block_size: int | None = None,
     ``algorithm``: 'auto' (cost model), 'oets', 'bitonic', or 'blocksort'.
     ``block_size``: blocksort block override (power of two >= 128).
     """
-    x2, vec = _as_rows(x)
-    if 0 in x2.shape:
-        return x
-    algo, block = choose_plan(x2.shape[1], algorithm, block_size)
-    if algo == "blocksort":
-        from ..core.blocksort import block_sort  # lazy: core imports kernels
-        out = block_sort(x2, block_size=block, interpret=interpret)
-    else:
-        out = sort_rows(x2, algorithm=algo, interpret=interpret)
-    return out[0] if vec else out
+    (out,) = sort_lex((x,), algorithm=algorithm, block_size=block_size,
+                      interpret=interpret)
+    return out
 
 
 def sort_kv(keys, vals, algorithm: str = "auto",
             block_size: int | None = None, interpret: bool | None = None):
     """Key-value counterpart of :func:`sort`; ``vals`` rides the keys'
-    permutation (equal keys may permute their payloads)."""
+    permutation as the final lex tie-break (equal (key, val) pairs are
+    interchangeable)."""
     if keys.shape != vals.shape:
         raise ValueError("keys and vals must have identical shapes")
-    k2, vec = _as_rows(keys)
-    v2, _ = _as_rows(vals)
-    if 0 in k2.shape:
-        return keys, vals
-    algo, block = choose_plan(k2.shape[1], algorithm, block_size)
-    if algo == "blocksort":
-        from ..core.blocksort import block_sort_kv
-        ok, ov = block_sort_kv(k2, v2, block_size=block, interpret=interpret)
+    lanes, ov = sort_lex((keys,), vals=vals, algorithm=algorithm,
+                         block_size=block_size, interpret=interpret)
+    return lanes[0], ov
+
+
+def sort_lex(keys_lanes, vals=None, algorithm: str = "auto",
+             block_size: int | None = None, interpret: bool | None = None):
+    """Lexicographic sort: ``keys_lanes`` is a sequence of same-shape 1-D or
+    (rows, cols) arrays, compared element-wise lane-by-lane (lane 0 most
+    significant — the lane-packing contract of ``core/packing.py``). All
+    lanes and the optional ``vals`` payload travel through one permutation;
+    ``vals`` doubles as the final tie-break lane.
+
+    Returns a tuple of sorted lanes, or ``(lanes_tuple, sorted_vals)`` when
+    ``vals`` is given. Engine tiers are the same as :func:`sort`
+    (``choose_plan`` on the row width); every tier — including the
+    multi-block blocksort — runs the full tuple through one Pallas engine.
+    """
+    lanes = list(keys_lanes)
+    if not lanes:
+        raise ValueError("need at least one key lane")
+    arrs = lanes + ([vals] if vals is not None else [])
+    if any(a.shape != arrs[0].shape for a in arrs[1:]):
+        raise ValueError("all lanes (and vals) must have identical shapes")
+    views = [_as_rows(a) for a in arrs]
+    vec = views[0][1]
+    a2 = [v[0] for v in views]
+    if 0 in a2[0].shape:
+        out = tuple(arrs)
     else:
-        ok, ov = sort_rows_kv(k2, v2, algorithm=algo, interpret=interpret)
-    return (ok[0], ov[0]) if vec else (ok, ov)
+        algo, block = choose_plan(a2[0].shape[1], algorithm, block_size)
+        if algo == "blocksort":
+            from ..core.blocksort import block_sort_lex  # lazy: core imports kernels
+            out = block_sort_lex(tuple(a2), block_size=block,
+                                 interpret=interpret)
+        else:
+            out = tuple(sort_rows_lex(a2, algorithm=algo, interpret=interpret))
+        if vec:
+            out = tuple(o[0] for o in out)
+    if vals is None:
+        return out
+    return out[:-1], out[-1]
+
+
+def segmented_sort(keys, counts=None, algorithm: str = "auto",
+                   block_size: int | None = None,
+                   interpret: bool | None = None):
+    """Fused on-device segmented sort over the paper's bucket tensor.
+
+    ``keys``: (num_buckets, capacity, lanes) — the 3-D array of the paper's
+    distribute step (``core/bucketing.Buckets.keys``), lane-major
+    significance. ``counts``: (num_buckets,) real slots per bucket; slots at
+    index >= count are masked to the dtype sentinel so they sink to every
+    bucket's tail (pass ``None`` when the tensor is already sentinel-padded).
+
+    One batched lex kernel launch sorts *all* buckets: rows = buckets,
+    cols = capacity, one comparator lane per packed key lane — any lane
+    count and any capacity (the blocksort tier included). Returns the sorted
+    (num_buckets, capacity, lanes) tensor.
+    """
+    if keys.ndim != 3:
+        raise ValueError("keys must be (num_buckets, capacity, lanes)")
+    if 0 in keys.shape:
+        return keys
+    n_lanes = keys.shape[2]
+    if counts is not None:
+        slot = jnp.arange(keys.shape[1], dtype=jnp.int32)
+        mask = slot[None, :] >= jnp.asarray(counts, jnp.int32)[:, None]
+        keys = jnp.where(mask[..., None], _sentinel(keys.dtype), keys)
+    sorted_lanes = sort_lex([keys[..., l] for l in range(n_lanes)],
+                            algorithm=algorithm, block_size=block_size,
+                            interpret=interpret)
+    return jnp.stack(sorted_lanes, axis=-1)
 
 
 def sort_rows(x, algorithm: str = "oets", interpret: bool | None = None):
@@ -142,43 +221,41 @@ def sort_rows(x, algorithm: str = "oets", interpret: bool | None = None):
 
     ``algorithm``: 'oets' (paper-faithful) or 'bitonic' (beyond-paper).
     """
-    interpret = _auto_interpret(interpret)
-    rows, cols = x.shape
-    if algorithm == "oets":
-        target = max(_LANES, -(-cols // _LANES) * _LANES)
-        fn = oets_rows_pallas
-    elif algorithm == "bitonic":
-        target = max(_LANES, _next_pow2(cols))
-        fn = bitonic_rows_pallas
-    else:
-        raise ValueError(f"unknown algorithm {algorithm!r}")
-    xp = _pad_rows(_pad_cols(x, target), _SUBLANES)
-    out = fn(xp, interpret=interpret)
-    return out[:rows, :cols]
+    (out,) = sort_rows_lex([x], algorithm=algorithm, interpret=interpret)
+    return out
 
 
 def sort_rows_kv(keys, vals, algorithm: str = "oets", interpret: bool | None = None):
     """Row-wise key-value sort; ``vals`` must share ``keys``' shape/rows."""
     if keys.shape != vals.shape:
         raise ValueError("keys and vals must have identical shapes")
+    ok, ov = sort_rows_lex([keys, vals], algorithm=algorithm,
+                           interpret=interpret)
+    return ok, ov
+
+
+def sort_rows_lex(arrs, algorithm: str = "oets", interpret: bool | None = None):
+    """Row-wise lexicographic sort of a list of same-shape (rows, cols)
+    arrays through a single-block kernel; returns the sorted list.
+
+    Every array pads with its *own* dtype sentinel on purpose: the kernels
+    compare full tuples lexicographically, so the all-sentinel padding tuple
+    stays strictly maximal and can never displace a real element even when
+    real leading lanes equal the sentinel. Do not "simplify" to zero padding.
+    """
     interpret = _auto_interpret(interpret)
-    rows, cols = keys.shape
+    rows, cols = arrs[0].shape
     if algorithm == "oets":
         target = max(_LANES, -(-cols // _LANES) * _LANES)
-        fn = oets_rows_kv_pallas
+        fn = oets_rows_lex_pallas
     elif algorithm == "bitonic":
         target = max(_LANES, _next_pow2(cols))
-        fn = bitonic_rows_kv_pallas
+        fn = bitonic_rows_lex_pallas
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
-    kp = _pad_rows(_pad_cols(keys, target), _SUBLANES)
-    # vals pad with their own sentinel on purpose: the kernels compare
-    # (key, val) lexicographically, so the padding pair (max, max) stays
-    # strictly maximal and can never displace a real payload even when real
-    # keys equal the key sentinel. Do not "simplify" to zero padding.
-    vp = _pad_rows(_pad_cols(vals, target), _SUBLANES)
-    ok, ov = fn(kp, vp, interpret=interpret)
-    return ok[:rows, :cols], ov[:rows, :cols]
+    padded = [_pad_rows(_pad_cols(a, target), _SUBLANES) for a in arrs]
+    out = fn(*padded, interpret=interpret)
+    return [o[:rows, :cols] for o in out]
 
 
 def partition_rows(keys, splitters, interpret: bool | None = None):

@@ -4,10 +4,11 @@ serving layer.
 Identical statistic to the paper's pre-processing: requests are distributed
 into buckets by prompt length; each bucket forms dense batches that decode
 together (padding only up to the bucket bound, not the global max). Within a
-bucket, requests are additionally ordered by exact prompt length through the
-unified kernel sort front-end (``repro.kernels.ops.sort_kv``), so each
-fixed-size chunk groups near-equal lengths and intra-batch padding shrinks
-further. The measured padding-waste reduction vs naive FIFO batching is the
+bucket, requests are ordered length-then-alphabetic through the lexicographic
+kernel front-end (``repro.kernels.ops.sort_lex``: length lane + prompt-prefix
+token lanes), so each fixed-size chunk groups near-equal lengths — shrinking
+intra-batch padding — and equal-length prompts admit in token order for
+prefix locality. The measured padding-waste reduction vs naive FIFO batching is the
 serving benchmark (benchmarks/bench_serving.py).
 """
 
@@ -20,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..data.bucketing import plan_buckets
-from ..kernels.ops import sort_kv
+from ..kernels.ops import sort_lex
 from .engine import Engine, GenerationResult
 
 __all__ = ["Request", "BucketedScheduler"]
@@ -72,23 +73,41 @@ class BucketedScheduler:
                     results.append(GenerationResult(r.request_id, toks[: r.max_new]))
         return results
 
+    # Prefix tokens folded into the admission key after the length lane:
+    # enough to group shared prefixes inside one equal-length run, few enough
+    # to keep the lex compare a handful of VPU ops per phase.
+    _PREFIX_LANES = 2
+
     @staticmethod
     def _order_by_length(rs: List[Request]) -> List[Request]:
-        """Batch ordering via the kernel sort: key = prompt length, payload =
-        request index (the paper's sort applied to the admission queue).
+        """Length-then-alphabetic batch ordering via the lexicographic kernel
+        sort: lane 0 = prompt length, lanes 1..k = the first prompt tokens,
+        payload = request index (the paper's shortlex order applied to the
+        admission queue). Equal-length prompts thus admit ordered by their
+        first _PREFIX_LANES tokens, so chunks group shared prefixes
+        adjacently (prefix-cache locality); prompts identical through those
+        tokens fall back to queue order (the index payload tie-break).
 
         The queue is padded to a power-of-two length so a long-running server
         compiles O(log max_queue) kernel shapes rather than one per distinct
         request count (jit caches are shape-keyed); padding sorts to the tail
-        (sentinel keys) and is sliced off."""
+        (all-sentinel lex tuples) and is sliced off."""
         n = len(rs)
         if n < 2:
             return rs
         n_pad = max(128, 1 << (n - 1).bit_length())
-        lens = np.full((n_pad,), np.iinfo(np.int32).max, np.int32)
-        lens[:n] = [len(r.prompt) for r in rs]
+        maxi = np.iinfo(np.int32).max
+        lanes = np.full((1 + BucketedScheduler._PREFIX_LANES, n_pad), maxi,
+                        np.int32)
+        lanes[0, :n] = [len(r.prompt) for r in rs]
+        for k in range(BucketedScheduler._PREFIX_LANES):
+            # -1 for absent positions: shorter prompts already order first on
+            # the length lane, so this only pins a total order deterministically
+            lanes[1 + k, :n] = [r.prompt[k] if len(r.prompt) > k else -1
+                                for r in rs]
         idx = np.arange(n_pad, dtype=np.int32)
-        _, perm = sort_kv(jnp.asarray(lens), jnp.asarray(idx))
+        _, perm = sort_lex([jnp.asarray(l) for l in lanes],
+                           vals=jnp.asarray(idx))
         return [rs[int(j)] for j in np.asarray(perm)[:n]]
 
     @staticmethod

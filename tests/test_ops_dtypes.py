@@ -1,0 +1,93 @@
+"""Dtype coverage for the unified ``kernels.ops`` front-end.
+
+Pins the sentinel / dtype contract documented in ``ops.py``: signed ints use
+the *positive* max as the padding sentinel, unsigned values at UINT32_MAX
+collide with the sentinel yet still sort correctly, floats handle ±inf, and
+NaN behavior (permutation-only, no total order) is pinned explicitly.
+
+Widths stay inside the single-tile OETS tier — dtype handling is identical
+across engines (same padding helpers, same comparator), and the cross-engine
+sweeps live in test_differential / test_blocksort.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import sort, sort_kv
+from repro.kernels.ops import _sentinel
+
+I32_MIN, I32_MAX = np.iinfo(np.int32).min, np.iinfo(np.int32).max
+U32_MAX = np.iinfo(np.uint32).max
+
+
+def test_sentinel_signed_dtypes():
+    """Regression: the signed sentinel is the positive dtype max — an
+    unsigned-style all-ones pattern would be -1 and sort padding to the
+    *front*, corrupting every padded row."""
+    s32 = np.asarray(_sentinel(jnp.int32))
+    assert s32 == I32_MAX and s32 > 0
+    s16 = np.asarray(_sentinel(jnp.int16))
+    assert s16 == np.iinfo(np.int16).max and s16 > 0
+    assert np.asarray(_sentinel(jnp.uint32)) == U32_MAX
+    assert np.asarray(_sentinel(jnp.float32)) == np.inf
+
+
+def test_sort_int32_negative_values():
+    rng = np.random.default_rng(0)
+    x = rng.integers(-10_000, 10_000, (3, 100)).astype(np.int32)
+    x[0, :5] = [I32_MIN, -1, 0, 1, I32_MAX]
+    out = sort(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(out), np.sort(x, axis=-1))
+
+
+def test_sort_uint32_values_at_sentinel():
+    """Real UINT32_MAX elements collide with the padding sentinel; the slice
+    back to the real width must still return every one of them."""
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 100, (3, 100)).astype(np.uint32)
+    x[:, ::7] = U32_MAX
+    out = sort(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(out), np.sort(x, axis=-1))
+
+
+def test_sort_kv_uint32_sentinel_keys_keep_payloads():
+    k = np.full((100,), U32_MAX, np.uint32)
+    k[:50] = np.arange(50, dtype=np.uint32)
+    v = np.arange(100, dtype=np.uint32)
+    ok, ov = sort_kv(jnp.asarray(k), jnp.asarray(v))
+    assert sorted(zip(k.tolist(), v.tolist())) == \
+        list(zip(np.asarray(ok).tolist(), np.asarray(ov).tolist()))
+
+
+def test_sort_float32_infinities():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(3, 100)).astype(np.float32)
+    x[:, ::9] = np.inf
+    x[:, 1::9] = -np.inf
+    out = sort(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(out), np.sort(x, axis=-1))
+
+
+def test_sort_float32_nan_is_permutation_only():
+    """Pinned NaN contract (see ops.py): comparator networks are swap-based,
+    so the output is always a permutation of the input, but NaN compares
+    false against everything and acts as a barrier — the result is NOT
+    guaranteed sorted (unlike jnp.sort, which sinks NaNs to the tail).
+    Callers must quarantine NaNs before sorting."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(64,)).astype(np.float32)
+    x[10] = np.nan
+    out = np.asarray(sort(jnp.asarray(x)))
+    # multiset preserved, NaN count included
+    np.testing.assert_array_equal(np.sort(out), np.sort(x))
+    assert np.isnan(out).sum() == 1
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.float32])
+def test_sort_all_sentinel_rows(dtype):
+    """A row made entirely of sentinel values round-trips unchanged."""
+    fill = np.inf if dtype == np.float32 else np.iinfo(dtype).max
+    x = np.full((2, 64), fill, dtype)
+    out = sort(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(out), x)

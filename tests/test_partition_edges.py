@@ -1,0 +1,93 @@
+"""Edge cases for ``kernels.ops.partition_rows`` (the paper's distribute
+step): degenerate splitter sets, boundary widths, and the padded-row /
+padded-col histogram correction pinned from both sides — against the jnp
+oracle AND the invariants (non-negative counts, counts sum to cols)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import partition_rows, partition_rows_ref
+
+
+def _check_against_oracle(x, spl):
+    bid, cnt = partition_rows(x, spl)
+    rbid, rcnt = partition_rows_ref(x, spl)
+    np.testing.assert_array_equal(np.asarray(bid), np.asarray(rbid))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(rcnt))
+    cnt = np.asarray(cnt)
+    assert (cnt >= 0).all()
+    assert (cnt.sum(axis=1) == x.shape[1]).all()
+    return np.asarray(bid), cnt
+
+
+def test_zero_splitters_single_bucket():
+    """No splitters -> one bucket holding every element (and the padded-col
+    correction must target that only bucket without going negative)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-100, 100, (3, 130)).astype(np.int32))
+    spl = jnp.zeros((0,), jnp.int32)
+    bid, cnt = _check_against_oracle(x, spl)
+    assert (bid == 0).all()
+    assert (cnt[:, 0] == 130).all()
+
+
+def test_all_equal_keys():
+    """Every key identical: all elements land in one bucket, boundary rule
+    pinned — bucket id counts splitters <= key, so key == splitter goes to
+    the *right* bucket."""
+    x = jnp.full((2, 96), 50, jnp.int32)
+    spl = jnp.asarray(np.array([10, 50, 90], np.int32))
+    bid, cnt = _check_against_oracle(x, spl)
+    assert (bid == 2).all()          # splitters 10 and 50 are <= 50
+    assert (cnt[:, 2] == 96).all()
+
+
+def test_cols_exactly_at_lane_boundary():
+    """cols == 128: no padded columns, so the top-bucket correction must be
+    a no-op (pinning the correction from the zero side)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(0, 1000, (4, 128)).astype(np.int32))
+    spl = jnp.asarray(np.array([250, 500, 750], np.int32))
+    _check_against_oracle(x, spl)
+
+
+def test_padded_cols_top_bucket_correction():
+    """cols padded 130 -> 256: the 126 sentinel columns land in the top
+    bucket and must be subtracted there — and only on real rows. Keys are
+    drawn *above* every splitter so the top bucket is also the busiest
+    (maximal sensitivity to an over-subtraction)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.integers(900, 1000, (5, 130)).astype(np.int32))
+    spl = jnp.asarray(np.array([100, 200], np.int32))
+    bid, cnt = _check_against_oracle(x, spl)
+    assert (cnt[:, 2] == 130).all()   # every real element, no sentinel residue
+
+
+def test_padded_rows_sliced_off():
+    """rows padded 5 -> 8: returned shapes carry only real rows, and real
+    rows' histograms are unaffected by the zero-filled padding rows (which
+    land in bucket 0 inside the kernel, not the corrected top bucket)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(0, 100, (5, 130)).astype(np.int32))
+    spl = jnp.asarray(np.array([25, 50, 75], np.int32))
+    bid, cnt = _check_against_oracle(x, spl)
+    assert bid.shape == (5, 130) and cnt.shape == (5, 4)
+
+
+def test_single_row_single_col():
+    x = jnp.asarray(np.array([[42]], np.int32))
+    spl = jnp.asarray(np.array([42], np.int32))
+    bid, cnt = _check_against_oracle(x, spl)
+    assert bid[0, 0] == 1             # 42 <= 42: right bucket
+    assert cnt[0].tolist() == [0, 1]
+
+
+@pytest.mark.parametrize("n_spl", [1, 127])
+def test_splitter_count_extremes(n_spl):
+    """1 splitter and the 127-splitter lane-tile bound."""
+    rng = np.random.default_rng(n_spl)
+    x = jnp.asarray(rng.integers(0, 10_000, (3, 128)).astype(np.int32))
+    spl = jnp.asarray(np.sort(rng.choice(10_000, n_spl, replace=False))
+                      .astype(np.int32))
+    _check_against_oracle(x, spl)

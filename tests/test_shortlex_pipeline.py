@@ -1,0 +1,96 @@
+"""End-to-end shortlex pipeline: ``bucketed_sort_words`` through the fused
+Pallas segmented path (the paper's distribute -> parallel in-bucket sort ->
+concatenate, fully on-device).
+
+Acceptance pin for the lex engine: buckets whose words pack to MORE than one
+uint32 lane (> 4 chars) must run through the Pallas lexicographic kernels —
+``sort_buckets(algorithm='pallas')`` no longer falls back to ``lax.sort``
+for multi-lane keys — and the concatenated output must be exact shortlex
+(length-major, then byte-wise alphabetic) order.
+"""
+
+from unittest import mock
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import bucketed_sort_words, bucketize_words, sort_buckets
+from repro.kernels import segmented_sort
+
+
+def _shortlex(words):
+    return sorted(words, key=lambda w: (len(w.encode()), w.encode()))
+
+
+def test_multilane_words_sort_shortlex_via_pallas():
+    """>4-char words (2-3 uint32 lanes) through algorithm='pallas'."""
+    words = ["bananas", "apple", "cherry", "banana", "apples", "dates",
+             "cherries", "avocado", "fig", "figs", "grapefruit", "apple"]
+    b = bucketize_words(words)
+    assert b.keys.shape[-1] > 1  # really multi-lane
+    got = bucketed_sort_words(words, algorithm="pallas")
+    assert got == _shortlex(words)
+
+
+def test_pallas_path_never_calls_lax_sort():
+    """The 'pallas' bucket path must stay on the Pallas lex engine: patching
+    out jax.lax.sort proves no XLA-sort fallback runs for multi-lane keys."""
+    words = ["serpent", "sorbet", "sierra", "samba", "sonata", "sunset"]
+    b = bucketize_words(words)
+    assert b.keys.shape[-1] > 1
+    with mock.patch("jax.lax.sort",
+                    side_effect=AssertionError("lax.sort fallback used")):
+        sorted_keys = sort_buckets(jnp.asarray(b.keys), "pallas",
+                                   counts=jnp.asarray(b.counts))
+    ref = np.asarray(sort_buckets(jnp.asarray(b.keys), "oets"))
+    np.testing.assert_array_equal(np.asarray(sorted_keys), ref)
+
+
+def test_lane_boundary_lengths():
+    """Lengths straddling the 4/8/16-char lane boundaries, duplicates, and
+    the empty string, in one pipeline pass."""
+    words = ["", "abcd", "abcde", "abcdefgh", "abcdefghi", "abcd", "",
+             "abcdefghijklmnop", "abcdefghijklmnopq", "zzzz", "aaaa",
+             "abcdefg", "abcdefgz", "a"]
+    got = bucketed_sort_words(words, algorithm="pallas")
+    assert got == _shortlex(words)
+
+
+def test_segmented_sort_matches_per_bucket_oracle():
+    """segmented_sort == per-bucket tuple sort, with count masking: slots at
+    index >= count must come back as pure sentinel rows."""
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 6, (5, 40, 3), dtype=np.int64).astype(np.uint32)
+    counts = np.array([40, 0, 7, 23, 40], np.int32)
+    out = np.asarray(segmented_sort(jnp.asarray(keys), jnp.asarray(counts)))
+    for b, c in enumerate(counts):
+        want = sorted(tuple(t) for t in keys[b, :c])
+        assert [tuple(t) for t in out[b, :c]] == want
+        assert (out[b, c:] == np.iinfo(np.uint32).max).all()
+
+
+def test_empty_and_single_word():
+    assert bucketed_sort_words([], algorithm="pallas") == []
+    assert bucketed_sort_words(["only"], algorithm="pallas") == ["only"]
+
+
+words_strategy = st.lists(
+    st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126),
+            min_size=0, max_size=18),
+    min_size=0, max_size=40)
+
+
+@pytest.mark.slow
+@settings(max_examples=20, deadline=None)
+@given(words_strategy)
+def test_shortlex_roundtrip_property(ws):
+    """Round-trip random word lists (empty strings, duplicates, lengths
+    straddling the 4/8/16-char lane boundaries) against the python oracle
+    sorted(words, key=lambda w: (len(w), w))."""
+    ws = [w.encode()[:18].decode(errors="ignore").replace("\x00", "")
+          for w in ws]
+    got = bucketed_sort_words(ws, algorithm="pallas")
+    assert got == _shortlex(ws)
