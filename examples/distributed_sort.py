@@ -1,6 +1,8 @@
-"""The paper's algorithm at mesh scale: odd-even block sort across 8
-devices (bubble sort over the interconnect), plus the lexicographic kernel
-front-end on wide keys (the paper's multi-character words as packed lanes).
+"""The paper's algorithm at mesh scale: the multi-engine distributed sort
+subsystem (``core/distributed``) on 8 fake host devices — odd-even block
+sort (bubble sort over the interconnect), splitter sample sort (the paper's
+distribute step as ONE all_to_all), and the multi-host word pipeline:
+bucketize by length -> shard -> distributed lex sort -> shortlex concat.
 
     PYTHONPATH=src python examples/distributed_sort.py
 
@@ -16,13 +18,75 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from repro.parallel.compat import AxisType, make_mesh  # noqa: E402
 
-from repro.core.distributed import distributed_sort  # noqa: E402
+from repro.core import packing  # noqa: E402
+from repro.core.distributed import (choose_engine, distributed_sort,  # noqa: E402
+                                    distributed_sort_lex)
 from repro.kernels import sort_lex  # noqa: E402
 
 
+def engines_demo(mesh):
+    """Both mesh engines against the jnp.sort oracle — including a
+    non-divisible size (8 devices, n % 8 != 0: pad-and-slice, no error)."""
+    rng = np.random.default_rng(0)
+    for n in (8 * 4096, 10_001):
+        x = jnp.asarray(rng.integers(0, 10**9, n), dtype=jnp.int32)
+        want = np.sort(np.asarray(x))
+        for merge in ("resort", "bitonic", "take"):
+            out = distributed_sort(x, mesh, engine="odd_even", merge=merge)
+            ok = bool((np.asarray(out) == want).all())
+            print(f"odd-even  n={n:7d} merge={merge:8s}: "
+                  f"{'OK' if ok else 'FAIL'}")
+            assert ok
+        out = distributed_sort(x, mesh, engine="sample")
+        ok = bool((np.asarray(out) == want).all())
+        print(f"sample    n={n:7d} one all_to_all  : {'OK' if ok else 'FAIL'}")
+        assert ok
+    print(f"choose_engine: P=2 -> {choose_engine(2, 4096)}, "
+          f"P=8 -> {choose_engine(8, 4096)}")
+
+
+def word_pipeline_demo(mesh):
+    """The paper's whole pipeline across the mesh: words bucketize by length
+    (the length becomes lex lane 0), pack into big-endian uint32 lanes
+    (``core/packing``), shard over 8 devices, and ONE distributed lex sort
+    returns shortlex order — distribute-into-sub-arrays and in-bucket
+    alphabetic sort collapse into a single mesh-wide splitter exchange."""
+    rng = np.random.default_rng(7)
+    alphabet = np.array(list("abcdefghij"))
+    words = ["".join(rng.choice(alphabet, rng.integers(1, 8)))
+             for _ in range(1003)]  # non-divisible on purpose
+
+    packed = packing.pack_words(words)             # (n, lanes) uint32
+    length = jnp.asarray([len(w) for w in words], jnp.int32)
+    lanes = [length] + [jnp.asarray(packed[:, l])
+                        for l in range(packed.shape[1])]
+    out = distributed_sort_lex(lanes, mesh, engine="sample")
+    got = packing.unpack_words(np.stack([np.asarray(o) for o in out[1:]],
+                                        axis=1))
+    want = sorted(words, key=lambda w: (len(w), w))
+    ok = got == want
+    print(f"word pipeline: {len(words)} words -> distributed shortlex over "
+          f"8 devices: {'OK' if ok else 'FAIL'}")
+    assert ok
+
+
+def kv_demo(mesh):
+    """Payload lanes ride the splitter exchange: sort (key, row-id) pairs so
+    the permutation can gather any satellite data afterwards."""
+    rng = np.random.default_rng(3)
+    k = jnp.asarray(rng.integers(0, 50, 999), dtype=jnp.int32)
+    v = jnp.arange(999, dtype=jnp.int32)
+    (ok_,), ov = distributed_sort_lex((k,), mesh, vals=v, engine="sample")
+    good = sorted(zip(np.asarray(k).tolist(), np.asarray(v).tolist())) == \
+        list(zip(np.asarray(ok_).tolist(), np.asarray(ov).tolist()))
+    print(f"kv payload through the exchange protocol: "
+          f"{'OK' if good else 'FAIL'}")
+    assert good
+
+
 def lex_demo():
-    """64-bit keys as (hi, lo) uint32 lanes through ``sort_lex`` — the same
-    variadic engine that sorts the word-bucket pipeline's packed lanes."""
+    """64-bit keys as (hi, lo) uint32 lanes through single-host ``sort_lex``
+    — the same variadic engine the distributed tier runs per device."""
     rng = np.random.default_rng(1)
     full = rng.integers(0, 1 << 63, 250, dtype=np.uint64)
     hi = jnp.asarray((full >> 32).astype(np.uint32))
@@ -37,18 +101,10 @@ def lex_demo():
 
 def main():
     mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
-    rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.integers(0, 10**9, 8 * 4096), dtype=jnp.int32)
-
-    for merge in ("resort", "bitonic", "take"):
-        out = distributed_sort(x, mesh, axis="data", merge=merge)
-        ok = bool((out == jnp.sort(x)).all())
-        print(f"odd-even block sort over 8 devices, merge={merge:8s}: "
-              f"{'OK' if ok else 'FAIL'}")
-        assert ok
-
+    engines_demo(mesh)
+    word_pipeline_demo(mesh)
+    kv_demo(mesh)
     lex_demo()
-
     print("distributed_sort complete")
 
 

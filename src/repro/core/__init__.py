@@ -6,22 +6,34 @@ Layers of the hierarchy (lane -> block -> device):
   bitonic      O(log^2 n)-phase network sort (beyond-paper hillclimb)
   bucketing    length-bucketed segmented sort (paper's decomposition)
   blocksort    multi-block tiled sort (block-local kernels + odd-even merge)
-  distributed  odd-even block sort across mesh devices (bubble sort over ICI)
+  distributed  mesh-scale engines: odd-even block sort (bubble sort over ICI)
+               + splitter sample sort, behind distributed_sort(engine=...)
 """
 
 from .packing import pack_words, unpack_words, lanes_for_width, SENTINEL_U32
 from .oets import oets_sort, oets_sort_kv, oets_argsort, lex_gt
-from .bitonic import bitonic_sort, bitonic_sort_kv, bitonic_merge, bitonic_merge_kv
+from .bitonic import (bitonic_sort, bitonic_sort_kv, bitonic_merge,
+                      bitonic_merge_kv, bitonic_merge_lex)
 from .bucketing import Buckets, bucketize_words, sort_buckets, bucketed_sort_words
 from .blocksort import (block_sort, block_sort_kv, block_sort_lex,
                         default_block_size)
-from .distributed import odd_even_block_sort, distributed_sort, local_merge
+from .distributed import (choose_engine, odd_even_block_sort,
+                          odd_even_block_sort_lex, sample_sort,
+                          sample_sort_lex, sample_sort_exact,
+                          SampleSortResult,
+                          distributed_sort, distributed_sort_kv,
+                          distributed_sort_lex, local_merge)
 
 __all__ = [
     "pack_words", "unpack_words", "lanes_for_width", "SENTINEL_U32",
     "oets_sort", "oets_sort_kv", "oets_argsort", "lex_gt",
     "bitonic_sort", "bitonic_sort_kv", "bitonic_merge", "bitonic_merge_kv",
+    "bitonic_merge_lex",
     "Buckets", "bucketize_words", "sort_buckets", "bucketed_sort_words",
     "block_sort", "block_sort_kv", "block_sort_lex", "default_block_size",
-    "odd_even_block_sort", "distributed_sort", "local_merge",
+    "choose_engine", "odd_even_block_sort", "odd_even_block_sort_lex",
+    "sample_sort", "sample_sort_lex", "sample_sort_exact",
+    "SampleSortResult",
+    "distributed_sort", "distributed_sort_kv", "distributed_sort_lex",
+    "local_merge",
 ]

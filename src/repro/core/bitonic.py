@@ -19,9 +19,11 @@ import math
 import jax
 import jax.numpy as jnp
 
+from ..kernels.lex import lex_gt_lanes, map_lanes, select_lanes
 from .oets import lex_gt, _sentinel
 
-__all__ = ["bitonic_sort", "bitonic_sort_kv", "bitonic_merge", "bitonic_merge_kv"]
+__all__ = ["bitonic_sort", "bitonic_sort_kv", "bitonic_merge",
+           "bitonic_merge_kv", "bitonic_merge_lex"]
 
 
 def _pad_pow2(keys, vals):
@@ -116,3 +118,42 @@ def bitonic_merge_kv(ak, av, bk, bv):
     keys = jnp.concatenate([ak, bk[::-1]], axis=0)
     vals = jnp.concatenate([av, bv[::-1]], axis=0)
     return _merge_network(keys, vals)
+
+
+def _ce_stage_lanes(lanes, j, direction_mask):
+    """Tuple compare-exchange with partner ``i ^ j`` over parallel 1-D lanes
+    (``kernels/lex.py`` conventions: every lane participates, lane 0 most
+    significant, all lanes swap together)."""
+    n = lanes[0].shape[0]
+    idx = jnp.arange(n)
+    partner = idx ^ j
+    plane = map_lanes(lambda a: a[partner], lanes)
+    gt = lex_gt_lanes(lanes, plane)
+    lt = lex_gt_lanes(plane, lanes)
+    is_lower = idx < partner
+    want_swap = jnp.where(
+        direction_mask,
+        jnp.where(is_lower, gt, lt),
+        jnp.where(is_lower, lt, gt),
+    )
+    return select_lanes(want_swap, plane, lanes)
+
+
+def bitonic_merge_lex(a_lanes, b_lanes):
+    """Merge two tuple-sorted blocks of equal pow2 length in O(log n) phases.
+
+    ``a_lanes``/``b_lanes``: equal-length lists of same-shape 1-D arrays,
+    each block ascending under the full-tuple lex compare. Returns the merged
+    lane list (length ``2n``). The key-only/kv merges are the 1-/2-tuple
+    special cases of this network."""
+    n = a_lanes[0].shape[0]
+    if n & (n - 1):
+        raise ValueError("block length must be a power of two")
+    lanes = [jnp.concatenate([a, b[::-1]], axis=0)  # asc ++ desc = bitonic
+             for a, b in zip(a_lanes, b_lanes)]
+    direction = jnp.ones((2 * n,), dtype=bool)
+    sub = n
+    while sub >= 1:
+        lanes = _ce_stage_lanes(lanes, sub, direction)
+        sub >>= 1
+    return lanes

@@ -1,78 +1,203 @@
-"""Device-level odd-even block sort: the paper's algorithm, recursed onto the mesh.
+"""Mesh-scale distributed sort engines: the paper's distribute step across
+devices, as a multi-engine subsystem.
 
 OpenMP's ``parallel for`` over buckets has no analogue across TPU pods — there
-is no shared memory. But bubble sort itself generalizes: treat each device's
-shard as one "element"; neighbouring devices compare-exchange (merge their
-sorted blocks and split low/high halves) over the ICI ring via
-``lax.ppermute``. P alternating odd/even rounds sort P blocks — this is
-odd-even transposition sort at block granularity, i.e. *bubble sort across
-the mesh*.
+is no shared memory. But the paper's decomposition generalizes two ways, and
+this module ships both behind one front-end (``distributed_sort`` /
+``distributed_sort_lex``), mirroring ``kernels.ops.sort``'s engine tiers:
 
-Merge strategies (the hillclimb axis recorded in EXPERIMENTS.md §Perf):
-  * 'resort'  — jnp.sort the 2B concatenation (paper-faithful baseline:
+  * ``'odd_even'`` — treat each device's shard as one "element"; neighbouring
+    devices compare-exchange (merge their sorted blocks and split low/high
+    halves) over the ICI ring via ``lax.ppermute``. P alternating odd/even
+    rounds sort P blocks — odd-even transposition at block granularity,
+    i.e. *bubble sort across the mesh*. O(P) rounds, O(P·B) bytes/device.
+  * ``'sample'`` — splitter-based one-shot (sample sort, the MPI follow-up's
+    design, arXiv:1411.5283): sample splitters globally (one ``all_gather``),
+    partition every block by splitter bucket — exactly the paper's
+    distribute-into-sub-arrays step keyed by value range instead of word
+    length — exchange with ONE ``all_to_all``, sort locally. O(1) rounds,
+    O(B) bytes/device, independent of P.
+
+``choose_engine(P, B)`` is the cost model: odd_even only wins at P <= 2
+(where its <= 2 merge rounds undercut the splitter machinery); sample wins
+beyond because its round count does not grow with the mesh.
+
+Both engines are variadic over lexicographic tuples (``kernels/lex.py``
+conventions: lane 0 most significant, trailing lanes are payload/tie-break,
+all lanes travel through one permutation), so key-only and kv sorting are
+the 1-/2-tuple special cases. Device-local sorting routes through
+``kernels.ops.sort_lex`` (the Pallas front-end) on TPU and XLA's variadic
+sort on other backends (``local_sort='auto'``).
+
+Exact-count exchange protocol (no silent data loss): alongside the data
+``all_to_all``, the sample engine ``all_gather``s the *true* per-destination
+count vectors (one tiny (P, P) matrix, replicated everywhere), so receivers
+know exactly how many real elements arrived from each source — validity is
+never inferred from sentinel comparisons (real
+``iinfo.max`` ints and ``+inf`` floats count correctly), capacity overflow
+is reported in an explicit flag instead of silently dropping, and the
+host-facing wrappers always size capacity at the per-source worst case B so
+nothing can overflow. Non-divisible inputs are sentinel-padded to the next
+multiple of P and sliced back — no caller-visible shape constraint.
+
+Merge strategies for the odd_even engine (the hillclimb axis recorded in
+EXPERIMENTS.md §Perf), all full-tuple lex now:
+  * 'resort'  — re-sort the 2B concatenation (paper-faithful baseline:
                 dumb local work, like re-running bubble sort)
   * 'bitonic' — O(log B) bitonic merge of the two sorted blocks
-  * 'take'    — merge-path selection via searchsorted (O(B log B) gather)
+  * 'take'    — merge-path selection via pairwise lex ranks (O(B^2) compare,
+                one gather)
 
-Communication note: each round sends the full block both ways so the merge
-is computed redundantly on both partners — this trades 2x ICI bytes for zero
-additional latency-bound round trips, the right trade at 50 GB/s links when
-blocks fit VMEM.
+Communication note: each odd_even round sends the full block both ways so
+the merge is computed redundantly on both partners — this trades 2x ICI
+bytes for zero additional latency-bound round trips, the right trade at
+50 GB/s links when blocks fit VMEM.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..kernels.lex import lex_gt_lanes
+from ..kernels.ops import _sentinel
 from ..parallel.compat import axis_size
-from .bitonic import bitonic_merge
+from .bitonic import bitonic_merge, bitonic_merge_lex
 
-__all__ = ["local_merge", "odd_even_block_sort", "distributed_sort"]
-
-
-def _merge_resort(mine, theirs):
-    return jnp.sort(jnp.concatenate([mine, theirs], axis=0), axis=0)
-
-
-def _merge_bitonic(mine, theirs):
-    return bitonic_merge(mine, theirs)
+__all__ = [
+    "choose_engine", "local_merge",
+    "odd_even_block_sort", "odd_even_block_sort_lex",
+    "sample_sort", "sample_sort_lex", "sample_sort_exact", "SampleSortResult",
+    "distributed_sort", "distributed_sort_kv", "distributed_sort_lex",
+]
 
 
-def _merge_take(mine, theirs):
+# --------------------------------------------------------------------------
+# local sort / merge building blocks
+# --------------------------------------------------------------------------
+
+def _local_sort_fn(local_sort):
+    """Resolve the device-local tuple sort: 'pallas' (the unified
+    ``kernels.ops.sort_lex`` front-end), 'xla' (XLA's variadic sort — the
+    same full-tuple compare, compiled), 'auto' (pallas on TPU, where the
+    kernels are the point; xla elsewhere, where pallas runs in interpret
+    mode), or a callable ``lanes -> lanes``."""
+    if callable(local_sort):
+        return local_sort
+    if local_sort == "auto":
+        local_sort = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if local_sort == "pallas":
+        from ..kernels.ops import sort_lex  # lazy: avoid import-time cycle
+        return lambda lanes: list(sort_lex(list(lanes)))
+    if local_sort == "xla":
+        return lambda lanes: list(lax.sort(list(lanes), num_keys=len(lanes)))
+    raise ValueError(f"unknown local_sort {local_sort!r}")
+
+
+def _merge_resort_lex(mine, theirs, sort_fn):
+    return sort_fn([jnp.concatenate([m, t]) for m, t in zip(mine, theirs)])
+
+
+def _merge_bitonic_lex(mine, theirs, sort_fn):
+    return bitonic_merge_lex(mine, theirs)
+
+
+def _lex_rank_count(a_lanes, b_lanes, strict):
+    """For each element of ``b``: how many elements of ``a`` are lex-below
+    it (``strict``) or lex-at-or-below it (``not strict``). O(|a|·|b|)
+    broadcast compare — the merge-path rank at block granularity."""
+    a2 = [a[:, None] for a in a_lanes]
+    b2 = [b[None, :] for b in b_lanes]
+    cmp = lex_gt_lanes(b2, a2) if strict else ~lex_gt_lanes(a2, b2)
+    return jnp.sum(cmp, axis=0)
+
+
+def _merge_take_lex(mine, theirs, sort_fn):
     # merge-path: position of each element in the merged output is its rank,
-    # rank = own index + count of smaller elements in the other block.
-    n = mine.shape[0]
-    rank_mine = jnp.arange(n) + jnp.searchsorted(theirs, mine, side="left")
-    rank_theirs = jnp.arange(n) + jnp.searchsorted(mine, theirs, side="right")
-    out = jnp.zeros((2 * n,), mine.dtype)
-    out = out.at[rank_mine].set(mine)
-    out = out.at[rank_theirs].set(theirs)
+    # rank = own index + count of smaller elements in the other block
+    # (strict one way, non-strict the other, so equal tuples get distinct
+    # ranks and every output slot is written exactly once). Key-only blocks
+    # rank in O(B log B) via searchsorted; lex tuples have no multi-lane
+    # searchsorted and pay the O(B^2) broadcast compare.
+    n = mine[0].shape[0]
+    if len(mine) == 1:
+        rank_mine = jnp.arange(n) + jnp.searchsorted(theirs[0], mine[0],
+                                                     side="left")
+        rank_theirs = jnp.arange(n) + jnp.searchsorted(mine[0], theirs[0],
+                                                       side="right")
+    else:
+        rank_mine = jnp.arange(n) + _lex_rank_count(theirs, mine, strict=True)
+        rank_theirs = jnp.arange(n) + _lex_rank_count(mine, theirs,
+                                                      strict=False)
+    out = []
+    for m, t in zip(mine, theirs):
+        o = jnp.zeros((2 * n,), m.dtype)
+        out.append(o.at[rank_mine].set(m).at[rank_theirs].set(t))
     return out
 
 
-_MERGES = {"resort": _merge_resort, "bitonic": _merge_bitonic, "take": _merge_take}
+_MERGES_LEX = {"resort": _merge_resort_lex, "bitonic": _merge_bitonic_lex,
+               "take": _merge_take_lex}
+
+
+def _merge_sorted_rows(x):
+    """Merge the rows of (r, L) — each ascending, r a power of two — into
+    one sorted (r*L,) array via a merge-path tree: log2(r) vmapped rounds of
+    searchsorted rank + scatter, O(n log r) instead of a full O(n log n)
+    re-sort. Key-only (searchsorted has no lex form)."""
+    def mpair(a, b):
+        m = a.shape[0]
+        ra = jnp.arange(m) + jnp.searchsorted(b, a, side="left")
+        rb = jnp.arange(m) + jnp.searchsorted(a, b, side="right")
+        o = jnp.zeros((2 * m,), a.dtype)
+        return o.at[ra].set(a).at[rb].set(b)
+
+    while x.shape[0] > 1:
+        x = jax.vmap(mpair)(x[0::2], x[1::2])
+    return x[0]
 
 
 def local_merge(mine, theirs, strategy: str = "bitonic"):
-    return _MERGES[strategy](mine, theirs)
+    """Merge two sorted key-only blocks (the 1-tuple view of the lex merge)."""
+    if strategy == "bitonic":
+        return bitonic_merge(mine, theirs)  # keeps the key-only fast path
+    (out,) = _MERGES_LEX[strategy]([mine], [theirs],
+                                   lambda ls: [jnp.sort(ls[0])])
+    return out
 
 
-def odd_even_block_sort(block, axis_name: str, merge: str = "bitonic",
-                        local_sort=jnp.sort):
-    """Sort values distributed along mesh axis ``axis_name``.
+# --------------------------------------------------------------------------
+# engine 1: odd-even block sort (bubble sort across the mesh)
+# --------------------------------------------------------------------------
 
-    To be called *inside* ``shard_map``. ``block``: this device's (B,) shard.
-    Returns the sorted shard (globally ascending across the axis).
+def odd_even_block_sort_lex(lanes, axis_name: str, merge: str = "bitonic",
+                            local_sort="auto"):
+    """Sort lex tuples distributed along mesh axis ``axis_name``.
+
+    To be called *inside* ``shard_map``. ``lanes``: list of this device's
+    same-shape (B,) shards — key lanes first, payload/tie-break lanes last
+    (``kernels/lex.py`` conventions). Returns the sorted lane tuple
+    (globally ascending across the axis). ``merge``: 'resort' | 'bitonic'
+    ('bitonic' needs pow2 B) | 'take'; ``local_sort``: see
+    :func:`distributed_sort_lex`.
     """
+    if merge not in _MERGES_LEX:
+        raise ValueError(f"unknown merge strategy {merge!r}")
+    lanes = list(lanes)
     num = axis_size(axis_name)
     me = lax.axis_index(axis_name)
-    block = local_sort(block, axis=0) if local_sort is jnp.sort else local_sort(block)
+    sort_fn = _local_sort_fn(local_sort)
+    lanes = sort_fn(lanes)
+    bsz = lanes[0].shape[0]
+    fwd = [(i, (i + 1) % num) for i in range(num)]
+    bwd = [(i, (i - 1) % num) for i in range(num)]
 
-    def round_body(r, blk):
+    def round_body(r, lanes_t):
+        blk = list(lanes_t)
         # round parity decides pairing: even r -> (0,1)(2,3)..; odd -> (1,2)(3,4)..
         left_of_pair = (me % 2) == (r % 2)
         partner = jnp.where(left_of_pair, me + 1, me - 1)
@@ -81,87 +206,356 @@ def odd_even_block_sort(block, axis_name: str, merge: str = "bitonic",
         # The pairing depends on the traced round index, so a static perm per
         # round is impossible; exchange with both ring neighbours and select.
         # from_left[j] = block of device j-1; from_right[j] = block of j+1.
-        from_left = lax.ppermute(blk, axis_name, [(i, (i + 1) % num) for i in range(num)])
-        from_right = lax.ppermute(blk, axis_name, [(i, (i - 1) % num) for i in range(num)])
-        theirs = jnp.where(left_of_pair, from_right, from_left)
+        from_left = [lax.ppermute(a, axis_name, fwd) for a in blk]
+        from_right = [lax.ppermute(a, axis_name, bwd) for a in blk]
+        theirs = [jnp.where(left_of_pair, fr, fl)
+                  for fl, fr in zip(from_left, from_right)]
 
-        merged = _MERGES[merge](blk, theirs)
-        keep_low = left_of_pair
-        bsz = blk.shape[0]
-        low = lax.dynamic_slice_in_dim(merged, 0, bsz, axis=0)
-        high = lax.dynamic_slice_in_dim(merged, bsz, bsz, axis=0)
-        new = jnp.where(keep_low, low, high)
-        return jnp.where(has_partner, new, blk)
+        merged = _MERGES_LEX[merge](blk, theirs, sort_fn)
+        new = [jnp.where(left_of_pair, m[:bsz], m[bsz:]) for m in merged]
+        return tuple(jnp.where(has_partner, n_, a) for n_, a in zip(new, blk))
 
-    return lax.fori_loop(0, num, round_body, block)
+    return lax.fori_loop(0, num, round_body, tuple(lanes))
+
+
+def odd_even_block_sort(block, axis_name: str, merge: str = "bitonic",
+                        local_sort=jnp.sort):
+    """Key-only odd-even block sort (the 1-tuple view). To be called inside
+    ``shard_map``; ``block`` is this device's (B,) shard. ``local_sort``
+    keeps its historical array->array signature (default ``jnp.sort``)."""
+    if callable(local_sort):
+        one = local_sort
+        fn = lambda ls: [one(ls[0])]  # noqa: E731 — adapt array fn to lanes
+    else:
+        fn = local_sort
+    (out,) = odd_even_block_sort_lex([block], axis_name, merge=merge,
+                                     local_sort=fn)
+    return out
+
+
+# --------------------------------------------------------------------------
+# engine 2: sample sort (splitter one-shot with exact-count exchange)
+# --------------------------------------------------------------------------
+
+class SampleSortResult(NamedTuple):
+    """Per-device result of :func:`sample_sort_lex`.
+
+    ``lanes``: tuple of (P*capacity,) sorted arrays — real elements occupy
+    the prefix ``[0, count)``; slots beyond hold sentinel fill. ``count`` is
+    exact (from the exchanged counts, never inferred from values).
+    ``overflow`` is True iff some source had more than ``capacity`` elements
+    destined for *this* device and the excess was clipped (each device flags
+    its own inbound overflow — OR the flags across the axis for a global
+    verdict) — impossible when capacity is the default worst case B."""
+
+    lanes: Tuple[jax.Array, ...]
+    count: jax.Array
+    overflow: jax.Array
+
+
+def _sample_partition_exchange(lanes, axis_name, n_valid, capacity,
+                               oversample, local_sort):
+    """Shared sample-sort core: local sort -> global splitters -> ONE
+    all_to_all of data + one all_gather of the true count vectors. Returns
+    ``(out_lanes, count_matrix, overflow, b, cap)``: ``out_lanes`` are this
+    device's (P*cap,) arrays with the real elements sorted in the prefix,
+    whose length is ``min(count_matrix[:, me], cap).sum()``;
+    ``count_matrix[s, d]`` is the TRUE number of elements source s holds
+    for destination d (pre-clip, replicated on every device)."""
+    lanes = list(lanes)
+    num = axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    b = lanes[0].shape[0]
+    cap = capacity if capacity is not None else b
+    sort_fn = _local_sort_fn(local_sort)
+    sentinels = [_sentinel(a.dtype) for a in lanes]
+
+    # validity from construction, not from values: the host wrapper pads the
+    # global tail, so device me's real elements are a prefix of its shard.
+    if n_valid is None:
+        local_valid = jnp.int32(b)
+    else:
+        local_valid = jnp.clip(n_valid - me * b, 0, b).astype(jnp.int32)
+
+    # Invalid tail slots are overwritten with the all-sentinel tuple BEFORE
+    # the sort: that tuple is lex-maximal under the full-tuple compare, so
+    # fills sink to the tail and the first local_valid slots hold exactly
+    # the real multiset (a real element equal to the fill in every lane is
+    # interchangeable with it). Key-only sorting thus stays on the fast
+    # single-operand path — no flag lane — while *counts* still come only
+    # from the protocol, never from value comparisons.
+    if n_valid is not None:
+        idx = jnp.arange(b)
+        lanes = [jnp.where(idx < local_valid, a, s)
+                 for a, s in zip(lanes, sentinels)]
+    local = sort_fn(lanes)
+    vmask = jnp.arange(b) < local_valid
+
+    # evenly spaced local quantiles -> global splitters (invalid samples are
+    # masked to the lex-maximal sentinel tuple so they sort past every real
+    # sample and never skew the low splitters)
+    stride = max(1, b // oversample)
+    pos = jnp.minimum(jnp.arange(oversample) * stride, b - 1)
+    sample_ok = pos < local_valid
+    samples = [jnp.where(sample_ok, a[pos], s) for a, s in zip(local, sentinels)]
+    gathered = [lax.all_gather(s, axis_name).reshape(-1) for s in samples]
+    all_samples = list(lax.sort(gathered, num_keys=len(gathered)))
+    take = [(i + 1) * oversample for i in range(num - 1)]
+    splitters = [s[jnp.asarray(take, jnp.int32)] for s in all_samples]
+
+    # bucket by splitter (the paper's phase-2 distribution step):
+    # dest = #splitters lex<= element, via the shared lane-by-lane compare
+    if num > 1:
+        dest = _lex_rank_count(splitters, local, strict=False).astype(jnp.int32)
+    else:
+        dest = jnp.zeros((b,), jnp.int32)
+    # rank within destination bucket via stable order (the valid prefix is
+    # sorted, so same-destination elements are contiguous); invalid slots go
+    # to the discard bucket ``num`` and never enter the counts.
+    dest_eff = jnp.where(vmask, dest, num)
+    counts = jnp.bincount(dest_eff, length=num + 1)[:num].astype(jnp.int32)
+    offsets = jnp.cumsum(counts) - counts
+    rank = jnp.arange(b) - offsets[jnp.minimum(dest_eff, num - 1)]
+    keep = vmask & (rank < cap)
+    slot = jnp.where(keep, dest * cap + rank, num * cap)
+    buckets = [
+        jnp.full((num * cap + 1,), s, a.dtype).at[slot].set(a)[: num * cap]
+        .reshape(num, cap)
+        for a, s in zip(local, sentinels)
+    ]
+
+    # ONE all_to_all for the data, plus ONE tiny all_gather for the TRUE
+    # counts: every device learns the full (source, destination) count
+    # matrix, so the validity mask comes from these counts — never from
+    # comparing values against the sentinel — and the exact-placement step
+    # can compute every device's global offset with no further collective.
+    received = [lax.all_to_all(bk, axis_name, split_axis=0, concat_axis=0,
+                               tiled=False) for bk in buckets]
+    count_matrix = lax.all_gather(counts, axis_name)  # [src, dst] true counts
+    recv_counts = count_matrix[:, me]
+    overflow = jnp.any(recv_counts > cap)
+
+    # Final combine: unfilled bucket slots already hold the all-sentinel
+    # fill tuple by construction, so any order-preserving combine leaves the
+    # real multiset in the count-sized prefix (same argument as the local
+    # sort). Each received row is a slice of a sorted block, hence sorted —
+    # key-only inputs take a searchsorted merge tree (log P rounds of
+    # merge-path gathers) instead of re-sorting all P·cap elements; lex
+    # tuples have no multi-lane searchsorted and take the full-tuple sort.
+    if len(received) == 1 and num & (num - 1) == 0:
+        out = [_merge_sorted_rows(received[0])]
+    else:
+        out = sort_fn([r.reshape(-1) for r in received])
+    return out, count_matrix, overflow, b, cap
+
+
+def sample_sort_lex(lanes, axis_name: str, n_valid: Optional[int] = None,
+                    capacity: Optional[int] = None, oversample: int = 8,
+                    local_sort="auto") -> SampleSortResult:
+    """Splitter-based distributed lex sort — the paper's *bucketing* idea at
+    mesh scale, and the fix for odd-even block sort's O(P)-round wall.
+
+    To be called inside ``shard_map``. ``lanes``: list of this device's
+    same-shape (B,) shards (key lanes first, payload last). ``n_valid``:
+    global count of real elements when the caller padded the tail of the
+    *last* shards (as :func:`distributed_sort_lex` does); None = all real.
+    ``capacity`` bounds the per-source-per-destination bucket; the default B
+    is the worst case, so no element can ever be dropped. Returns
+    :class:`SampleSortResult` — the concatenation of every device's valid
+    prefix (in axis order) is the globally sorted sequence.
+    """
+    me = lax.axis_index(axis_name)
+    out, count_matrix, overflow, _, cap = _sample_partition_exchange(
+        lanes, axis_name, n_valid, capacity, oversample, local_sort)
+    count = jnp.sum(jnp.minimum(count_matrix[:, me], cap))
+    return SampleSortResult(tuple(out), count, overflow)
+
+
+def sample_sort_exact(lanes, axis_name: str, n_valid: Optional[int] = None,
+                      capacity: Optional[int] = None, oversample: int = 8,
+                      local_sort="auto"):
+    """Sample sort returning *exactly placed* (B,) shards: a second
+    ``all_to_all`` moves every element to the device and slot of its global
+    rank, so the ``out_specs``-concatenated result is the globally sorted
+    array with all padding at the tail — no host-side compaction (which
+    XLA's partitioner would otherwise render as a storm of all-gathers).
+
+    Global ranks come from the gathered count matrix (already on every
+    device — no extra collective), never from values. Placement ships an
+    explicit occupancy flag through the exchange, so receivers select real
+    elements per slot without comparing against the sentinel. Returns
+    ``(out_lanes, overflow)``; unfilled slots (input padding) hold the
+    lex-maximal sentinel tuple.
+    """
+    num = axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    out, count_matrix, overflow, b, cap = _sample_partition_exchange(
+        lanes, axis_name, n_valid, capacity, oversample, local_sort)
+    sentinels = [_sentinel(a.dtype) for a in out]
+    m = out[0].shape[0]
+
+    # my elements' global ranks: offset of my valid run + local index
+    all_counts = jnp.sum(jnp.minimum(count_matrix, cap), axis=0)
+    cnt = all_counts[me]
+    my_off = (jnp.cumsum(all_counts) - all_counts)[me]
+    i = jnp.arange(m)
+    pos = my_off + i
+    valid = i < cnt
+    # bucket row = destination device (pos // b), column = in-shard slot
+    # (pos % b) — i.e. the flat bucket index IS the global rank
+    slot = jnp.where(valid, pos, num * b)
+    buckets = [
+        jnp.full((num * b + 1,), s, a.dtype).at[slot].set(a)[: num * b]
+        .reshape(num, b)
+        for a, s in zip(out, sentinels)
+    ]
+    occupied = jnp.zeros((num * b + 1,), jnp.int32).at[slot].set(1)[: num * b] \
+        .reshape(num, b)
+    recv = [lax.all_to_all(bk, axis_name, split_axis=0, concat_axis=0,
+                           tiled=False) for bk in buckets]
+    rocc = lax.all_to_all(occupied, axis_name, split_axis=0, concat_axis=0,
+                          tiled=False)
+    # global positions are unique, so each slot has at most one occupied
+    # source; empty slots keep source 0's sentinel fill
+    src = jnp.argmax(rocc, axis=0)
+    cols = jnp.arange(b)
+    return tuple(r[src, cols] for r in recv), overflow
 
 
 def sample_sort(block, axis_name: str, capacity: int | None = None,
-                oversample: int = 8):
-    """Splitter-based distributed sort — the paper's *bucketing* idea at mesh
-    scale, and the fix for odd-even block sort's O(P)-round scaling wall.
+                oversample: int = 8, local_sort="auto"):
+    """Key-only sample sort (the 1-tuple view). Returns ``(values, count)``
+    per device: ``values`` is (P*capacity,) with the real elements sorted in
+    the prefix ``[0, count)``; ``count`` is exact even when real elements
+    equal the padding sentinel (``iinfo.max`` / ``+inf``)."""
+    res = sample_sort_lex([block], axis_name, capacity=capacity,
+                          oversample=oversample, local_sort=local_sort)
+    return res.lanes[0], res.count
 
-    One shot instead of P rounds: sample splitters globally (all_gather of
-    local quantiles), partition every block by splitter bucket (exactly the
-    paper's distribute-into-sub-arrays step, keyed by value range instead of
-    word length), exchange with ONE all_to_all, sort locally.
 
-    To be called inside ``shard_map``. Returns (values (P*capacity,), count)
-    per device: outputs are sentinel-padded because bucket sizes vary —
-    ``capacity`` bounds the per-source-per-destination bucket (default: the
-    safe worst case B). Elements beyond capacity would be dropped; callers
-    needing a hard guarantee keep the default.
+# --------------------------------------------------------------------------
+# engine selection + host-facing front-end
+# --------------------------------------------------------------------------
+
+def choose_engine(num_devices: int, block: int, engine: str = "auto") -> str:
+    """Pick the mesh engine for P devices of B-element blocks — the
+    ``kernels.ops.choose_plan`` cost model lifted to mesh granularity.
+
+    odd_even moves O(P·B) bytes per device over P latency-bound rounds;
+    sample moves O(B) bytes in one all_to_all plus an O(P·oversample)
+    splitter all_gather. The splitter machinery only loses when the round
+    count is already trivial: P <= 2 (<= 2 merge rounds). Beyond that the
+    one-shot wins and keeps winning as P grows — block size scales both
+    engines' local work equally, so the boundary is P-driven only. Explicit
+    ``engine`` overrides."""
+    if engine != "auto":
+        if engine not in ("odd_even", "sample"):
+            raise ValueError(f"unknown engine {engine!r}")
+        return engine
+    return "odd_even" if num_devices <= 2 else "sample"
+
+
+def _pad_tail(a, npad):
+    if a.shape[0] == npad:
+        return a
+    fill = jnp.full((npad - a.shape[0],), _sentinel(a.dtype), a.dtype)
+    return jnp.concatenate([a, fill])
+
+
+@functools.lru_cache(maxsize=128)
+def _build_host_fn(mesh, axis, eng, merge, local_sort, oversample, n,
+                   dtypes):
+    """Jitted host function for one (mesh, config, shape) combination —
+    cached so repeated calls (serving admission waves, benchmarks) reuse the
+    compiled executable instead of re-tracing per call."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..parallel.compat import shard_map_norep
+
+    spec_in = tuple([P(axis)] * len(dtypes))
+
+    if eng == "odd_even":
+        body = functools.partial(odd_even_block_sort_lex, axis_name=axis,
+                                 merge=merge, local_sort=local_sort)
+    else:
+        def body(ls):
+            out, _ = sample_sort_exact(ls, axis_name=axis, n_valid=n,
+                                       oversample=oversample,
+                                       local_sort=local_sort)
+            return out
+
+    fn = shard_map_norep(lambda *ls: body(list(ls)), mesh=mesh,
+                         in_specs=spec_in, out_specs=spec_in)
+
+    @jax.jit
+    def run(*padded):
+        # Both engines return exactly placed shards with the padding tuples
+        # (all-sentinel, hence lex-maximal) at the global tail — for
+        # odd_even because they sort there, for sample because the exact
+        # rank placement fills unassigned tail slots with sentinel — so the
+        # leading-n slice is exact.
+        return tuple(o[:n] for o in fn(*padded))
+
+    return run
+
+
+def distributed_sort_lex(keys_lanes, mesh, axis: str = "data", vals=None,
+                         engine: str = "auto", merge: str = "bitonic",
+                         local_sort="auto", oversample: int = 8):
+    """Sort 1-D lex tuples sharded over ``axis`` of ``mesh``. Host-facing.
+
+    ``keys_lanes``: sequence of same-shape 1-D arrays, lane 0 most
+    significant; optional ``vals`` rides the keys' permutation as the final
+    tie-break lane (``kernels.ops.sort_lex`` semantics). ``engine``: 'auto'
+    (:func:`choose_engine`), 'odd_even', or 'sample'; ``merge`` applies to
+    odd_even only. Any length: non-divisible inputs are sentinel-padded to
+    the next multiple of the axis size and sliced back, and the sample
+    engine's capacity is sized at the worst case so zero elements can be
+    dropped. Returns a tuple of sorted lanes, or ``(lanes, sorted_vals)``
+    when ``vals`` is given.
     """
-    num = axis_size(axis_name)
-    b = block.shape[0]
-    cap = capacity if capacity is not None else b
-    sentinel = jnp.array(jnp.iinfo(block.dtype).max if
-                         jnp.issubdtype(block.dtype, jnp.integer) else jnp.inf,
-                         block.dtype)
-
-    local = jnp.sort(block)
-    # evenly spaced local quantiles -> global splitters
-    stride = max(1, b // oversample)
-    samples = local[::stride][:oversample]
-    all_samples = jnp.sort(lax.all_gather(samples, axis_name).reshape(-1))
-    take = [(i + 1) * oversample for i in range(num - 1)]
-    splitters = all_samples[jnp.asarray(take, jnp.int32)] if take else all_samples[:0]
-
-    # bucket by splitter (the paper's phase-2 distribution step)
-    dest = jnp.searchsorted(splitters, local, side="right") if num > 1 else \
-        jnp.zeros((b,), jnp.int32)
-    # rank within destination bucket via stable order (local is sorted, so
-    # same-destination elements are contiguous)
-    counts = jnp.bincount(dest, length=num)
-    offsets = jnp.cumsum(counts) - counts
-    rank = jnp.arange(b) - offsets[dest]
-    keep = rank < cap
-    slot = jnp.where(keep, dest * cap + rank, num * cap)
-    buckets = jnp.full((num * cap + 1,), sentinel, block.dtype).at[slot].set(local)
-    buckets = buckets[: num * cap].reshape(num, cap)
-
-    received = lax.all_to_all(buckets, axis_name, split_axis=0, concat_axis=0,
-                              tiled=False)
-    flat = received.reshape(-1)
-    out = jnp.sort(flat)
-    count = jnp.sum(out < sentinel) if jnp.issubdtype(block.dtype, jnp.integer) \
-        else jnp.sum(jnp.isfinite(out))
-    return out, count
-
-
-def distributed_sort(x, mesh, axis: str = "data", merge: str = "bitonic"):
-    """Sort a 1-D array sharded over ``axis`` of ``mesh``. Host-facing wrapper."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    from ..parallel.compat import shard_map
-
-    fn = shard_map(
-        functools.partial(odd_even_block_sort, axis_name=axis, merge=merge),
-        mesh=mesh,
-        in_specs=P(axis),
-        out_specs=P(axis),
-    )
+    arrs = list(keys_lanes) + ([vals] if vals is not None else [])
+    if not arrs or any(a.ndim != 1 for a in arrs):
+        raise ValueError("need 1-D lanes")
+    if any(a.shape != arrs[0].shape for a in arrs[1:]):
+        raise ValueError("all lanes (and vals) must have identical shapes")
+    n = arrs[0].shape[0]
     num = mesh.shape[axis]
-    if x.shape[0] % num:
-        raise ValueError(f"size {x.shape[0]} not divisible by axis size {num}")
-    return jax.jit(fn)(x)
+    b = -(-n // num) if n else 1
+    npad = b * num
+    eng = choose_engine(num, b, engine)
+    if eng == "odd_even" and merge == "bitonic" and b & (b - 1):
+        merge = "resort"  # bitonic merge needs pow2 blocks; stay exact
+    dtypes = tuple(jnp.asarray(a).dtype for a in arrs)
+    if callable(local_sort):  # unhashable config: build uncached
+        run = _build_host_fn.__wrapped__(mesh, axis, eng, merge, local_sort,
+                                         oversample, n, dtypes)
+    else:
+        run = _build_host_fn(mesh, axis, eng, merge, local_sort, oversample,
+                             n, dtypes)
+    out = run(*[_pad_tail(a, npad) for a in arrs])
+    if vals is None:
+        return out
+    return out[:-1], out[-1]
+
+
+def distributed_sort(x, mesh, axis: str = "data", engine: str = "auto",
+                     merge: str = "bitonic", local_sort="auto"):
+    """Sort a 1-D array sharded over ``axis`` of ``mesh`` (key-only view of
+    :func:`distributed_sort_lex`); any length, any engine."""
+    (out,) = distributed_sort_lex((x,), mesh, axis=axis, engine=engine,
+                                  merge=merge, local_sort=local_sort)
+    return out
+
+
+def distributed_sort_kv(keys, vals, mesh, axis: str = "data",
+                        engine: str = "auto", merge: str = "bitonic",
+                        local_sort="auto"):
+    """Key-value view of :func:`distributed_sort_lex`: ``vals`` rides the
+    keys' permutation as the final tie-break lane."""
+    if keys.shape != vals.shape:
+        raise ValueError("keys and vals must have identical shapes")
+    lanes, ov = distributed_sort_lex((keys,), mesh, axis=axis, vals=vals,
+                                     engine=engine, merge=merge,
+                                     local_sort=local_sort)
+    return lanes[0], ov

@@ -21,6 +21,12 @@ Entry points:
     tile).
   * ``partition_rows`` — splitter bucketing (the paper's distribute step).
 
+Beyond one device, ``core/distributed.py`` lifts these same tiers to the
+mesh: ``distributed_sort``/``distributed_sort_lex`` pick between odd-even
+block sort and splitter sample sort with a ``choose_engine`` cost model
+mirroring ``choose_plan``, and run this module's ``sort_lex`` as the
+device-local sort on TPU.
+
 These wrappers handle everything the raw kernels require of their caller:
 lane padding (cols -> multiple of 128 for OETS, next pow2 >= 128 for
 bitonic) with per-dtype +inf/max sentinels so padding sinks to the row tail,

@@ -13,12 +13,25 @@ import jax
 from jax.sharding import Mesh
 
 __all__ = ["AxisType", "make_mesh", "mesh_from_devices", "set_mesh",
-           "get_abstract_mesh", "shard_map", "axis_size"]
+           "get_abstract_mesh", "shard_map", "shard_map_norep", "axis_size"]
 
 try:
     shard_map = jax.shard_map
 except AttributeError:  # pre-0.6 spelling
     from jax.experimental.shard_map import shard_map
+
+
+def shard_map_norep(f, **kw):
+    """``shard_map`` with the replication checker disabled — required when
+    the body contains ops without a replication rule (``pallas_call``, the
+    interpret-mode local sorts of ``core/distributed``). The flag was
+    renamed ``check_rep`` -> ``check_vma`` across jax versions; try both."""
+    for flag in ("check_rep", "check_vma"):
+        try:
+            return shard_map(f, **kw, **{flag: False})
+        except TypeError:
+            continue
+    return shard_map(f, **kw)
 
 
 def axis_size(axis_name):

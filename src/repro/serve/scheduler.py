@@ -10,6 +10,11 @@ token lanes), so each fixed-size chunk groups near-equal lengths — shrinking
 intra-batch padding — and equal-length prompts admit in token order for
 prefix locality. The measured padding-waste reduction vs naive FIFO batching is the
 serving benchmark (benchmarks/bench_serving.py).
+
+Queues too deep for one device can shard the admission sort across a mesh:
+pass ``admission_mesh`` and the ordering routes through
+``repro.core.distributed.distributed_sort_lex`` (same lane layout, same
+shortlex order, engine picked by ``core.distributed.choose_engine``).
 """
 
 from __future__ import annotations
@@ -39,11 +44,16 @@ class BucketedScheduler:
     Engine. ``bounds=None`` plans quantile buckets from the first wave."""
 
     def __init__(self, engine: Engine, batch_size: int = 8,
-                 bounds: Optional[Sequence[int]] = None, n_buckets: int = 4):
+                 bounds: Optional[Sequence[int]] = None, n_buckets: int = 4,
+                 admission_mesh=None, admission_axis: str = "data"):
         self.engine = engine
         self.batch_size = batch_size
         self.bounds = list(bounds) if bounds else None
         self.n_buckets = n_buckets
+        # optional: shard the admission sort over a mesh axis for queues
+        # beyond one device (core/distributed engines; None = single device)
+        self.admission_mesh = admission_mesh
+        self.admission_axis = admission_axis
 
     def run(self, requests: List[Request]) -> List[GenerationResult]:
         if not requests:
@@ -62,7 +72,8 @@ class BucketedScheduler:
 
         results = []
         for i, rs in buckets.items():
-            rs = self._order_by_length(rs)
+            rs = self._order_by_length(rs, mesh=self.admission_mesh,
+                                       axis=self.admission_axis)
             for start in range(0, len(rs), self.batch_size):
                 chunk = rs[start : start + self.batch_size]
                 outs = self.engine.generate(
@@ -79,7 +90,8 @@ class BucketedScheduler:
     _PREFIX_LANES = 2
 
     @staticmethod
-    def _order_by_length(rs: List[Request]) -> List[Request]:
+    def _order_by_length(rs: List[Request], mesh=None,
+                         axis: str = "data") -> List[Request]:
         """Length-then-alphabetic batch ordering via the lexicographic kernel
         sort: lane 0 = prompt length, lanes 1..k = the first prompt tokens,
         payload = request index (the paper's shortlex order applied to the
@@ -91,7 +103,11 @@ class BucketedScheduler:
         The queue is padded to a power-of-two length so a long-running server
         compiles O(log max_queue) kernel shapes rather than one per distinct
         request count (jit caches are shape-keyed); padding sorts to the tail
-        (all-sentinel lex tuples) and is sliced off."""
+        (all-sentinel lex tuples) and is sliced off.
+
+        ``mesh``: optional — shard the sort over mesh ``axis`` through
+        ``core.distributed.distributed_sort_lex`` (identical lane layout and
+        order) when the queue outgrows one device."""
         n = len(rs)
         if n < 2:
             return rs
@@ -106,18 +122,29 @@ class BucketedScheduler:
             lanes[1 + k, :n] = [r.prompt[k] if len(r.prompt) > k else -1
                                 for r in rs]
         idx = np.arange(n_pad, dtype=np.int32)
-        _, perm = sort_lex([jnp.asarray(l) for l in lanes],
-                           vals=jnp.asarray(idx))
+        if mesh is not None:
+            from ..core.distributed import distributed_sort_lex
+            _, perm = distributed_sort_lex([jnp.asarray(l) for l in lanes],
+                                           mesh, axis=axis,
+                                           vals=jnp.asarray(idx))
+        else:
+            _, perm = sort_lex([jnp.asarray(l) for l in lanes],
+                               vals=jnp.asarray(idx))
         return [rs[int(j)] for j in np.asarray(perm)[:n]]
 
     @staticmethod
     def padding_stats(requests: List[Request], bounds: Sequence[int]):
-        """Padded-token fraction under bucketing vs one global batch."""
+        """Padded-token fraction under bucketing vs one global batch.
+
+        A request longer than every bound lands in the last bucket and pads
+        *nothing* (it decodes at its own length there) — ``bound - l`` would
+        be negative for it and silently understate the bucketed waste, so
+        the contribution is clamped at zero."""
         lens = np.array([len(r.prompt) for r in requests])
         global_waste = 1.0 - lens.sum() / (len(lens) * lens.max())
         padded = 0
         for l in lens:
             bound = next((b for b in bounds if l <= b), max(bounds))
-            padded += bound - l
+            padded += max(bound - l, 0)
         bucket_waste = padded / (padded + lens.sum())
         return {"global_waste": float(global_waste), "bucketed_waste": float(bucket_waste)}

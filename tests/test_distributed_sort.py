@@ -1,0 +1,301 @@
+"""Distributed engine coverage on 8 fake host devices (subprocess so the
+XLA device-count flag cannot leak into other tests).
+
+Pins the ISSUE-3 contracts: engine-vs-``jnp.sort`` differential over random /
+duplicate-heavy / sentinel-colliding inputs for both engines and every
+odd-even merge strategy; the exact-count exchange protocol (real
+``UINT32_MAX`` / ``+inf`` elements are counted, capacity overflow is flagged
+instead of silently dropped); pad-and-slice for non-divisible sizes; and the
+lex/kv permutation invariants. Host-level pieces (engine cost model, lex
+merge networks) run in-process; a hypothesis sweep rides the slow tier.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.bitonic import bitonic_merge_lex
+from repro.core.distributed import (_MERGES_LEX, choose_engine, local_merge)
+
+
+def _run_multidev(script, timeout=600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"  # 8 host devices; never probe TPU
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ------------------------------------------------------------------ host side
+
+def test_choose_engine_cost_model():
+    """Mirrors kernels.ops.choose_plan: explicit overrides win; auto picks
+    odd_even only where its round count is trivial (P <= 2)."""
+    assert choose_engine(1, 4096) == "odd_even"
+    assert choose_engine(2, 4096) == "odd_even"
+    assert choose_engine(4, 4096) == "sample"
+    assert choose_engine(8, 64) == "sample"
+    assert choose_engine(8, 64, engine="odd_even") == "odd_even"
+    assert choose_engine(2, 64, engine="sample") == "sample"
+    with pytest.raises(ValueError):
+        choose_engine(8, 64, engine="quantum")
+
+
+def test_bitonic_merge_lex_matches_sorted_concat():
+    rng = np.random.default_rng(0)
+    a0 = np.sort(rng.integers(0, 50, 64).astype(np.int32))
+    b0 = np.sort(rng.integers(0, 50, 64).astype(np.int32))
+    av, bv = rng.permutation(64).astype(np.int32), \
+        rng.permutation(64).astype(np.int32)
+    # payload order inside the merge must follow the full-tuple compare
+    a = sorted(zip(a0.tolist(), av.tolist()))
+    b = sorted(zip(b0.tolist(), bv.tolist()))
+    out = bitonic_merge_lex(
+        [jnp.asarray([k for k, _ in a]), jnp.asarray([v for _, v in a])],
+        [jnp.asarray([k for k, _ in b]), jnp.asarray([v for _, v in b])])
+    got = list(zip(np.asarray(out[0]).tolist(), np.asarray(out[1]).tolist()))
+    assert got == sorted(a + b)
+
+
+@pytest.mark.parametrize("strategy", ["resort", "bitonic", "take"])
+def test_lex_merge_strategies_duplicate_heavy(strategy):
+    """Every merge strategy produces the sorted concatenation, including on
+    duplicate-heavy blocks where rank collisions would double-write slots."""
+    rng = np.random.default_rng(1)
+    a = np.sort(rng.integers(0, 4, 128).astype(np.int32))
+    b = np.sort(rng.integers(0, 4, 128).astype(np.int32))
+    out = _MERGES_LEX[strategy](
+        [jnp.asarray(a)], [jnp.asarray(b)],
+        lambda ls: [jnp.sort(ls[0])])
+    np.testing.assert_array_equal(np.asarray(out[0]),
+                                  np.sort(np.concatenate([a, b])))
+    np.testing.assert_array_equal(
+        np.asarray(local_merge(jnp.asarray(a), jnp.asarray(b), strategy)),
+        np.sort(np.concatenate([a, b])))
+
+
+# -------------------------------------------------------------- 8-device side
+
+_ENGINES_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import distributed_sort, distributed_sort_kv, distributed_sort_lex
+from repro.parallel.compat import AxisType, make_mesh
+
+mesh = make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
+rng = np.random.default_rng(0)
+
+def cases(n):
+    yield "random", rng.integers(-10**6, 10**6, n).astype(np.int32)
+    yield "dup", rng.integers(0, 5, n).astype(np.int32)
+    s = np.full(n, np.iinfo(np.int32).max, np.int32)
+    s[: n // 2] = rng.integers(0, 100, n // 2)
+    yield "sentinel", s
+    yield "skew", np.full(n, 42, np.int32)  # over-capacity: one splitter bucket
+
+for n in (8 * 128, 1000, 13):  # divisible, non-divisible, n < P*8
+    for tag, x in cases(n):
+        want = np.sort(x)
+        for merge in ("resort", "bitonic", "take"):
+            out = distributed_sort(jnp.asarray(x), mesh, axis="d",
+                                   engine="odd_even", merge=merge)
+            assert (np.asarray(out) == want).all(), ("odd_even", merge, tag, n)
+        out = distributed_sort(jnp.asarray(x), mesh, axis="d", engine="sample")
+        assert (np.asarray(out) == want).all(), ("sample", tag, n)
+        out = distributed_sort(jnp.asarray(x), mesh, axis="d", engine="auto")
+        assert (np.asarray(out) == want).all(), ("auto", tag, n)
+
+# kv permutation invariant: keys sorted AND the (k, v) multiset preserved
+k = rng.integers(0, 7, 1001).astype(np.uint32)
+v = np.arange(1001, dtype=np.uint32)
+for eng in ("odd_even", "sample"):
+    ok, ov = distributed_sort_kv(jnp.asarray(k), jnp.asarray(v), mesh,
+                                 axis="d", engine=eng)
+    assert list(zip(np.asarray(ok).tolist(), np.asarray(ov).tolist())) == \
+        sorted(zip(k.tolist(), v.tolist())), eng
+
+# lex invariant: 2 x uint32 lanes == one uint64 sort
+full = rng.integers(0, 1 << 63, 999, dtype=np.uint64)
+hi, lo = (full >> 32).astype(np.uint32), (full & 0xFFFFFFFF).astype(np.uint32)
+for eng in ("odd_even", "sample"):
+    shi, slo = distributed_sort_lex([jnp.asarray(hi), jnp.asarray(lo)],
+                                    mesh, axis="d", engine=eng)
+    got = (np.asarray(shi).astype(np.uint64) << 32) | np.asarray(slo)
+    assert (got == np.sort(full)).all(), eng
+
+# float lanes: +/-inf through the sample exchange
+f = rng.normal(size=555).astype(np.float32)
+f[::7], f[1::9] = np.inf, -np.inf
+out = distributed_sort(jnp.asarray(f), mesh, axis="d", engine="sample")
+assert (np.asarray(out) == np.sort(f)).all()
+print("ENGINES_OK")
+"""
+
+
+def test_engines_differential_multidevice():
+    """Both engines x all merge strategies == np.sort on adversarial inputs
+    (random / duplicate-heavy / sentinel-colliding / over-capacity skew),
+    divisible and non-divisible sizes, key-only + kv + lex."""
+    assert "ENGINES_OK" in _run_multidev(_ENGINES_SCRIPT)
+
+
+_PROTOCOL_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core.distributed import sample_sort, sample_sort_lex
+from repro.parallel.compat import AxisType, make_mesh, shard_map
+
+mesh = make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
+rng = np.random.default_rng(0)
+
+def run_key(x, **kw):
+    def body(blk):
+        vals, count = sample_sort(blk, axis_name="d", **kw)
+        return vals, count[None]
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P("d"),
+                           out_specs=(P("d"), P("d"))))
+    vals, counts = fn(jnp.asarray(x))
+    vals, counts = np.asarray(vals).reshape(8, -1), np.asarray(counts)
+    return np.concatenate([vals[i, :counts[i]] for i in range(8)]), counts
+
+# regression (ISSUE 3): real elements AT the sentinel value must be counted —
+# the old protocol inferred counts from `out < sentinel` / isfinite(out)
+u = np.full(8 * 64, np.iinfo(np.uint32).max, np.uint32)
+u[:100] = rng.integers(0, 50, 100)
+got, counts = run_key(u)
+assert counts.sum() == u.size, counts
+assert (got == np.sort(u)).all()
+
+f = rng.normal(size=8 * 32).astype(np.float32)
+f[::3] = np.inf
+got, counts = run_key(f)
+assert counts.sum() == f.size, counts
+assert (got == np.sort(f)).all()
+
+i = np.full(8 * 32, np.iinfo(np.int32).max, np.int32)
+got, counts = run_key(i)
+assert counts.sum() == i.size and (got == i[0]).all()
+
+# capacity overflow is FLAGGED, never silent: all-equal input routes every
+# element to one destination, capacity 8 < B=64 must clip and report
+def body(blk):
+    res = sample_sort_lex([blk], axis_name="d", capacity=8)
+    return res.lanes[0], res.count[None], res.overflow[None]
+fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P("d"),
+                       out_specs=(P("d"), P("d"), P("d"))))
+_, _, ovf = fn(jnp.asarray(np.full(8 * 64, 7, np.int32)))
+assert np.asarray(ovf).any()
+
+# default capacity: same skew, zero loss, overflow False everywhere
+def body2(blk):
+    res = sample_sort_lex([blk], axis_name="d")
+    return res.lanes[0], res.count[None], res.overflow[None]
+fn2 = jax.jit(shard_map(body2, mesh=mesh, in_specs=P("d"),
+                        out_specs=(P("d"), P("d"), P("d"))))
+vals, counts, ovf = fn2(jnp.asarray(np.full(8 * 64, 7, np.int32)))
+assert not np.asarray(ovf).any()
+assert np.asarray(counts).sum() == 8 * 64
+print("PROTOCOL_OK")
+"""
+
+
+def test_exchange_protocol_exact_counts():
+    """The exact-count exchange protocol: sentinel-valued reals counted,
+    overflow flagged, zero loss at default capacity."""
+    assert "PROTOCOL_OK" in _run_multidev(_PROTOCOL_SCRIPT)
+
+
+_PALLAS_LOCAL_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import distributed_sort, distributed_sort_lex
+from repro.parallel.compat import AxisType, make_mesh
+
+mesh = make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
+rng = np.random.default_rng(0)
+x = rng.integers(0, 10**6, 8 * 64).astype(np.int32)
+for eng in ("sample", "odd_even"):
+    out = distributed_sort(jnp.asarray(x), mesh, axis="d", engine=eng,
+                           merge="resort", local_sort="pallas")
+    assert (np.asarray(out) == np.sort(x)).all(), eng
+k = rng.integers(0, 9, 8 * 64).astype(np.uint32)
+v = np.arange(8 * 64, dtype=np.uint32)
+(ok,), ov = distributed_sort_lex([jnp.asarray(k)], mesh, axis="d",
+                                 vals=jnp.asarray(v), engine="sample",
+                                 local_sort="pallas")
+assert list(zip(np.asarray(ok).tolist(), np.asarray(ov).tolist())) == \
+    sorted(zip(k.tolist(), v.tolist()))
+print("PALLAS_LOCAL_OK")
+"""
+
+
+def test_pallas_local_sort_in_mesh():
+    """Device-local sorting through the Pallas ``ops.sort_lex`` front-end
+    (interpret mode) composes with both mesh engines."""
+    assert "PALLAS_LOCAL_OK" in _run_multidev(_PALLAS_LOCAL_SCRIPT)
+
+
+_ADMISSION_SCRIPT = r"""
+import numpy as np, jax
+from repro.parallel.compat import AxisType, make_mesh
+from repro.serve.scheduler import BucketedScheduler, Request
+
+mesh = make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
+rng = np.random.default_rng(0)
+rs = [Request(i, list(rng.integers(1, 40, rng.integers(1, 20))))
+      for i in range(200)]
+single = BucketedScheduler._order_by_length(rs)
+sharded = BucketedScheduler._order_by_length(rs, mesh=mesh, axis="d")
+# same shortlex admission order whether sorted on one device or the mesh
+assert [r.request_id for r in sharded] == [r.request_id for r in single]
+print("ADMISSION_OK")
+"""
+
+
+def test_sharded_admission_matches_single_device():
+    """BucketedScheduler(admission_mesh=...) must admit in exactly the order
+    the single-device lex sort produces."""
+    assert "ADMISSION_OK" in _run_multidev(_ADMISSION_SCRIPT)
+
+
+# ------------------------------------------------------------------ slow tier
+
+_SWEEP_SCRIPT = r"""
+import sys, numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import distributed_sort
+from repro.parallel.compat import AxisType, make_mesh
+
+mesh = make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
+xs = np.asarray([int(t) for t in sys.argv[1].split(",")], np.int32)
+engine = sys.argv[2]
+out = distributed_sort(jnp.asarray(xs), mesh, axis="d", engine=engine)
+assert (np.asarray(out) == np.sort(xs)).all()
+print("SWEEP_OK")
+"""
+
+
+@pytest.mark.slow
+@settings(max_examples=5, deadline=None)
+@given(
+    xs=st.lists(st.integers(-(2**31), 2**31 - 1), min_size=1, max_size=300),
+    engine=st.sampled_from(["odd_even", "sample"]),
+)
+def test_engine_vs_sort_hypothesis(xs, engine):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-c", _SWEEP_SCRIPT,
+         ",".join(str(x) for x in xs), engine],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SWEEP_OK" in out.stdout

@@ -84,14 +84,18 @@ mesh = make_mesh((8,), ("d",), axis_types=(AxisType.Auto,))
 rng = np.random.default_rng(0)
 
 # distributed odd-even block sort == global sort, all merge strategies
+# (engine pinned: 'auto' routes P=8 to sample, covered in
+# tests/test_distributed_sort.py)
 x = jnp.asarray(rng.integers(0, 10**6, 8 * 128), dtype=jnp.int32)
 for merge in ("resort", "bitonic", "take"):
-    out = distributed_sort(x, mesh, axis="d", merge=merge)
+    out = distributed_sort(x, mesh, axis="d", engine="odd_even", merge=merge)
     assert (out == jnp.sort(x)).all(), merge
 
-# duplicate-heavy input
+# duplicate-heavy input, both the pinned engine and the auto cost model
 xd = jnp.asarray(rng.integers(0, 5, 8 * 64), dtype=jnp.int32)
-assert (distributed_sort(xd, mesh, axis="d", merge="bitonic") == jnp.sort(xd)).all()
+assert (distributed_sort(xd, mesh, axis="d", engine="odd_even",
+                         merge="bitonic") == jnp.sort(xd)).all()
+assert (distributed_sort(xd, mesh, axis="d") == jnp.sort(xd)).all()
 
 # ring all-reduce == psum
 y = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))

@@ -72,3 +72,16 @@ def test_scheduler_routes_by_bucket():
     assert all(len(r.tokens) == 3 for r in results)
     stats = BucketedScheduler.padding_stats(reqs, [8, 16, 32])
     assert stats["bucketed_waste"] <= stats["global_waste"] + 1e-9
+
+
+def test_padding_stats_overlong_request_clamped():
+    """Regression (ISSUE 3): a request longer than every bound used to add
+    *negative* padding (bound - l < 0), understating bucketed waste — its
+    contribution must clamp to zero."""
+    reqs = [Request(0, list(range(4))),    # pads 8 - 4 = 4
+            Request(1, list(range(50)))]   # longer than max(bounds): pads 0
+    stats = BucketedScheduler.padding_stats(reqs, [8, 16])
+    padded = 4  # the overlong request must contribute 0, not 16 - 50 = -34
+    want = padded / (padded + 4 + 50)
+    assert abs(stats["bucketed_waste"] - want) < 1e-12
+    assert stats["bucketed_waste"] > 0
