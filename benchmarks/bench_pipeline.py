@@ -1,0 +1,91 @@
+"""Ingest-pipeline benchmarks: host vs device distribute, and one-launch vs
+chunked sorted-run streaming.
+
+Two sweeps, both appended to the BENCH_kernels.json trajectory by
+benchmarks/run.py:
+
+  * ``pipeline/bucketize/*`` — the paper's phases 1-2 as the host dict loop
+    (``core.bucketing.bucketize_words``, the seed implementation) vs the
+    device path (``kernels.ops.bucketize``: Pallas histogram/rank pass + one
+    scatter). Host cost includes packing because the host loop *is* the
+    packing-adjacent stage being replaced; device cost is measured from
+    packed tensors, which is where the production path starts.
+  * ``pipeline/chunked/*`` — ``core.bucketing.sorted_packed`` in one launch
+    vs ``pipeline.chunked_sort_packed`` streaming the same input through
+    smaller chunks + run merges, the beyond-one-launch path.
+
+On this CPU container Pallas runs interpret-mode, so absolute numbers are
+wall-clock of the interpreter; the host/device *ratio* trend and the
+chunking overhead factor are the tracked signals. ``BENCH_PIPELINE_TINY=1``
+(CI smoke) shrinks sizes to compile-bound minimums so the end-to-end path
+is exercised on every push without minutes of XLA compile.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bucketing import bucketize_words, sorted_packed
+from repro.core.packing import pack_words
+from repro.kernels import bucketize
+from repro.pipeline import chunked_sort_packed
+
+from .common import emit, timeit
+
+_TINY = bool(int(os.environ.get("BENCH_PIPELINE_TINY", "0")))
+
+# Full sizes are sized for this container's interpret-mode XLA compiles
+# (width ~512 is minutes of compile; the compile is paid once per shape and
+# the chunked path reuses one executable across chunks).
+_BUCKETIZE_NS = [256, 1024] if _TINY else [1024, 4096, 16384]
+_CHUNK_CASES = [(256, 128)] if _TINY else [(1024, 256), (2048, 512)]
+
+
+def _words(n, rng, max_len=11):
+    alpha = list("abcdefghijklmnop")
+    return ["".join(rng.choice(alpha, l))
+            for l in rng.integers(1, max_len + 1, n)]
+
+
+def host_vs_device_bucketize():
+    rng = np.random.default_rng(0)
+    for n in _BUCKETIZE_NS:
+        words = _words(n, rng)
+        keys = jnp.asarray(pack_words(words))
+
+        def host(ws):
+            return bucketize_words(ws).keys
+
+        t_host = timeit(host, words, iters=3)
+        t_dev = timeit(lambda k: bucketize(k)[0], keys, iters=3)
+        emit(f"pipeline/bucketize/host/n{n}", t_host * 1e6, "dict-loop")
+        emit(f"pipeline/bucketize/device/n{n}", t_dev * 1e6,
+             f"vs_host={t_host / t_dev:.2f}x")
+
+
+def single_launch_vs_chunked():
+    rng = np.random.default_rng(1)
+    for n, chunk in _CHUNK_CASES:
+        words = _words(n, rng, max_len=7)
+        keys = jnp.asarray(pack_words(words))
+        nb_runs = -(-n // chunk)
+
+        t_one = timeit(lambda k: sorted_packed(k)[1], keys, iters=1)
+        t_chk = timeit(
+            lambda k: chunked_sort_packed(k, chunk_size=chunk).keys,
+            keys, iters=1)
+        emit(f"pipeline/single_launch/n{n}", t_one * 1e6, "one fused program")
+        emit(f"pipeline/chunked/n{n}/c{chunk}", t_chk * 1e6,
+             f"runs={nb_runs};vs_single={t_one / t_chk:.2f}x")
+
+
+def main():
+    host_vs_device_bucketize()
+    single_launch_vs_chunked()
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,13 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. Sort a word list with the paper's pipeline (bucket by length -> parallel
-   comparator sort -> shortlex order).
+1. Sort a word list with the paper's pipeline (on-device bucketize ->
+   parallel comparator sort -> shortlex order; the distribute step is a
+   Pallas kernel, not a host loop).
 2. Same comparator network as a Pallas TPU kernel (interpret mode on CPU).
-3. The technique inside an LM: sort-based MoE dispatch on a tiny model.
+3. Chunked ingest: stream words through fixed-size launches as sorted runs
+   combined by a k-way lex merge (inputs beyond one launch).
+4. The technique inside an LM: sort-based MoE dispatch on a tiny model.
 """
 
 import jax
@@ -14,7 +17,8 @@ import numpy as np
 
 from repro.core import bucketed_sort_words, pack_words, unpack_words
 from repro.data import synthetic_words
-from repro.kernels import sort_rows, sort_rows_ref
+from repro.kernels import bucketize, sort_rows, sort_rows_ref
+from repro.pipeline import chunked_sort_words
 from repro.configs import get_smoke_config
 from repro.models import forward, init_lm
 from repro.parallel.sharding import Rules
@@ -25,8 +29,9 @@ def demo_paper_pipeline():
     out = bucketed_sort_words(words, algorithm="oets")
     expect = sorted(words, key=lambda w: (len(w), w))
     assert out == expect
+    n_buckets = int((bucketize(jnp.asarray(pack_words(words)))[1] > 0).sum())
     print(f"[1] bucketed OETS sorted {len(words)} words "
-          f"({len(set(len(w) for w in words))} length buckets) -> shortlex OK")
+          f"({n_buckets} device-built length buckets) -> shortlex OK")
 
 
 def demo_pallas_kernel():
@@ -38,17 +43,28 @@ def demo_pallas_kernel():
     print("[2] Pallas OETS kernel == jnp oracle on (8,256) rows OK")
 
 
+def demo_chunked_pipeline():
+    words = synthetic_words(600, seed=2)
+    chunk = 128  # one lane tile wide -> the fused program stays in the OETS tier
+    out = chunked_sort_words(words, chunk_size=chunk)
+    assert out == sorted(words, key=lambda w: (len(w), w))
+    n_runs = -(-len(words) // chunk)
+    print(f"[3] chunked ingest: {len(words)} words -> {n_runs} sorted runs "
+          f"(chunk={chunk}) -> merge-path combine -> shortlex OK")
+
+
 def demo_moe_lm():
     cfg = get_smoke_config("granite-moe-1b-a400m")  # MoE arch, sort dispatch
     params, _ = init_lm(cfg, jax.random.PRNGKey(0))
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)}
     logits, aux, _ = forward(cfg, params, batch, Rules())
-    print(f"[3] granite-moe forward with sort-based dispatch: "
+    print(f"[4] granite-moe forward with sort-based dispatch: "
           f"logits {tuple(logits.shape)}, aux-loss {float(aux):.4f} OK")
 
 
 if __name__ == "__main__":
     demo_paper_pipeline()
     demo_pallas_kernel()
+    demo_chunked_pipeline()
     demo_moe_lm()
     print("quickstart complete")

@@ -14,7 +14,8 @@ from .packing import pack_words, unpack_words, lanes_for_width, SENTINEL_U32
 from .oets import oets_sort, oets_sort_kv, oets_argsort, lex_gt
 from .bitonic import (bitonic_sort, bitonic_sort_kv, bitonic_merge,
                       bitonic_merge_kv, bitonic_merge_lex)
-from .bucketing import Buckets, bucketize_words, sort_buckets, bucketed_sort_words
+from .bucketing import (Buckets, bucketize_words, bucketize_packed,
+                        sort_buckets, sorted_packed, bucketed_sort_words)
 from .blocksort import (block_sort, block_sort_kv, block_sort_lex,
                         default_block_size)
 from .distributed import (choose_engine, odd_even_block_sort,
@@ -29,7 +30,8 @@ __all__ = [
     "oets_sort", "oets_sort_kv", "oets_argsort", "lex_gt",
     "bitonic_sort", "bitonic_sort_kv", "bitonic_merge", "bitonic_merge_kv",
     "bitonic_merge_lex",
-    "Buckets", "bucketize_words", "sort_buckets", "bucketed_sort_words",
+    "Buckets", "bucketize_words", "bucketize_packed", "sort_buckets",
+    "sorted_packed", "bucketed_sort_words",
     "block_sort", "block_sort_kv", "block_sort_lex", "default_block_size",
     "choose_engine", "odd_even_block_sort", "odd_even_block_sort_lex",
     "sample_sort", "sample_sort_lex", "sample_sort_exact",

@@ -14,10 +14,27 @@ renderings of the same decomposition.
 The concatenation of sorted buckets in increasing length order yields
 *shortlex* order (length-major, then alphabetic) — exactly the order the
 paper's phases 2+3 produce.
+
+The distribute step itself (phases 1-2) also runs on device:
+``bucketize_packed``/``sorted_packed`` route through
+``kernels.ops.distribute``/``bucketize`` — the Pallas length-histogram +
+stable-rank pass plus one scatter — so ``bucketed_sort_words`` has **zero
+host-side per-word Python loops between packing and unpacking**:
+bytes pack in (host ingress), one distribute launch + one jitted
+scatter→segmented-sort→compaction program, bytes unpack out (host egress).
+``bucketize_words`` below is kept as the host reference implementation the
+differential tests compare against. Device buckets are *dense per-length*
+(bucket id = byte length, empty lengths hold count 0), whereas the host
+reference only materializes lengths that occur; the sorted concatenations
+agree exactly.
+
+Chunked ingest of inputs larger than one launch lives one layer up in
+``repro.pipeline`` (per-chunk ``sorted_packed`` runs + k-way lex merge).
 """
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import jax
@@ -28,7 +45,8 @@ from . import packing
 from .bitonic import bitonic_sort
 from .oets import oets_sort
 
-__all__ = ["Buckets", "bucketize_words", "sort_buckets", "bucketed_sort_words"]
+__all__ = ["Buckets", "bucketize_words", "bucketize_packed", "sort_buckets",
+           "sorted_packed", "bucketed_sort_words"]
 
 
 @dataclass
@@ -40,12 +58,42 @@ class Buckets:
     lengths: np.ndarray     # (num_buckets,) int32 — word length of each bucket
 
 
+def bucketize_packed(keys, capacity: int | None = None) -> Buckets:
+    """Device counterpart of :func:`bucketize_words`: distribute an already
+    packed (n, lanes) uint32 word tensor into the dense per-length bucket
+    tensor via ``kernels.ops.bucketize`` (Pallas histogram/rank pass + one
+    scatter) — no host per-word loop. Bucket ``l`` holds the words of byte
+    length ``l`` in arrival order; ``lengths`` is ``arange(4*lanes+1)``.
+    An explicit ``capacity`` that some bucket exceeds raises ``ValueError``
+    (the host reference's contract)."""
+    from ..kernels.ops import bucketize  # lazy: core imports kernels
+    keys = jnp.asarray(keys, jnp.uint32)
+    if keys.ndim != 2:
+        raise ValueError("keys must be (n, lanes) packed words")
+    bucket_keys, counts = bucketize(keys, capacity=capacity)
+    if capacity is not None and keys.shape[0]:
+        over = int(jnp.max(counts))
+        if over > capacity:
+            ln = int(jnp.argmax(counts))
+            raise ValueError(f"bucket for length {ln} exceeds capacity {capacity}")
+    return Buckets(keys=bucket_keys, counts=counts,
+                   lengths=jnp.arange(bucket_keys.shape[0], dtype=jnp.int32))
+
+
 def bucketize_words(words, capacity: int | None = None) -> Buckets:
     """Phase 2 of the paper's pre-processing: distribute words into
-    per-length sub-arrays sized by the length histogram."""
+    per-length sub-arrays sized by the length histogram.
+
+    Host reference implementation (the original Python dict loop) — the
+    production path is :func:`bucketize_packed` / ``kernels.ops.bucketize``
+    on device; the differential tests compare the two. Length is the
+    *encoded byte* length (the unit the packed lanes sort by — multi-byte
+    UTF-8 words bucket by their byte width), matching the device kernel and
+    the tests' byte-shortlex oracle."""
     by_len: dict[int, list] = {}
     for w in words:
-        by_len.setdefault(len(w), []).append(w)
+        nbytes = len(w.encode("utf-8")) if isinstance(w, str) else len(bytes(w))
+        by_len.setdefault(nbytes, []).append(w)
     if not by_len:
         return Buckets(
             keys=np.zeros((0, 0, 1), np.uint32),
@@ -97,16 +145,76 @@ def sort_buckets(keys: jax.Array, algorithm: str = "oets",
     raise ValueError(f"unknown algorithm {algorithm!r}")
 
 
+@functools.partial(jax.jit, static_argnames=("capacity", "algorithm"))
+def _fused_sort_packed(keys, *, capacity: int, algorithm: str):
+    """One jitted program: distribute scatter -> segmented bucket sort ->
+    shortlex compaction. ``keys`` (n, lanes) uint32 in; out come
+    ``(lengths (B*cap,), sorted (B*cap, lanes), counts (B,))`` with the
+    real words occupying the leading ``min(counts, cap).sum()`` slots in
+    exact shortlex order and sentinel fill beyond (the caller slices)."""
+    from ..kernels.ops import _scatter_to_buckets, distribute
+    n, lanes = keys.shape
+    num_buckets = 4 * lanes + 1
+    dest, rank, counts = distribute(keys)
+    buckets = _scatter_to_buckets(keys, dest, rank, num_buckets=num_buckets,
+                                  capacity=capacity)
+    counts_c = jnp.minimum(counts, capacity)
+    sorted_keys = sort_buckets(buckets, algorithm, counts=counts_c)
+    # compaction: bucket b's i-th real word lands at offset[b] + i — the
+    # concatenation-in-length-order of the paper's phase 4, as one scatter
+    offsets = jnp.cumsum(counts_c) - counts_c
+    slot_in = jnp.arange(capacity, dtype=jnp.int32)
+    valid = slot_in[None, :] < counts_c[:, None]
+    pos = jnp.where(valid, offsets[:, None] + slot_in[None, :],
+                    num_buckets * capacity).reshape(-1)
+    flat_keys = jnp.full((num_buckets * capacity + 1, lanes),
+                         packing.SENTINEL_U32, jnp.uint32
+                         ).at[pos].set(sorted_keys.reshape(-1, lanes))
+    blen = jnp.broadcast_to(jnp.arange(num_buckets, dtype=jnp.int32)[:, None],
+                            (num_buckets, capacity)).reshape(-1)
+    flat_lens = jnp.zeros((num_buckets * capacity + 1,), jnp.int32
+                          ).at[pos].set(blen)
+    m = num_buckets * capacity
+    return flat_lens[:m], flat_keys[:m], counts
+
+
+def sorted_packed(keys, algorithm: str = "pallas",
+                  capacity: int | None = None):
+    """Shortlex-sort a packed (n, lanes) uint32 word tensor entirely on
+    device: distribute -> segmented in-bucket sort -> compact, zero host
+    per-word loops. Returns ``(lengths (n,), sorted_keys (n, lanes))``
+    device arrays in exact shortlex order (length-major, then byte-wise).
+
+    ``capacity``: per-bucket slots for the fused program (static under jit);
+    ``None`` sizes it at the histogram max (one extra distribute launch +
+    one scalar sync); a too-small explicit capacity raises ``ValueError``
+    rather than dropping words. The per-chunk producer of the
+    ``repro.pipeline`` sorted-run tier."""
+    keys = jnp.asarray(keys, jnp.uint32)
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32), keys
+    if capacity is None:
+        from ..kernels.ops import distribute
+        _, _, counts = distribute(keys)
+        capacity = max(1, int(jnp.max(counts)))
+    flat_lens, flat_keys, counts = _fused_sort_packed(
+        keys, capacity=capacity, algorithm=algorithm)
+    if int(jnp.max(counts)) > capacity:
+        ln = int(jnp.argmax(counts))
+        raise ValueError(f"bucket for length {ln} exceeds capacity {capacity}")
+    return flat_lens[:n], flat_keys[:n]
+
+
 def bucketed_sort_words(words, algorithm: str = "oets") -> list:
-    """End-to-end paper pipeline: bucketize -> parallel in-bucket sort ->
-    concatenate in length order. Returns words in shortlex order."""
-    buckets = bucketize_words(words)
-    if buckets.keys.size == 0:
+    """End-to-end paper pipeline: pack -> on-device distribute -> parallel
+    in-bucket sort -> on-device shortlex compaction -> unpack. Returns words
+    in shortlex order. Between ``pack_words`` (ingress) and ``unpack_words``
+    (egress) every per-word step runs on device — the host reference
+    ``bucketize_words`` is never called (pinned by a mock-patch test)."""
+    words = list(words)
+    if not words:
         return []
-    sorted_keys = np.asarray(sort_buckets(jnp.asarray(buckets.keys), algorithm,
-                                          counts=jnp.asarray(buckets.counts)))
-    out = []
-    for i in range(sorted_keys.shape[0]):
-        cnt = int(buckets.counts[i])
-        out.extend(packing.unpack_words(sorted_keys[i, :cnt]))
-    return out
+    keys = jnp.asarray(packing.pack_words(words))
+    _, sorted_keys = sorted_packed(keys, algorithm=algorithm)
+    return packing.unpack_words(np.asarray(sorted_keys))

@@ -63,7 +63,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..kernels.lex import lex_gt_lanes
+from ..kernels.lex import lex_merge_take, lex_rank_count
 from ..kernels.ops import _sentinel
 from ..parallel.compat import axis_size
 from .bitonic import bitonic_merge, bitonic_merge_lex
@@ -106,38 +106,11 @@ def _merge_bitonic_lex(mine, theirs, sort_fn):
     return bitonic_merge_lex(mine, theirs)
 
 
-def _lex_rank_count(a_lanes, b_lanes, strict):
-    """For each element of ``b``: how many elements of ``a`` are lex-below
-    it (``strict``) or lex-at-or-below it (``not strict``). O(|a|·|b|)
-    broadcast compare — the merge-path rank at block granularity."""
-    a2 = [a[:, None] for a in a_lanes]
-    b2 = [b[None, :] for b in b_lanes]
-    cmp = lex_gt_lanes(b2, a2) if strict else ~lex_gt_lanes(a2, b2)
-    return jnp.sum(cmp, axis=0)
-
-
 def _merge_take_lex(mine, theirs, sort_fn):
-    # merge-path: position of each element in the merged output is its rank,
-    # rank = own index + count of smaller elements in the other block
-    # (strict one way, non-strict the other, so equal tuples get distinct
-    # ranks and every output slot is written exactly once). Key-only blocks
-    # rank in O(B log B) via searchsorted; lex tuples have no multi-lane
-    # searchsorted and pay the O(B^2) broadcast compare.
-    n = mine[0].shape[0]
-    if len(mine) == 1:
-        rank_mine = jnp.arange(n) + jnp.searchsorted(theirs[0], mine[0],
-                                                     side="left")
-        rank_theirs = jnp.arange(n) + jnp.searchsorted(mine[0], theirs[0],
-                                                       side="right")
-    else:
-        rank_mine = jnp.arange(n) + _lex_rank_count(theirs, mine, strict=True)
-        rank_theirs = jnp.arange(n) + _lex_rank_count(mine, theirs,
-                                                      strict=False)
-    out = []
-    for m, t in zip(mine, theirs):
-        o = jnp.zeros((2 * n,), m.dtype)
-        out.append(o.at[rank_mine].set(m).at[rank_theirs].set(t))
-    return out
+    # merge-path rank + scatter — the shared run-merge primitive
+    # (kernels/lex.lex_merge_take), the same combine the pipeline tier uses
+    # on its chunked sorted runs.
+    return lex_merge_take(mine, theirs)
 
 
 _MERGES_LEX = {"resort": _merge_resort_lex, "bitonic": _merge_bitonic_lex,
@@ -306,7 +279,7 @@ def _sample_partition_exchange(lanes, axis_name, n_valid, capacity,
     # bucket by splitter (the paper's phase-2 distribution step):
     # dest = #splitters lex<= element, via the shared lane-by-lane compare
     if num > 1:
-        dest = _lex_rank_count(splitters, local, strict=False).astype(jnp.int32)
+        dest = lex_rank_count(splitters, local, strict=False).astype(jnp.int32)
     else:
         dest = jnp.zeros((b,), jnp.int32)
     # rank within destination bucket via stable order (the valid prefix is

@@ -5,26 +5,28 @@ The paper buckets words by character count so equal-length items process
 together; an LM system buckets *sequences* by token count so batch padding
 is minimized. ``plan_buckets`` chooses boundaries from a length histogram
 (the paper: "sizes decided by the number of elements with the same
-length"); the batcher groups items and emits dense padded batches.
+length"); the batcher groups items and emits dense padded batches. The
+histogram/assignment statistic itself is shared with the serving admission
+layer through ``repro.pipeline.histogram`` — one phase-1 count, every
+consumer.
 """
 
 from __future__ import annotations
 
+import bisect
 from typing import Iterable, List, Sequence
 
 import numpy as np
+
+from ..pipeline.histogram import quantile_bounds
 
 __all__ = ["plan_buckets", "LengthBucketedBatcher", "padding_waste"]
 
 
 def plan_buckets(lengths: Sequence[int], n_buckets: int = 8) -> List[int]:
-    """Quantile-based bucket upper bounds covering the observed lengths."""
-    ls = np.sort(np.asarray(lengths))
-    qs = np.linspace(0, 1, n_buckets + 1)[1:]
-    bounds = sorted(set(int(ls[min(int(q * (len(ls) - 1)), len(ls) - 1)]) for q in qs))
-    if bounds[-1] < ls[-1]:
-        bounds.append(int(ls[-1]))
-    return bounds
+    """Quantile-based bucket upper bounds covering the observed lengths.
+    Empty input plans no buckets (``[]``) instead of raising."""
+    return quantile_bounds(lengths, n_buckets)
 
 
 def padding_waste(lengths: Sequence[int], batch_seq: int) -> float:
@@ -43,15 +45,22 @@ class LengthBucketedBatcher:
 
     def __init__(self, bounds: Sequence[int], batch_size: int, pad_value: int = 0):
         self.bounds = list(bounds)
+        if any(lo > hi for lo, hi in zip(self.bounds, self.bounds[1:])):
+            raise ValueError(f"bucket bounds must be ascending, got {self.bounds}")
         self.batch_size = batch_size
         self.pad_value = pad_value
         self._pending: dict[int, list] = {i: [] for i in range(len(self.bounds))}
 
     def _bucket_of(self, length: int) -> int:
-        for i, b in enumerate(self.bounds):
-            if length <= b:
-                return i
-        raise ValueError(f"length {length} exceeds largest bucket {self.bounds[-1]}")
+        # same first-bound->bucket statistic as pipeline.histogram's
+        # assign_buckets, but per-item on the add() hot path — bisect over
+        # the (validated-in-__init__) bounds instead of numpy array round
+        # trips; lengths beyond the largest planned bound stay rejected
+        i = bisect.bisect_left(self.bounds, length)
+        if i == len(self.bounds):
+            raise ValueError(
+                f"length {length} exceeds largest bucket {self.bounds[-1]}")
+        return i
 
     def add(self, item_id, seq) -> list:
         """Add one item; returns zero or more ready batches."""

@@ -7,17 +7,19 @@ pallas_call + BlockSpec definitions — all variadic over lex lane tuples via
 the shared comparator in ``lex.py`` — including the cross-block merge used
 by ``core/blocksort``."""
 
-from .lex import lex_gt_lanes
+from .lex import lex_gt_lanes, lex_merge_take, lex_rank_count
 from .merge_kernel import (merge_adjacent_kv_pallas, merge_adjacent_lex_pallas,
                            merge_adjacent_pallas)
-from .ops import (choose_plan, partition_rows, segmented_sort, sort, sort_kv,
-                  sort_lex, sort_rows, sort_rows_kv, sort_rows_lex)
+from .ops import (bucketize, choose_plan, distribute, partition_rows,
+                  segmented_sort, sort, sort_kv, sort_lex, sort_rows,
+                  sort_rows_kv, sort_rows_lex)
 from .ref import partition_rows_ref, sort_rows_kv_ref, sort_rows_ref
 
 __all__ = [
-    "sort", "sort_kv", "sort_lex", "segmented_sort", "choose_plan",
+    "sort", "sort_kv", "sort_lex", "segmented_sort", "distribute",
+    "bucketize", "choose_plan",
     "sort_rows", "sort_rows_kv", "sort_rows_lex", "partition_rows",
-    "lex_gt_lanes",
+    "lex_gt_lanes", "lex_merge_take", "lex_rank_count",
     "merge_adjacent_pallas", "merge_adjacent_kv_pallas",
     "merge_adjacent_lex_pallas",
     "sort_rows_ref", "sort_rows_kv_ref", "partition_rows_ref",

@@ -25,7 +25,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["lex_gt_lanes", "map_lanes", "select_lanes"]
+__all__ = ["lex_gt_lanes", "lex_rank_count", "lex_merge_take", "map_lanes",
+           "select_lanes"]
 
 
 def lex_gt_lanes(a_lanes, b_lanes):
@@ -46,6 +47,47 @@ def lex_gt_lanes(a_lanes, b_lanes):
         eq = eq & (a == b)
     a, b = a_lanes[-1], b_lanes[-1]
     return gt | (eq & (a > b))
+
+
+def lex_rank_count(a_lanes, b_lanes, strict):
+    """For each element of ``b``: how many elements of ``a`` are lex-below
+    it (``strict``) or lex-at-or-below it (``not strict``). O(|a|·|b|)
+    broadcast compare — the merge-path rank at block granularity. Shared by
+    the distributed sample-sort destination step, the odd-even 'take' merge,
+    and the pipeline run merge."""
+    a2 = [a[:, None] for a in a_lanes]
+    b2 = [b[None, :] for b in b_lanes]
+    cmp = lex_gt_lanes(b2, a2) if strict else ~lex_gt_lanes(a2, b2)
+    return jnp.sum(cmp, axis=0)
+
+
+def lex_merge_take(a_lanes, b_lanes):
+    """Merge two *sorted* lex-tuple runs into one sorted run of length
+    ``|a| + |b|`` via merge-path rank + scatter (no re-sort).
+
+    Each element's output position is its rank in the merged sequence:
+    own index + count of smaller elements in the other run — strict one way,
+    non-strict the other, so equal tuples get distinct ranks and every
+    output slot is written exactly once. Key-only runs rank in O(n log n)
+    via ``searchsorted``; wider tuples have no multi-lane searchsorted and
+    pay the O(|a|·|b|) broadcast compare. Runs may have different lengths.
+    """
+    a_lanes, b_lanes = list(a_lanes), list(b_lanes)
+    na, nb = a_lanes[0].shape[0], b_lanes[0].shape[0]
+    if len(a_lanes) == 1:
+        rank_a = jnp.arange(na) + jnp.searchsorted(b_lanes[0], a_lanes[0],
+                                                   side="left")
+        rank_b = jnp.arange(nb) + jnp.searchsorted(a_lanes[0], b_lanes[0],
+                                                   side="right")
+    else:
+        rank_a = jnp.arange(na) + lex_rank_count(b_lanes, a_lanes, strict=True)
+        rank_b = jnp.arange(nb) + lex_rank_count(a_lanes, b_lanes,
+                                                 strict=False)
+    out = []
+    for a, b in zip(a_lanes, b_lanes):
+        o = jnp.zeros((na + nb,), a.dtype)
+        out.append(o.at[rank_a].set(a).at[rank_b].set(b))
+    return out
 
 
 def map_lanes(fn, arrs):

@@ -16,6 +16,12 @@ Entry points:
     batched lex kernel launch over a whole (num_buckets, capacity, lanes)
     bucket tensor with per-bucket count masking (``core/bucketing``'s
     'pallas' path).
+  * ``distribute(keys)`` / ``bucketize(keys, capacity)`` — the paper's
+    phases 1-2 on device: the Pallas length-histogram + stable-rank pass
+    (``kernels/distribute_kernel.py``) plus one scatter places every packed
+    word into its per-length bucket — the ingest counterpart of
+    ``segmented_sort``, replacing the host dict loop of
+    ``core/bucketing.bucketize_words``.
   * ``sort_rows`` / ``sort_rows_kv`` / ``sort_rows_lex`` — the single-block
     row kernels (every row padded to one VMEM block; width bounded by the
     tile).
@@ -48,15 +54,19 @@ should quarantine them first; ``tests/test_ops_dtypes.py`` pins this.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from .bitonic_kernel import bitonic_rows_lex_pallas
+from .distribute_kernel import distribute_rows_pallas
 from .oets_kernel import oets_rows_lex_pallas
 from .partition_kernel import partition_rows_pallas
 
-__all__ = ["sort", "sort_kv", "sort_lex", "segmented_sort", "choose_plan",
-           "sort_rows", "sort_rows_kv", "sort_rows_lex", "partition_rows"]
+__all__ = ["sort", "sort_kv", "sort_lex", "segmented_sort", "distribute",
+           "bucketize", "choose_plan", "sort_rows", "sort_rows_kv",
+           "sort_rows_lex", "partition_rows"]
 
 _LANES = 128
 _SUBLANES = 8
@@ -219,6 +229,72 @@ def segmented_sort(keys, counts=None, algorithm: str = "auto",
                             algorithm=algorithm, block_size=block_size,
                             interpret=interpret)
     return jnp.stack(sorted_lanes, axis=-1)
+
+
+def distribute(keys, interpret: bool | None = None):
+    """Run the on-device distribute pass over packed words (the paper's
+    phases 1-2: count, then assign every element its sub-array slot).
+
+    ``keys``: (n, lanes) uint32 packed words (``core/packing.pack_words``).
+    Returns ``(dest, rank, counts)``: ``dest`` (n,) int32 — each word's byte
+    length, which *is* its bucket id (buckets are dense per-length, id 0 =
+    the empty word); ``rank`` (n,) int32 — the word's stable slot within
+    its bucket (arrival order); ``counts`` (num_buckets,) int32 — the
+    length histogram, ``num_buckets = 4 * lanes + 1``. All on device; the
+    kernel carries running counts across grid steps, so ranks are globally
+    stable without a host prefix pass.
+    """
+    interpret = _auto_interpret(interpret)
+    n, lanes = keys.shape
+    num_buckets = 4 * lanes + 1
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                jnp.zeros((num_buckets,), jnp.int32))
+    n_pad = max(_LANES, -(-n // _LANES) * _LANES)
+    keys_t = jnp.zeros((lanes, n_pad), jnp.uint32).at[:, :n].set(
+        jnp.asarray(keys, jnp.uint32).T)
+    dest, rank, counts = distribute_rows_pallas(
+        keys_t, n_valid=n, num_buckets=num_buckets, interpret=interpret)
+    return dest[0, :n], rank[0, :n], counts[0, :num_buckets]
+
+
+def bucketize(keys, capacity: int | None = None,
+              interpret: bool | None = None):
+    """Scatter packed words into the paper's dense per-length bucket tensor
+    — ``bucketize_words``'s host dict loop as one kernel pass + one device
+    scatter.
+
+    ``keys``: (n, lanes) uint32 packed words. ``capacity``: slots per bucket
+    (static under jit); ``None`` sizes it at the exact histogram max, which
+    costs one scalar device->host sync — pass an explicit capacity to stay
+    inside a single jitted program. Returns ``(buckets, counts)``:
+    ``buckets`` (num_buckets, capacity, lanes) uint32 with bucket ``l``
+    holding the words of byte length ``l`` in arrival order and all unused
+    slots at the sentinel; ``counts`` (num_buckets,) int32 *true* counts —
+    when an explicit capacity is exceeded the excess words are dropped from
+    the tensor but still counted, so callers detect overflow by
+    ``counts.max() > capacity`` (mirrors the distributed exact-count
+    protocol: occupancy is never inferred from sentinel compares).
+    """
+    n, lanes = keys.shape
+    num_buckets = 4 * lanes + 1
+    dest, rank, counts = distribute(keys, interpret=interpret)
+    if capacity is None:
+        capacity = max(1, int(jnp.max(counts))) if n else 0
+    return _scatter_to_buckets(jnp.asarray(keys, jnp.uint32), dest, rank,
+                               num_buckets=num_buckets,
+                               capacity=capacity), counts
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "capacity"))
+def _scatter_to_buckets(keys, dest, rank, *, num_buckets, capacity):
+    n, lanes = keys.shape
+    flat = jnp.full((num_buckets * capacity + 1, lanes),
+                    jnp.uint32(0xFFFFFFFF), jnp.uint32)
+    keep = rank < capacity
+    slot = jnp.where(keep, dest * capacity + rank, num_buckets * capacity)
+    return flat.at[slot].set(keys)[: num_buckets * capacity].reshape(
+        num_buckets, capacity, lanes)
 
 
 def sort_rows(x, algorithm: str = "oets", interpret: bool | None = None):

@@ -1,0 +1,48 @@
+"""Streaming ingest pipeline: the paper's pre-processing at beyond-launch
+scale.
+
+One device launch bounds how much the fused bucketize + segmented-sort
+program can swallow (the bucket tensor is ``num_buckets * capacity * lanes``
+in VMEM-bounded tiles). This subsystem streams arbitrarily large inputs
+through it in fixed-size chunks — the MPI follow-up's shape (locally sorted
+runs combined by merge) rendered as a host-side driver over the same device
+kernels:
+
+  ``ingest``     chunked sort: pack -> per-chunk fused bucketize+segmented
+                 sort (``core.bucketing.sorted_packed``) -> sorted runs ->
+                 k-way merge; ``chunked_sort_words`` is the words front-end.
+  ``merge``      the run combiner: tournament tree of merge-path takes over
+                 shortlex lex tuples (``kernels.lex.lex_merge_take`` — the
+                 same primitive ``core/distributed``'s 'take' merge uses).
+  ``histogram``  the shared length-histogram / bucket-assignment utility
+                 that ``data.bucketing`` planning and ``serve.scheduler``
+                 admission both consume (one implementation of the paper's
+                 phase-1 count, three call sites).
+"""
+
+from .histogram import (assign_buckets, bucket_of, length_histogram,
+                        quantile_bounds)
+
+__all__ = [
+    "DEFAULT_CHUNK", "SortedRun", "sorted_run",
+    "chunked_sort_packed", "chunked_sort_words",
+    "merge_runs", "merge_two",
+    "length_histogram", "assign_buckets", "bucket_of", "quantile_bounds",
+]
+
+# ``histogram`` is a numpy-only leaf the data/serve layers import on their
+# hot import path; the ingest/merge device stack (jax + kernels + core)
+# loads lazily (PEP 562) so ``from repro.pipeline import assign_buckets``
+# never pays the jax import.
+_LAZY = {
+    "DEFAULT_CHUNK": "ingest", "SortedRun": "ingest", "sorted_run": "ingest",
+    "chunked_sort_packed": "ingest", "chunked_sort_words": "ingest",
+    "merge_runs": "merge", "merge_two": "merge",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from importlib import import_module
+        return getattr(import_module(f".{_LAZY[name]}", __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

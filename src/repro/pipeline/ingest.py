@@ -1,0 +1,112 @@
+"""Chunked ingest: stream datasets larger than one device launch through the
+fused bucketize + segmented-sort program.
+
+The shape is the MPI follow-up's (*Parallelize Bubble and Merge Sort
+Algorithms Using MPI*): produce locally sorted runs, combine them by merge.
+Here a "processor" is one device launch — each fixed-size chunk of packed
+words runs ``core.bucketing.sorted_packed`` (on-device distribute ->
+segmented in-bucket sort -> shortlex compaction) to yield a
+:class:`SortedRun`, and runs combine with the merge-path tournament of
+``pipeline.merge``. The *per-launch* working set is bounded by the chunk
+size — the fused program's bucket tensor is ``O(num_buckets *
+chunk_capacity)`` regardless of total input length, and every chunk reuses
+the same compiled executable (chunks share one static shape; only the tail
+chunk re-traces). The run *merge* is not yet similarly bounded: multi-lane
+tuples take ``lex_rank_count``'s O(|a|·|b|) broadcast compare, so the final
+tournament rounds dominate memory at large n — the u64 composite rank key
+that would make every round searchsorted-cheap is a ROADMAP open item.
+
+Runs carry an explicit length lane so the merge key is the shortlex tuple
+``(length, lane_0, ..., lane_L-1)`` — packed keys alone order
+byte-lexicographically ("aa" < "z"), not shortlex ("z" < "aa").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import packing
+from ..core.bucketing import sorted_packed
+from .merge import merge_runs
+
+__all__ = ["DEFAULT_CHUNK", "SortedRun", "sorted_run",
+           "chunked_sort_packed", "chunked_sort_words"]
+
+# Chunk size balancing launch count against the fused program's bucket
+# tensor footprint (num_buckets * capacity * lanes uint32 slots; capacity
+# <= chunk). Any multiple of the 128-lane tile works.
+DEFAULT_CHUNK = 4096
+
+
+@dataclass
+class SortedRun:
+    """One shortlex-sorted run: ``lengths[i]`` is the byte length of the
+    word packed in ``keys[i]``; rows ascend by ``(length, bytes)``."""
+
+    lengths: jnp.ndarray   # (m,) int32
+    keys: jnp.ndarray      # (m, lanes) uint32
+
+    def lanes(self):
+        """The run as a merge-ready lex tuple (length lane first)."""
+        return (self.lengths,
+                *(self.keys[:, l] for l in range(self.keys.shape[1])))
+
+    @classmethod
+    def from_lanes(cls, lanes):
+        return cls(lengths=lanes[0], keys=jnp.stack(lanes[1:], axis=1))
+
+
+def sorted_run(keys, algorithm: str = "pallas",
+               capacity: int | None = None) -> SortedRun:
+    """Sort one packed (n, lanes) chunk on device into a :class:`SortedRun`
+    (the per-chunk fused bucketize + segmented-sort launch)."""
+    lengths, sorted_keys = sorted_packed(keys, algorithm=algorithm,
+                                         capacity=capacity)
+    return SortedRun(lengths=lengths, keys=sorted_keys)
+
+
+def chunked_sort_packed(keys, chunk_size: int = DEFAULT_CHUNK,
+                        algorithm: str = "pallas",
+                        capacity: int | None = None) -> SortedRun:
+    """Shortlex-sort a packed (n, lanes) uint32 tensor of any length by
+    streaming ``chunk_size`` rows per launch and merging the sorted runs.
+
+    ``capacity`` (per-bucket slots of the fused program) defaults to
+    ``chunk_size`` for full chunks — the worst case (every word one length),
+    so all full chunks share one compiled executable with no histogram sync;
+    pass a smaller value to shrink the bucket tensor when the length
+    distribution is known. Returns the full-input :class:`SortedRun`.
+    """
+    keys = jnp.asarray(keys, jnp.uint32)
+    n = keys.shape[0]
+    if chunk_size < 1:
+        raise ValueError("chunk_size must be >= 1")
+    if n == 0:
+        return SortedRun(lengths=jnp.zeros((0,), jnp.int32), keys=keys)
+    runs = []
+    for start in range(0, n, chunk_size):
+        chunk = keys[start: start + chunk_size]
+        cap = capacity if capacity is not None else int(chunk.shape[0])
+        runs.append(sorted_run(chunk, algorithm=algorithm, capacity=cap))
+    if len(runs) == 1:
+        return runs[0]
+    return SortedRun.from_lanes(merge_runs([r.lanes() for r in runs]))
+
+
+def chunked_sort_words(words, chunk_size: int = DEFAULT_CHUNK,
+                       algorithm: str = "pallas",
+                       capacity: int | None = None) -> list:
+    """Words front-end: pack once at the global width (ingress), chunked
+    device sort + run merge, unpack once (egress). Returns the words in
+    shortlex order — bit-identical to ``core.bucketed_sort_words`` but with
+    per-launch device memory bounded by ``chunk_size``."""
+    words = list(words)
+    if not words:
+        return []
+    keys = jnp.asarray(packing.pack_words(words))
+    run = chunked_sort_packed(keys, chunk_size=chunk_size,
+                              algorithm=algorithm, capacity=capacity)
+    return packing.unpack_words(np.asarray(run.keys))

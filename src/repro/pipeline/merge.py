@@ -1,0 +1,55 @@
+"""Run combiner: k-way merge of sorted lex-tuple runs on device.
+
+A *run* here is a tuple of parallel 1-D arrays already sorted by the
+lane-by-lane lexicographic order (``kernels/lex.py`` conventions — for the
+word pipeline the tuple is ``(length, key_lane_0, ..., key_lane_L-1)``, i.e.
+shortlex). Two runs combine with one merge-path take
+(``kernels.lex.lex_merge_take``: rank = own index + cross-run rank count,
+then a single scatter — no re-sort), the same primitive the distributed
+odd-even engine's 'take' merge uses on its block exchanges; k runs combine
+as a tournament tree, log2(k) rounds of pairwise merges, so total compare
+work is O(n log k) in the searchsorted (key-only) regime.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..kernels.lex import lex_merge_take
+
+__all__ = ["merge_two", "merge_runs"]
+
+
+@jax.jit
+def _merge2(a_lanes, b_lanes):
+    return tuple(lex_merge_take(list(a_lanes), list(b_lanes)))
+
+
+def merge_two(a_lanes, b_lanes):
+    """Merge two sorted lex-tuple runs (tuples of parallel 1-D arrays, may
+    differ in length) into one sorted run. Jitted per (shape, arity)."""
+    a_lanes, b_lanes = tuple(a_lanes), tuple(b_lanes)
+    if len(a_lanes) != len(b_lanes):
+        raise ValueError("runs must have the same lane arity")
+    if a_lanes[0].shape[0] == 0:
+        return b_lanes
+    if b_lanes[0].shape[0] == 0:
+        return a_lanes
+    return _merge2(a_lanes, b_lanes)
+
+
+def merge_runs(runs):
+    """Tournament-tree k-way merge: pairwise :func:`merge_two` rounds until
+    one run remains. ``runs``: non-empty list of sorted lex-tuple runs of
+    equal arity. Chunked ingest produces at most two distinct run lengths
+    (full chunks + one tail), so the tree re-traces only O(log k) shapes."""
+    runs = [tuple(r) for r in runs]
+    if not runs:
+        raise ValueError("need at least one run")
+    while len(runs) > 1:
+        nxt = [merge_two(runs[i], runs[i + 1])
+               for i in range(0, len(runs) - 1, 2)]
+        if len(runs) % 2:
+            nxt.append(runs[-1])
+        runs = nxt
+    return runs[0]

@@ -27,6 +27,7 @@ import numpy as np
 
 from ..data.bucketing import plan_buckets
 from ..kernels.ops import sort_lex
+from ..pipeline.histogram import assign_buckets
 from .engine import Engine, GenerationResult
 
 __all__ = ["Request", "BucketedScheduler"]
@@ -61,14 +62,12 @@ class BucketedScheduler:
         lengths = [len(r.prompt) for r in requests]
         bounds = self.bounds or plan_buckets(lengths, self.n_buckets)
 
+        # shared phase-1 statistic (pipeline.histogram): one vectorized
+        # searchsorted assigns every request, over-long prompts clamp to the
+        # last bucket — the same utility data.bucketing plans with
         buckets: dict[int, list] = {i: [] for i in range(len(bounds))}
-        for r in requests:
-            for i, b in enumerate(bounds):
-                if len(r.prompt) <= b:
-                    buckets[i].append(r)
-                    break
-            else:
-                buckets[len(bounds) - 1].append(r)
+        for r, b in zip(requests, assign_buckets(lengths, bounds, clamp=True)):
+            buckets[int(b)].append(r)
 
         results = []
         for i, rs in buckets.items():
@@ -142,9 +141,7 @@ class BucketedScheduler:
         the contribution is clamped at zero."""
         lens = np.array([len(r.prompt) for r in requests])
         global_waste = 1.0 - lens.sum() / (len(lens) * lens.max())
-        padded = 0
-        for l in lens:
-            bound = next((b for b in bounds if l <= b), max(bounds))
-            padded += max(bound - l, 0)
+        bound_arr = np.asarray(bounds)[assign_buckets(lens, bounds, clamp=True)]
+        padded = np.maximum(bound_arr - lens, 0).sum()
         bucket_waste = padded / (padded + lens.sum())
         return {"global_waste": float(global_waste), "bucketed_waste": float(bucket_waste)}

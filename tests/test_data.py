@@ -29,6 +29,18 @@ def test_plan_buckets_covers_all():
     assert bounds == sorted(bounds)
 
 
+def test_plan_buckets_empty_input_plans_nothing():
+    """Regression: [] used to IndexError on the quantile index; an empty
+    wave plans no buckets."""
+    assert plan_buckets([]) == []
+    assert plan_buckets([], n_buckets=4) == []
+
+
+def test_plan_buckets_single_length():
+    bounds = plan_buckets([7, 7, 7], 4)
+    assert bounds == [7]
+
+
 def test_batcher_emits_dense_padded_batches():
     b = LengthBucketedBatcher(bounds=[4, 8, 16], batch_size=2)
     out = []

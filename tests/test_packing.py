@@ -1,0 +1,87 @@
+"""Edge-case pins for the fixed-width key packing contract
+(``core/packing.py``) — the ingress boundary everything on-device trusts:
+big-endian bytes in uint32 lanes, zero tail padding, lane-lex order ==
+byte-lex order."""
+
+import numpy as np
+import pytest
+
+from repro.core.packing import (SENTINEL_U32, lanes_for_width, pack_words,
+                                unpack_words)
+
+
+def test_width_boundary_words_roundtrip():
+    """Words of exactly 4*lanes bytes (no padding byte at all) and one byte
+    to either side."""
+    for nbytes in (4, 8, 16):
+        lanes = lanes_for_width(nbytes)
+        assert lanes * 4 == nbytes
+        words = ["x" * (nbytes - 1), "y" * nbytes, "z" * (nbytes + 1)]
+        keys = pack_words(words)
+        assert keys.shape == (3, lanes_for_width(nbytes + 1))
+        assert unpack_words(keys) == words
+
+
+def test_exact_width_fills_every_byte():
+    """A 4-byte word in a 1-lane packing uses all 32 bits, big-endian."""
+    keys = pack_words(["abcd"], width=4)
+    assert keys.shape == (1, 1)
+    assert keys[0, 0] == (ord("a") << 24 | ord("b") << 16
+                          | ord("c") << 8 | ord("d"))
+
+
+def test_word_longer_than_width_raises():
+    with pytest.raises(ValueError):
+        pack_words(["abcde"], width=4)
+
+
+def test_empty_word_and_empty_list():
+    keys = pack_words(["", "a", ""])
+    assert keys.shape == (3, 1)
+    assert keys[0, 0] == 0 and keys[2, 0] == 0
+    assert unpack_words(keys) == ["", "a", ""]
+    empty = pack_words([])
+    assert empty.shape == (0, 1)
+    assert unpack_words(empty) == []
+
+
+def test_non_ascii_utf8_roundtrip_and_order():
+    """Multi-byte UTF-8 packs by encoded byte length and round-trips; byte
+    order (not codepoint order) is the sort contract."""
+    words = ["héllo", "naïve", "日本", "ascii"]
+    keys = pack_words(words)
+    assert unpack_words(keys) == words
+    # encoded byte widths drive the lane count
+    assert keys.shape[1] == lanes_for_width(max(len(w.encode()) for w in words))
+    # packed integer order == encoded-byte lexicographic order
+    a, b = pack_words(["é", "z"], width=4)[:, 0]
+    assert (a > b) == ("é".encode() > "z".encode())
+
+
+def test_raw_bytes_input_packs_by_byte():
+    """bytes input (incl. values >= 0x80) packs verbatim."""
+    keys = pack_words([b"\xff\x01", b"\x01\xff"], width=4)
+    assert keys[0, 0] == (0xFF << 24 | 0x01 << 16)
+    assert keys[1, 0] == (0x01 << 24 | 0xFF << 16)
+    assert keys[0, 0] > keys[1, 0]  # byte-lex order preserved
+
+
+def test_interior_nul_survives_trailing_nul_does_not():
+    """Interior NUL bytes round-trip (length = last non-zero byte + 1, the
+    same rule the device distribute kernel applies); trailing NULs are
+    indistinguishable from padding — pinned as the documented loss."""
+    keys = pack_words([b"a\x00b"], width=4)
+    assert unpack_words(keys)[0].encode() == b"a\x00b"
+    keys = pack_words([b"ab\x00"], width=4)
+    assert unpack_words(keys)[0].encode() == b"ab"
+
+
+def test_prefix_orders_before_extension():
+    """Zero padding sorts before every real byte: 'ab' < 'abc'."""
+    keys = pack_words(["abc", "ab"])
+    assert keys[1, 0] < keys[0, 0]
+
+
+def test_sentinel_is_maximal():
+    keys = pack_words(["\x7f\x7f\x7f\x7f"])  # highest ASCII in every byte
+    assert keys[0, 0] < SENTINEL_U32

@@ -1,0 +1,239 @@
+"""Pipeline tier: the on-device distribute (ops.distribute / ops.bucketize)
+against the host reference bucketizer, the zero-host-loop guard on
+``bucketed_sort_words``, and the chunked sorted-run ingest
+(``repro.pipeline``) against the shortlex oracle.
+
+Sizes stay small: every case compiles interpret-mode Pallas programs on this
+CPU container. Words cap at 11 bytes (3 uint32 lanes, 13 buckets) so the
+fused program stays in the oets/bitonic tiers.
+"""
+
+from unittest import mock
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+import repro.core.bucketing as core_bucketing
+from repro.core import bucketize_packed, bucketize_words, sorted_packed
+from repro.core.packing import SENTINEL_U32, pack_words, unpack_words
+from repro.kernels import bucketize, distribute
+from repro.pipeline import (SortedRun, chunked_sort_packed,
+                            chunked_sort_words, merge_runs, merge_two)
+
+
+def _shortlex(words):
+    return sorted(words, key=lambda w: (len(w.encode()), w.encode()))
+
+
+def _word_set(kind, n, rng, max_len=11):
+    """Three length distributions the differential sweep covers."""
+    alpha = "abcdefgh"
+    if kind == "random":
+        lens = rng.integers(0, max_len + 1, n)
+    elif kind == "dup":  # few distinct words, many repeats
+        pool = ["".join(rng.choice(list(alpha), rng.integers(1, max_len + 1)))
+                for _ in range(max(2, n // 10))]
+        return [pool[i] for i in rng.integers(0, len(pool), n)]
+    elif kind == "skew":  # nearly everything one length, a thin tail
+        lens = np.where(rng.random(n) < 0.9, 5,
+                        rng.integers(0, max_len + 1, n))
+    else:
+        raise ValueError(kind)
+    return ["".join(rng.choice(list(alpha), l)) for l in lens]
+
+
+# ---------------------------------------------------------------------------
+# device distribute / bucketize vs the host reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["random", "dup", "skew"])
+def test_device_bucketize_matches_host(kind):
+    """300 words > 2 x the 128-word kernel block, so the sequential-grid
+    running-count carry (stable ranks across block boundaries) is on the
+    differential path, not just the single-block case."""
+    rng = np.random.default_rng({"random": 0, "dup": 1, "skew": 2}[kind])
+    words = _word_set(kind, 300, rng)
+    keys = jnp.asarray(pack_words(words))
+    host = bucketize_words(words)
+    dev_keys, dev_counts = bucketize(keys)
+    dev_counts = np.asarray(dev_counts)
+    # dense per-length device buckets vs sparse host buckets: same counts,
+    # same contents in arrival order, everything else empty
+    host_by_len = dict(zip(host.lengths.tolist(),
+                           range(len(host.lengths))))
+    for l in range(dev_keys.shape[0]):
+        if l in host_by_len:
+            hi = host_by_len[l]
+            cnt = int(host.counts[hi])
+            assert dev_counts[l] == cnt
+            np.testing.assert_array_equal(
+                np.asarray(dev_keys)[l, :cnt],
+                host.keys[hi, :cnt])
+        else:
+            assert dev_counts[l] == 0
+    # all unused device slots hold the sentinel
+    slot = np.arange(dev_keys.shape[1])
+    mask = slot[None, :] >= dev_counts[:, None]
+    assert (np.asarray(dev_keys)[mask] == SENTINEL_U32).all()
+
+
+def test_distribute_stable_ranks_and_histogram():
+    words = ["aa", "bb", "aa", "c", "dd", "c", "aa", ""]
+    dest, rank, counts = distribute(jnp.asarray(pack_words(words)))
+    assert np.asarray(dest).tolist() == [2, 2, 2, 1, 2, 1, 2, 0]
+    # arrival order within each length bucket
+    assert np.asarray(rank).tolist() == [0, 1, 2, 0, 3, 1, 4, 0]
+    assert np.asarray(counts).tolist()[:3] == [1, 2, 5]
+
+
+def test_bucketize_explicit_capacity_counts_overflow():
+    """Clipped words drop from the tensor but stay in the true counts (the
+    exact-count contract); bucketize_packed raises like the host version."""
+    keys = jnp.asarray(pack_words(["aa", "bb", "cc", "d"]))
+    bk, counts = bucketize(keys, capacity=2)
+    assert int(counts[2]) == 3 and bk.shape[1] == 2
+    with pytest.raises(ValueError, match="exceeds capacity"):
+        bucketize_packed(keys, capacity=2)
+
+
+def test_host_reference_buckets_by_byte_length():
+    """Host and device agree on non-ASCII: both bucket by *encoded byte*
+    length (the unit the packed lanes sort by), so 'é' (2 bytes) shares a
+    bucket with 'ab', not with 'a'."""
+    host = bucketize_words(["é", "ab", "a"])
+    assert host.lengths.tolist() == [1, 2]
+    assert host.counts.tolist() == [1, 2]
+    _, _, counts = distribute(jnp.asarray(pack_words(["é", "ab", "a"])))
+    assert np.asarray(counts).tolist()[:3] == [0, 1, 2]
+    words = ["é", "ab", "a", "日本", "zz"]
+    got = core_bucketing.bucketed_sort_words(words, algorithm="pallas")
+    assert got == _shortlex(words)
+
+
+def test_assign_buckets_rejects_unsorted_bounds():
+    from repro.pipeline import assign_buckets
+    with pytest.raises(ValueError, match="ascending"):
+        assign_buckets([5], [16, 4])
+
+
+def test_bucketize_packed_empty_input():
+    b = bucketize_packed(jnp.zeros((0, 1), jnp.uint32))
+    assert b.keys.shape[1] == 0 and int(b.counts.sum()) == 0
+
+
+def test_bucketed_sort_words_never_calls_host_bucketizer():
+    """The acceptance pin: after packing, the end-to-end path has no
+    host-side per-word Python loop — the host dict-loop bucketizer must be
+    dead code on the production path."""
+    words = ["serpent", "sorbet", "sierra", "samba", "sonata", "sunset",
+             "s", "", "sorbet"]
+    with mock.patch.object(core_bucketing, "bucketize_words",
+                           side_effect=AssertionError("host bucketizer ran")):
+        got = core_bucketing.bucketed_sort_words(words, algorithm="pallas")
+    assert got == _shortlex(words)
+
+
+def test_sorted_packed_shortlex_and_lengths():
+    words = ["zz", "a", "zzz", "b", "aaa", ""]
+    lens, keys = sorted_packed(jnp.asarray(pack_words(words)))
+    assert unpack_words(np.asarray(keys)) == _shortlex(words)
+    assert np.asarray(lens).tolist() == sorted(len(w) for w in words)
+
+
+# ---------------------------------------------------------------------------
+# run merge
+# ---------------------------------------------------------------------------
+
+def _run_of(words):
+    ws = _shortlex(words)
+    keys = jnp.asarray(pack_words(ws, width=11))
+    lens = jnp.asarray([len(w.encode()) for w in ws], jnp.int32)
+    return SortedRun(lengths=lens, keys=keys)
+
+
+def test_merge_two_unequal_lengths_and_duplicates():
+    a = _run_of(["aa", "b", "zz", "aa"])
+    b = _run_of(["ab", "c", "c", "yy", "aaa", "q"])
+    merged = SortedRun.from_lanes(merge_two(a.lanes(), b.lanes()))
+    want = _shortlex(["aa", "b", "zz", "aa", "ab", "c", "c", "yy", "aaa", "q"])
+    assert unpack_words(np.asarray(merged.keys)) == want
+
+
+def test_merge_runs_tournament_odd_count():
+    groups = [["dd", "a"], ["bb", "e"], ["cc"], ["aa", "zzz"], ["b"]]
+    merged = SortedRun.from_lanes(merge_runs([_run_of(g).lanes()
+                                              for g in groups]))
+    want = _shortlex([w for g in groups for w in g])
+    assert unpack_words(np.asarray(merged.keys)) == want
+
+
+def test_merge_is_shortlex_not_bytelex():
+    """'z' must come before 'aa' — the length lane decides, not the bytes."""
+    merged = SortedRun.from_lanes(
+        merge_two(_run_of(["z"]).lanes(), _run_of(["aa"]).lanes()))
+    assert unpack_words(np.asarray(merged.keys)) == ["z", "aa"]
+
+
+# ---------------------------------------------------------------------------
+# chunked ingest end-to-end
+# ---------------------------------------------------------------------------
+
+def test_chunked_sort_multiple_chunks_matches_oracle():
+    """> 1 chunk (the acceptance pin): 130 words through 48-word chunks —
+    3 runs, 2 merge rounds — exactly equals the shortlex oracle."""
+    rng = np.random.default_rng(11)
+    words = _word_set("random", 130, rng, max_len=9)
+    got = chunked_sort_words(words, chunk_size=48)
+    assert got == _shortlex(words)
+
+
+def test_chunked_equals_single_launch():
+    rng = np.random.default_rng(12)
+    words = _word_set("dup", 90, rng, max_len=7)
+    chunked = chunked_sort_words(words, chunk_size=32)
+    single = core_bucketing.bucketed_sort_words(words, algorithm="pallas")
+    assert chunked == single == _shortlex(words)
+
+
+def test_chunked_sort_packed_run_is_exact():
+    rng = np.random.default_rng(13)
+    words = _word_set("skew", 100, rng, max_len=7)
+    keys = jnp.asarray(pack_words(words))
+    run = chunked_sort_packed(keys, chunk_size=40)
+    assert run.keys.shape == keys.shape
+    assert unpack_words(np.asarray(run.keys)) == _shortlex(words)
+    byte_lens = [len(w.encode()) for w in _shortlex(words)]
+    assert np.asarray(run.lengths).tolist() == byte_lens
+
+
+def test_chunked_edge_cases():
+    assert chunked_sort_words([]) == []
+    assert chunked_sort_words(["b", "a"], chunk_size=1) == ["a", "b"]
+    with pytest.raises(ValueError):
+        chunked_sort_words(["a"], chunk_size=0)
+
+
+words_strategy = st.lists(
+    st.text(alphabet=st.characters(min_codepoint=33, max_codepoint=126),
+            min_size=0, max_size=11),
+    min_size=0, max_size=60)
+
+
+@pytest.mark.slow
+@settings(max_examples=15, deadline=None)
+@given(words_strategy, st.integers(min_value=1, max_value=25))
+def test_chunked_pipeline_property(ws, chunk):
+    """Random word lists x random chunk sizes: the chunked pipeline equals
+    the shortlex oracle, and the device bucketize histogram equals the host
+    length histogram."""
+    got = chunked_sort_words(ws, chunk_size=chunk)
+    assert got == _shortlex(ws)
+    if ws:
+        keys = jnp.asarray(pack_words(ws))
+        _, _, counts = distribute(keys)
+        hist = np.bincount([len(w.encode()) for w in ws],
+                           minlength=counts.shape[0])
+        np.testing.assert_array_equal(np.asarray(counts), hist)
