@@ -1,0 +1,107 @@
+"""Merge-tier benchmarks: packed rank-key run merges vs the lane-wise
+broadcast baseline, and the Pallas merge-path run kernel vs the jnp combine.
+
+Three sweeps, all appended to the BENCH_kernels.json trajectory by
+benchmarks/run.py:
+
+  * ``merge/lanes/*`` vs ``merge/packed/*`` — the acceptance axis: the
+    broadcast ``lex_merge_take`` (O(|a|·|b|·L) pairwise compare) against the
+    packed rank-key path (``kernels/keypack.py`` binary-search ranks + one
+    scatter) across lane counts and run lengths. The >= 4-lane, n >= 4096
+    rows are where the tentpole's asymptotic win must show.
+  * ``merge/packed_exact/*`` — the same tuples with bounded lane ranges so
+    they pack exactly into the 2xu32 budget (the searchsorted-native tier).
+  * ``merge/kernel/*`` — ``ops.merge_sorted_lex(engine='kernel')``: the
+    block-parallel merge-path kernel. Interpret mode on this container, so
+    its wall clock is the interpreter's; the tracked signal is the
+    packed-vs-lanes ratio trend, with the kernel row recorded for the TPU
+    roofline.
+
+``BENCH_MERGE_TINY=1`` (CI smoke) shrinks sizes to compile-bound minimums.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.lex import lex_merge_take
+from repro.kernels.ops import merge_sorted_lex
+
+from .common import emit, timeit
+
+_TINY = bool(int(os.environ.get("BENCH_MERGE_TINY", "0")))
+
+_NS = [256] if _TINY else [1024, 4096]
+_LANES = [2, 4] if _TINY else [1, 2, 4, 5]
+_KERNEL_BLOCK = 128 if _TINY else 256
+
+
+@functools.partial(jax.jit, static_argnames=("n_arr",))
+def _lanes_merge(*arrs, n_arr):
+    return tuple(lex_merge_take(list(arrs[:n_arr]), list(arrs[n_arr:])))
+
+
+def _sorted_run(rng, n, n_lanes, hi):
+    lanes = [rng.integers(0, hi, n).astype(np.uint32) for _ in range(n_lanes)]
+    order = np.lexsort(tuple(reversed(lanes)))
+    return [jnp.asarray(a[order]) for a in lanes]
+
+
+def packed_vs_lanes():
+    rng = np.random.default_rng(0)
+    for n in _NS:
+        for n_lanes in _LANES:
+            a = _sorted_run(rng, n, n_lanes, 2**32)
+            b = _sorted_run(rng, n, n_lanes, 2**32)
+
+            t_lanes = timeit(lambda: _lanes_merge(*a, *b, n_arr=n_lanes),
+                             iters=3)
+            t_packed = timeit(
+                lambda: merge_sorted_lex(a, b, engine="packed"), iters=3)
+            emit(f"merge/lanes/n{n}/L{n_lanes}", t_lanes * 1e6,
+                 "broadcast lex_merge_take")
+            emit(f"merge/packed/n{n}/L{n_lanes}", t_packed * 1e6,
+                 f"vs_lanes={t_lanes / t_packed:.2f}x")
+
+            # bounded ranges: the whole tuple fits the 2xu32 budget, so the
+            # rank is a native searchsorted over 1-2 packed lanes
+            sa = _sorted_run(rng, n, n_lanes, 64)
+            sb = _sorted_run(rng, n, n_lanes, 64)
+            mv = (63,) * n_lanes
+            t_sm_lanes = timeit(lambda: _lanes_merge(*sa, *sb, n_arr=n_lanes),
+                                iters=3)
+            t_exact = timeit(
+                lambda: merge_sorted_lex(sa, sb, engine="packed",
+                                         max_values=mv), iters=3)
+            emit(f"merge/packed_exact/n{n}/L{n_lanes}", t_exact * 1e6,
+                 f"vs_lanes={t_sm_lanes / t_exact:.2f}x")
+
+
+def kernel_vs_jnp_combine():
+    rng = np.random.default_rng(1)
+    for n in _NS:
+        for n_lanes in ([2] if _TINY else [1, 4]):
+            a = _sorted_run(rng, n, n_lanes, 2**32)
+            b = _sorted_run(rng, n, n_lanes, 2**32)
+            t_packed = timeit(
+                lambda: merge_sorted_lex(a, b, engine="packed"), iters=3)
+            t_kernel = timeit(
+                lambda: merge_sorted_lex(a, b, engine="kernel",
+                                         block_size=_KERNEL_BLOCK), iters=3)
+            emit(f"merge/kernel/n{n}/L{n_lanes}", t_kernel * 1e6,
+                 f"block={_KERNEL_BLOCK};vs_packed_jnp="
+                 f"{t_packed / t_kernel:.2f}x")
+
+
+def main():
+    packed_vs_lanes()
+    kernel_vs_jnp_combine()
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ MODULES = [
     "table2_3_datastructure",
     "table4_scaling",
     "bench_kernels",
+    "bench_merge",
     "bench_pipeline",
     "bench_distributed",
     "bench_moe_dispatch",

@@ -92,8 +92,7 @@ def bucketize_words(words, capacity: int | None = None) -> Buckets:
     the tests' byte-shortlex oracle."""
     by_len: dict[int, list] = {}
     for w in words:
-        nbytes = len(w.encode("utf-8")) if isinstance(w, str) else len(bytes(w))
-        by_len.setdefault(nbytes, []).append(w)
+        by_len.setdefault(packing.byte_length(w), []).append(w)
     if not by_len:
         return Buckets(
             keys=np.zeros((0, 0, 1), np.uint32),
@@ -148,10 +147,15 @@ def sort_buckets(keys: jax.Array, algorithm: str = "oets",
 @functools.partial(jax.jit, static_argnames=("capacity", "algorithm"))
 def _fused_sort_packed(keys, *, capacity: int, algorithm: str):
     """One jitted program: distribute scatter -> segmented bucket sort ->
-    shortlex compaction. ``keys`` (n, lanes) uint32 in; out come
-    ``(lengths (B*cap,), sorted (B*cap, lanes), counts (B,))`` with the
-    real words occupying the leading ``min(counts, cap).sum()`` slots in
-    exact shortlex order and sentinel fill beyond (the caller slices)."""
+    shortlex compaction -> packed rank keys. ``keys`` (n, lanes) uint32 in;
+    out come ``(lengths (B*cap,), sorted (B*cap, lanes), counts (B,),
+    packed)`` with the real words occupying the leading
+    ``min(counts, cap).sum()`` slots in exact shortlex order and sentinel
+    fill beyond (the caller slices). ``packed`` is the tuple of 1-2 uint32
+    rank-key lanes of the compacted shortlex tuples
+    (``kernels.keypack.pack_shortlex`` — a few bit ops fused into the same
+    program), which the run-merge tier ranks on instead of re-packing."""
+    from ..kernels.keypack import pack_shortlex
     from ..kernels.ops import _scatter_to_buckets, distribute
     n, lanes = keys.shape
     num_buckets = 4 * lanes + 1
@@ -175,15 +179,20 @@ def _fused_sort_packed(keys, *, capacity: int, algorithm: str):
     flat_lens = jnp.zeros((num_buckets * capacity + 1,), jnp.int32
                           ).at[pos].set(blen)
     m = num_buckets * capacity
-    return flat_lens[:m], flat_keys[:m], counts
+    packed = pack_shortlex(flat_lens[:m], flat_keys[:m])
+    return flat_lens[:m], flat_keys[:m], counts, tuple(packed.lanes)
 
 
 def sorted_packed(keys, algorithm: str = "pallas",
-                  capacity: int | None = None):
+                  capacity: int | None = None, return_packed: bool = False):
     """Shortlex-sort a packed (n, lanes) uint32 word tensor entirely on
     device: distribute -> segmented in-bucket sort -> compact, zero host
     per-word loops. Returns ``(lengths (n,), sorted_keys (n, lanes))``
-    device arrays in exact shortlex order (length-major, then byte-wise).
+    device arrays in exact shortlex order (length-major, then byte-wise);
+    with ``return_packed`` a third element carries the tuple of packed
+    shortlex rank-key lanes (``kernels/keypack.py``) the fused program
+    computed during compaction — the merge-ready key the ``repro.pipeline``
+    run tier ranks on.
 
     ``capacity``: per-bucket slots for the fused program (static under jit);
     ``None`` sizes it at the histogram max (one extra distribute launch +
@@ -193,17 +202,23 @@ def sorted_packed(keys, algorithm: str = "pallas",
     keys = jnp.asarray(keys, jnp.uint32)
     n = keys.shape[0]
     if n == 0:
-        return jnp.zeros((0,), jnp.int32), keys
+        lens = jnp.zeros((0,), jnp.int32)
+        if not return_packed:
+            return lens, keys
+        from ..kernels.keypack import pack_shortlex
+        return lens, keys, tuple(pack_shortlex(lens, keys).lanes)
     if capacity is None:
         from ..kernels.ops import distribute
         _, _, counts = distribute(keys)
         capacity = max(1, int(jnp.max(counts)))
-    flat_lens, flat_keys, counts = _fused_sort_packed(
+    flat_lens, flat_keys, counts, packed = _fused_sort_packed(
         keys, capacity=capacity, algorithm=algorithm)
     if int(jnp.max(counts)) > capacity:
         ln = int(jnp.argmax(counts))
         raise ValueError(f"bucket for length {ln} exceeds capacity {capacity}")
-    return flat_lens[:n], flat_keys[:n]
+    if not return_packed:
+        return flat_lens[:n], flat_keys[:n]
+    return flat_lens[:n], flat_keys[:n], tuple(p[:n] for p in packed)
 
 
 def bucketed_sort_words(words, algorithm: str = "oets") -> list:

@@ -45,8 +45,9 @@ EXPERIMENTS.md §Perf), all full-tuple lex now:
   * 'resort'  — re-sort the 2B concatenation (paper-faithful baseline:
                 dumb local work, like re-running bubble sort)
   * 'bitonic' — O(log B) bitonic merge of the two sorted blocks
-  * 'take'    — merge-path selection via pairwise lex ranks (O(B^2) compare,
-                one gather)
+  * 'take'    — merge-path selection via packed rank-key binary search
+                (``kernels/keypack.py``: O(B log B) gathers + one scatter —
+                the shared run-merge primitive of the pipeline tier)
 
 Communication note: each odd_even round sends the full block both ways so
 the merge is computed redundantly on both partners — this trades 2x ICI
@@ -63,7 +64,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..kernels.lex import lex_merge_take, lex_rank_count
+from ..kernels.keypack import merge_take_packed, packed_searchsorted
 from ..kernels.ops import _sentinel
 from ..parallel.compat import axis_size
 from .bitonic import bitonic_merge, bitonic_merge_lex
@@ -108,30 +109,32 @@ def _merge_bitonic_lex(mine, theirs, sort_fn):
 
 def _merge_take_lex(mine, theirs, sort_fn):
     # merge-path rank + scatter — the shared run-merge primitive
-    # (kernels/lex.lex_merge_take), the same combine the pipeline tier uses
-    # on its chunked sorted runs.
-    return lex_merge_take(mine, theirs)
+    # (kernels/keypack.merge_take_packed: packed rank-key binary search, the
+    # same combine the pipeline tier uses on its chunked sorted runs), never
+    # the O(B^2) lane-wise broadcast.
+    return merge_take_packed(mine, theirs)
 
 
 _MERGES_LEX = {"resort": _merge_resort_lex, "bitonic": _merge_bitonic_lex,
                "take": _merge_take_lex}
 
 
-def _merge_sorted_rows(x):
-    """Merge the rows of (r, L) — each ascending, r a power of two — into
-    one sorted (r*L,) array via a merge-path tree: log2(r) vmapped rounds of
-    searchsorted rank + scatter, O(n log r) instead of a full O(n log n)
-    re-sort. Key-only (searchsorted has no lex form)."""
-    def mpair(a, b):
-        m = a.shape[0]
-        ra = jnp.arange(m) + jnp.searchsorted(b, a, side="left")
-        rb = jnp.arange(m) + jnp.searchsorted(a, b, side="right")
-        o = jnp.zeros((2 * m,), a.dtype)
-        return o.at[ra].set(a).at[rb].set(b)
+def _merge_sorted_rows_lex(rows):
+    """Merge the rows of parallel (r, L) lane arrays — each row-tuple lex
+    ascending, r a power of two — into one sorted lane tuple of (r*L,)
+    arrays via a merge-path tree: log2(r) vmapped rounds of packed rank-key
+    searchsorted + scatter (``kernels/keypack.py``), O(n log r) instead of a
+    full O(n log n) re-sort. Any arity — key-only is the 1-lane case, and
+    multi-lane tuples rank by binary search instead of the broadcast they
+    used to need."""
+    def mpair(a_rows, b_rows):
+        return list(merge_take_packed(a_rows, b_rows))
 
-    while x.shape[0] > 1:
-        x = jax.vmap(mpair)(x[0::2], x[1::2])
-    return x[0]
+    rows = list(rows)
+    while rows[0].shape[0] > 1:
+        rows = jax.vmap(mpair)([x[0::2] for x in rows],
+                               [x[1::2] for x in rows])
+    return [x[0] for x in rows]
 
 
 def local_merge(mine, theirs, strategy: str = "bitonic"):
@@ -277,9 +280,12 @@ def _sample_partition_exchange(lanes, axis_name, n_valid, capacity,
     splitters = [s[jnp.asarray(take, jnp.int32)] for s in all_samples]
 
     # bucket by splitter (the paper's phase-2 distribution step):
-    # dest = #splitters lex<= element, via the shared lane-by-lane compare
+    # dest = #splitters lex<= element — the packed rank-key binary search
+    # (splitters are slices of the lex-sorted gathered samples, so they are
+    # sorted tuples), the same rank primitive the run merges use
     if num > 1:
-        dest = lex_rank_count(splitters, local, strict=False).astype(jnp.int32)
+        dest = packed_searchsorted(splitters, local,
+                                   side="right").astype(jnp.int32)
     else:
         dest = jnp.zeros((b,), jnp.int32)
     # rank within destination bucket via stable order (the valid prefix is
@@ -312,11 +318,11 @@ def _sample_partition_exchange(lanes, axis_name, n_valid, capacity,
     # fill tuple by construction, so any order-preserving combine leaves the
     # real multiset in the count-sized prefix (same argument as the local
     # sort). Each received row is a slice of a sorted block, hence sorted —
-    # key-only inputs take a searchsorted merge tree (log P rounds of
-    # merge-path gathers) instead of re-sorting all P·cap elements; lex
-    # tuples have no multi-lane searchsorted and take the full-tuple sort.
-    if len(received) == 1 and num & (num - 1) == 0:
-        out = [_merge_sorted_rows(received[0])]
+    # pow2 row counts take a merge-path tree (log P rounds of packed
+    # rank-key searchsorted gathers, any lane arity) instead of re-sorting
+    # all P·cap elements; non-pow2 falls back to the full-tuple sort.
+    if num & (num - 1) == 0:
+        out = _merge_sorted_rows_lex(received)
     else:
         out = sort_fn([r.reshape(-1) for r in received])
     return out, count_matrix, overflow, b, cap

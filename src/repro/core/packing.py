@@ -22,6 +22,7 @@ import numpy as np
 __all__ = [
     "pack_words",
     "unpack_words",
+    "byte_length",
     "lanes_for_width",
     "SENTINEL_U32",
 ]
@@ -29,6 +30,13 @@ __all__ = [
 # Sentinel larger than any real key lane; used to pad bucket slots so padded
 # rows sink to the end of an ascending sort.
 SENTINEL_U32 = np.uint32(0xFFFFFFFF)
+
+
+def byte_length(word) -> int:
+    """Encoded byte length of one word — THE length every layer buckets and
+    sorts by (str encodes as UTF-8, bytes-likes count raw). One rule shared
+    by packing, the host reference bucketizer, and the chunked ingress."""
+    return len(word.encode("utf-8")) if isinstance(word, str) else len(bytes(word))
 
 
 def lanes_for_width(width: int) -> int:

@@ -1,26 +1,43 @@
 """Pallas TPU kernels for the compute hot spot the paper optimizes: the
 in-bucket comparator sort. ``ops`` is the public entry (``sort``/``sort_kv``
-auto-pick the engine; ``sort_lex`` is the variadic lexicographic front-end;
-``segmented_sort`` the fused bucket pipeline; ``sort_rows`` the raw
-single-block path); ``ref`` the jnp oracle; per-kernel modules hold the
-pallas_call + BlockSpec definitions — all variadic over lex lane tuples via
-the shared comparator in ``lex.py`` — including the cross-block merge used
-by ``core/blocksort``."""
+auto-pick the engine; ``sort_lex`` is the variadic lexicographic front-end
+with a packed rank-key routing knob; ``segmented_sort`` the fused bucket
+pipeline; ``merge_sorted``/``merge_sorted_lex`` the run-merge front-end;
+``sort_rows`` the raw single-block path); ``ref`` the jnp oracle;
+``keypack`` the packed rank-key subsystem (order-preserving 1-2 uint32
+compression of lex tuples + searchsorted merge-path ranks); per-kernel
+modules hold the pallas_call + BlockSpec definitions — all variadic over
+lex lane tuples via the shared comparator in ``lex.py`` — including the
+cross-block merge used by ``core/blocksort`` and the merge-path run kernel
+(``runmerge_kernel``) behind ``ops.merge_sorted``."""
 
-from .lex import lex_gt_lanes, lex_merge_take, lex_rank_count
+from .keypack import (PackedKeys, PackPlan, bias_to_u32, lex_searchsorted,
+                      merge_take_packed, pack_rank_keys, pack_shortlex,
+                      packed_cmp_lanes, packed_searchsorted, plan_pack,
+                      shortlex_max_values, unpack_rank_keys)
+from .lex import lex_gt_lanes, lex_merge_take, lex_rank_count, sentinel_for
 from .merge_kernel import (merge_adjacent_kv_pallas, merge_adjacent_lex_pallas,
                            merge_adjacent_pallas)
-from .ops import (bucketize, choose_plan, distribute, partition_rows,
-                  segmented_sort, sort, sort_kv, sort_lex, sort_rows,
-                  sort_rows_kv, sort_rows_lex)
+from .ops import (bucketize, choose_lex_engine, choose_merge_engine,
+                  choose_plan, distribute, merge_sorted, merge_sorted_lex,
+                  partition_rows, segmented_sort, sort, sort_kv, sort_lex,
+                  sort_rows, sort_rows_kv, sort_rows_lex)
 from .ref import partition_rows_ref, sort_rows_kv_ref, sort_rows_ref
+from .runmerge_kernel import (DEFAULT_MERGE_BLOCK, merge_runs_lex_pallas,
+                              merge_runs_pallas)
 
 __all__ = [
     "sort", "sort_kv", "sort_lex", "segmented_sort", "distribute",
-    "bucketize", "choose_plan",
+    "bucketize", "choose_plan", "choose_lex_engine", "choose_merge_engine",
+    "merge_sorted", "merge_sorted_lex",
     "sort_rows", "sort_rows_kv", "sort_rows_lex", "partition_rows",
-    "lex_gt_lanes", "lex_merge_take", "lex_rank_count",
+    "lex_gt_lanes", "lex_merge_take", "lex_rank_count", "sentinel_for",
+    "PackPlan", "PackedKeys", "plan_pack", "bias_to_u32", "pack_rank_keys",
+    "unpack_rank_keys", "packed_cmp_lanes", "pack_shortlex",
+    "shortlex_max_values", "lex_searchsorted", "packed_searchsorted",
+    "merge_take_packed",
     "merge_adjacent_pallas", "merge_adjacent_kv_pallas",
     "merge_adjacent_lex_pallas",
+    "DEFAULT_MERGE_BLOCK", "merge_runs_lex_pallas", "merge_runs_pallas",
     "sort_rows_ref", "sort_rows_kv_ref", "partition_rows_ref",
 ]

@@ -1,0 +1,369 @@
+"""Packed rank keys: order-preserving compression of lex tuples into 1-2
+uint32 lanes, plus the searchsorted-fast merge-path rank primitives built on
+them.
+
+The paper's "array 3D" variant won because a flat fixed-width layout beat
+pointer-chasing vectors of strings; multi-lane shortlex tuples are the
+modern analogue of the *slow* layout — every merge-grade compare walks lanes
+one by one, and ``lex_rank_count`` pays an O(|a|·|b|·L) broadcast compare.
+This module collapses a tuple ``(length, lane0, lane1, ...)`` into at most
+two uint32 *rank-key* lanes whose unsigned order equals the tuple's
+``lex_gt_lanes`` order, so every merge rank becomes a searchsorted:
+
+  * every lane first embeds into uint32 by an order-preserving *bias*
+    (``bias_to_u32``): unsigned ints pass through, signed ints shift by
+    2^(bits-1), float32 takes the IEEE total-order flip (with ``-0.0``
+    normalised to ``+0.0`` so packed equality matches ``==``);
+  * biased lanes then concatenate big-endian into a 64-bit budget rendered
+    as a ``(hi, lo)`` uint32 pair — or a single uint32 when the total bit
+    width fits 32, which unlocks ``jnp.searchsorted`` natively. Tight widths
+    come from ``max_values`` (e.g. the shortlex length lane needs
+    ``bit_length(4·lanes)`` bits, not 32);
+  * when the tuple does **not** fit the budget the packed pair is still an
+    order-preserving *prefix* filter: compares resolve on it except for
+    prefix-equal elements, which tie-break lane-wise on the first partially
+    covered lane onward (``packed_cmp_lanes`` builds that minimal compare
+    list, and falls back to the raw lanes when packing cannot shorten it).
+
+Ranks on the compare list come from ``lex_searchsorted`` — a vectorised
+binary search (O(log n) gather rounds) that replaces the broadcast compare
+at every granularity: the pipeline run merge, the distributed sample-sort
+destination step and odd-even 'take' merge, and the Pallas merge-path run
+kernel's diagonal partition (``kernels/runmerge_kernel.py``).
+
+``kernels/lex.py``'s lane-wise ``lex_rank_count``/``lex_merge_take`` remain
+the differential oracle these fast paths are tested against.
+
+Float caveats: the bias gives NaN a deterministic slot above ``+inf``
+(comparator networks instead leave NaNs in place — callers quarantine NaNs
+per the ``ops`` contract), and ``unpack_rank_keys`` returns ``+0.0`` for a
+packed ``-0.0``; the packed *sort* path in ``ops.sort_lex`` therefore
+routes float lanes through the lane-wise engines.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from .lex import lex_gt_lanes
+
+__all__ = [
+    "PackPlan", "PackedKeys", "plan_pack", "bias_to_u32",
+    "pack_rank_keys", "unpack_rank_keys", "packed_cmp_lanes",
+    "cmp_from_packed", "pack_shortlex", "shortlex_max_values",
+    "lex_searchsorted", "packed_searchsorted", "merge_take_packed",
+]
+
+# two uint32 rank-key lanes — the budget the ISSUE's "u64 shortlex key" fits
+# in without enabling x64 (jax keeps uint64 disabled by default)
+_BUDGET_BITS = 64
+_TOP = jnp.uint32(0x80000000)
+
+
+class PackPlan(NamedTuple):
+    """Static description of how a lane tuple maps into the rank-key budget.
+
+    ``bits``: biased width of every input lane; ``take``: how many of those
+    bits land inside the 64-bit budget (0 once exhausted); ``exact``: the
+    whole tuple fits, so packed order *is* the tuple order; ``covered``:
+    leading lanes whose bits are fully inside the budget (the tie-break
+    suffix starts at ``lanes[covered]``); ``n_packed``: 1 when the total
+    fits one uint32 lane, else 2."""
+
+    bits: Tuple[int, ...]
+    take: Tuple[int, ...]
+    exact: bool
+    covered: int
+    n_packed: int
+
+
+class PackedKeys(NamedTuple):
+    """``pack_rank_keys`` result: 1-2 uint32 arrays + the static plan."""
+
+    lanes: Tuple
+    plan: PackPlan
+
+
+def _lane_bits(dtype, max_value: Optional[int]) -> int:
+    if max_value is not None:
+        if not jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+            raise TypeError("max_values only applies to integer lanes "
+                            "(a bounded float lane would pack by truncation)")
+        if max_value < 0:
+            raise ValueError("max_values entries must be >= 0")
+        return max(1, int(max_value).bit_length())
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.dtype(jnp.float32):
+        return 32
+    if jnp.issubdtype(dtype, jnp.integer):
+        bits = dtype.itemsize * 8
+        if bits > 32:
+            raise TypeError(f"{dtype} lanes exceed the uint32 bias range")
+        return bits
+    raise TypeError(f"cannot pack lanes of dtype {dtype}")
+
+
+def _norm_max_values(n_lanes: int, max_values):
+    if max_values is None:
+        return (None,) * n_lanes
+    max_values = tuple(max_values)
+    if len(max_values) != n_lanes:
+        raise ValueError("max_values must have one entry per lane")
+    return max_values
+
+
+def plan_pack(dtypes, max_values=None) -> PackPlan:
+    """Pure-static packing plan for lanes of ``dtypes``.
+
+    ``max_values``: optional per-lane upper bounds. A bounded lane promises
+    its values lie in ``[0, max_value]`` (the caller's contract, like a
+    bucket capacity) and packs in ``bit_length(max_value)`` bits instead of
+    the full dtype width."""
+    dtypes = tuple(jnp.dtype(d) for d in dtypes)
+    max_values = _norm_max_values(len(dtypes), max_values)
+    bits = tuple(_lane_bits(d, m) for d, m in zip(dtypes, max_values))
+    budget = _BUDGET_BITS
+    take, covered, partial_seen = [], 0, False
+    for b in bits:
+        w = min(b, budget)
+        take.append(w)
+        budget -= w
+        if w == b and not partial_seen:
+            covered += 1
+        else:
+            partial_seen = True
+    total = sum(bits)
+    return PackPlan(bits=bits, take=tuple(take), exact=total <= _BUDGET_BITS,
+                    covered=covered, n_packed=1 if total <= 32 else 2)
+
+
+def bias_to_u32(x, max_value: Optional[int] = None):
+    """Order-preserving uint32 embedding of one lane.
+
+    ``max_value`` asserts a ``[0, max_value]`` range (values cast directly);
+    otherwise signed ints shift by 2^(bits-1), unsigned ints pass through,
+    and float32 maps via the IEEE total-order flip with ``-0.0`` normalised
+    to ``+0.0`` so biased equality coincides with ``==`` (NaN lands above
+    ``+inf`` — see the module docstring)."""
+    dt = jnp.dtype(x.dtype)
+    if max_value is not None:
+        if not jnp.issubdtype(dt, jnp.integer):
+            raise TypeError("max_values only applies to integer lanes")
+        return x.astype(jnp.uint32)
+    if dt == jnp.dtype(jnp.float32):
+        xn = jnp.where(x == 0, jnp.zeros_like(x), x)
+        b = lax.bitcast_convert_type(xn, jnp.uint32)
+        return jnp.where((b & _TOP) != 0, ~b, b | _TOP)
+    if jnp.issubdtype(dt, jnp.unsignedinteger):
+        return x.astype(jnp.uint32)
+    if jnp.issubdtype(dt, jnp.signedinteger):
+        if dt.itemsize == 4:
+            return lax.bitcast_convert_type(x, jnp.uint32) ^ _TOP
+        # int8/int16: shift into [0, 2^bits) so the value fits `bits` bits
+        half = 1 << (dt.itemsize * 8 - 1)
+        return (x.astype(jnp.int32) + half).astype(jnp.uint32)
+    raise TypeError(f"cannot bias lanes of dtype {dt}")
+
+
+def _unbias(v, dtype, max_value: Optional[int]):
+    dt = jnp.dtype(dtype)
+    if max_value is not None:
+        return v.astype(dt)
+    if dt == jnp.dtype(jnp.float32):
+        b = jnp.where((v & _TOP) != 0, v ^ _TOP, ~v)
+        return lax.bitcast_convert_type(b, jnp.float32)
+    if jnp.issubdtype(dt, jnp.unsignedinteger):
+        return v.astype(dt)
+    if dt.itemsize == 4:
+        return lax.bitcast_convert_type(v ^ _TOP, jnp.int32)
+    half = 1 << (dt.itemsize * 8 - 1)
+    return (v.astype(jnp.int32) - half).astype(dt)
+
+
+def _shl64_or(hi, lo, w: int, v):
+    """(hi, lo) <<= w, then OR ``v`` (< 2^w) into the low bits. ``w`` is a
+    static python int in [1, 32]; the caller's budget bookkeeping guarantees
+    no real bits ever shift off the top."""
+    if w == 32:
+        return lo, v
+    return (hi << w) | (lo >> (32 - w)), (lo << w) | v
+
+
+def pack_rank_keys(lanes, max_values=None) -> PackedKeys:
+    """Pack parallel lanes (lane 0 most significant) into 1-2 uint32
+    rank-key arrays whose unsigned lex order equals — or, past the budget,
+    prefix-filters — the lanes' ``lex_gt_lanes`` order. Works elementwise on
+    any common shape."""
+    lanes = list(lanes)
+    if not lanes:
+        raise ValueError("need at least one lane")
+    max_values = _norm_max_values(len(lanes), max_values)
+    plan = plan_pack([a.dtype for a in lanes], max_values)
+    if plan.n_packed == 1:
+        acc = None
+        for a, mv, w in zip(lanes, max_values, plan.take):
+            v = bias_to_u32(a, mv)
+            acc = v if acc is None else ((acc << w) | v)
+        return PackedKeys((acc,), plan)
+    shape = jnp.broadcast_shapes(*[a.shape for a in lanes])
+    hi = jnp.zeros(shape, jnp.uint32)
+    lo = jnp.zeros(shape, jnp.uint32)
+    for a, mv, b, w in zip(lanes, max_values, plan.bits, plan.take):
+        if w == 0:
+            break
+        v = bias_to_u32(a, mv)
+        if w < b:
+            v = v >> (b - w)  # prefix filter: keep the top bits only
+        hi, lo = _shl64_or(hi, lo, w, v)
+    return PackedKeys((hi, lo), plan)
+
+
+def unpack_rank_keys(packed_lanes, dtypes, max_values=None):
+    """Invert :func:`pack_rank_keys` (exact plans only): recover the
+    original lanes, bit-identical for integer dtypes (``-0.0`` comes back as
+    ``+0.0`` for floats — see module docstring)."""
+    dtypes = tuple(dtypes)
+    max_values = _norm_max_values(len(dtypes), max_values)
+    plan = plan_pack(dtypes, max_values)
+    if not plan.exact:
+        raise ValueError("cannot unpack a lossy (inexact) rank-key packing")
+    packed_lanes = list(packed_lanes)
+    if len(packed_lanes) != plan.n_packed:
+        raise ValueError(f"expected {plan.n_packed} packed lanes")
+    out = []
+    if plan.n_packed == 1:
+        acc = packed_lanes[0]
+        for dt, mv, w in reversed(list(zip(dtypes, max_values, plan.take))):
+            mask = jnp.uint32((1 << w) - 1) if w < 32 else jnp.uint32(0xFFFFFFFF)
+            out.append(_unbias(acc & mask, dt, mv))
+            acc = jnp.zeros_like(acc) if w == 32 else acc >> w
+        return list(reversed(out))
+    hi, lo = packed_lanes
+    for dt, mv, w in reversed(list(zip(dtypes, max_values, plan.take))):
+        if w == 32:
+            val, hi, lo = lo, jnp.zeros_like(hi), hi
+        else:
+            val = lo & jnp.uint32((1 << w) - 1)
+            lo = (lo >> w) | (hi << (32 - w))
+            hi = hi >> w
+        out.append(_unbias(val, dt, mv))
+    return list(reversed(out))
+
+
+def packed_cmp_lanes(lanes, max_values=None):
+    """The minimal compare-lane list for ``lanes``: the packed rank keys
+    alone when the packing is exact; the packed prefix + the lane-wise
+    tie-break suffix (first partially covered lane onward) when it is not;
+    the raw lanes when packing cannot shorten the list (including lanes of
+    a dtype the bias does not support — the binary-search rank then walks
+    the lanes themselves, still searchsorted-fast). Lex order over the
+    result always equals ``lex_gt_lanes`` order over ``lanes``."""
+    lanes = list(lanes)
+    try:
+        pk = pack_rank_keys(lanes, max_values)
+    except TypeError:
+        return lanes
+    return cmp_from_packed(pk.lanes, lanes, max_values)
+
+
+def cmp_from_packed(packed_lanes, lanes, max_values=None):
+    """Assemble :func:`packed_cmp_lanes`'s result from rank keys packed
+    earlier (e.g. inside the fused bucketize program) — same selection rule,
+    no re-pack."""
+    lanes = list(lanes)
+    plan = plan_pack([a.dtype for a in lanes], max_values)
+    packed_lanes = list(packed_lanes)
+    if plan.exact:
+        return packed_lanes
+    cand = packed_lanes + lanes[plan.covered:]
+    return cand if len(cand) <= len(lanes) else lanes
+
+
+def shortlex_max_values(n_key_lanes: int):
+    """``max_values`` for the pipeline's shortlex tuple ``(length, lane0,
+    ..., laneL-1)``: byte length is bounded by ``4 * L`` (the packed width),
+    key lanes are full uint32."""
+    return (4 * n_key_lanes,) + (None,) * n_key_lanes
+
+
+def pack_shortlex(lengths, keys) -> PackedKeys:
+    """Pack the shortlex tuple of a sorted run — ``lengths`` (n,) int32 byte
+    lengths, ``keys`` (n, L) uint32 packed words — into rank keys with the
+    tight length-lane width."""
+    lanes = [lengths] + [keys[:, l] for l in range(keys.shape[1])]
+    return pack_rank_keys(lanes, shortlex_max_values(keys.shape[1]))
+
+
+def lex_searchsorted(a_lanes, v_lanes, side: str = "left"):
+    """Vectorised multi-lane ``searchsorted``: for every lex tuple of
+    ``v_lanes``, its insertion point into the lex-sorted tuples of
+    ``a_lanes``. O(log |a|) rounds, each one gather + compare per lane —
+    the merge-path rank that replaces ``lex_rank_count``'s O(|a|·|v|·L)
+    broadcast. Single-lane inputs take ``jnp.searchsorted`` natively."""
+    if side not in ("left", "right"):
+        raise ValueError(f"unknown side {side!r}")
+    a_lanes, v_lanes = list(a_lanes), list(v_lanes)
+    if len(a_lanes) != len(v_lanes):
+        raise ValueError("a_lanes and v_lanes must have the same arity")
+    if len(a_lanes) == 1:
+        return jnp.searchsorted(a_lanes[0], v_lanes[0], side=side)
+    n = a_lanes[0].shape[0]
+    shape = v_lanes[0].shape
+    lo = jnp.zeros(shape, jnp.int32)
+    if n == 0:
+        return lo
+    hi = jnp.full(shape, n, jnp.int32)
+    for _ in range(int(n).bit_length() + 1):
+        mid = (lo + hi) >> 1
+        mid_c = jnp.minimum(mid, n - 1)
+        a_mid = [a[mid_c] for a in a_lanes]
+        if side == "left":
+            pred = lex_gt_lanes(v_lanes, a_mid)       # a[mid] <  v
+        else:
+            pred = ~lex_gt_lanes(a_mid, v_lanes)      # a[mid] <= v
+        pred = pred & (mid < hi)                      # freeze once converged
+        lo = jnp.where(pred, mid + 1, lo)
+        hi = jnp.where(pred, hi, mid)
+    return lo
+
+
+def packed_searchsorted(a_lanes, v_lanes, side: str = "left",
+                        max_values=None):
+    """:func:`lex_searchsorted` over the packed compare lists of both tuple
+    sets (``a_lanes`` must be lex-sorted). The shared rank step of the
+    distributed destination search and every packed merge."""
+    return lex_searchsorted(packed_cmp_lanes(a_lanes, max_values),
+                            packed_cmp_lanes(v_lanes, max_values), side=side)
+
+
+def merge_take_packed(a_lanes, b_lanes, n_cmp: Optional[int] = None,
+                      max_values=None):
+    """Merge two *sorted* lex-tuple runs via packed merge-path ranks + one
+    scatter — the searchsorted-fast drop-in for ``lex_merge_take`` (same
+    rank/tie protocol: equal tuples take a-before-b, every output slot is
+    written exactly once; runs may differ in length).
+
+    ``n_cmp``: when given, the leading ``n_cmp`` lanes are used as the
+    compare list as-is (the caller pre-packed them — e.g. the pipeline
+    tournament scatters rank keys alongside the data so later rounds skip
+    re-packing); otherwise the compare list is packed here from *all* lanes
+    (trailing payload lanes tie-break exactly as in ``lex_merge_take``)."""
+    a_lanes, b_lanes = list(a_lanes), list(b_lanes)
+    if len(a_lanes) != len(b_lanes):
+        raise ValueError("runs must have the same lane arity")
+    na, nb = a_lanes[0].shape[0], b_lanes[0].shape[0]
+    if n_cmp is None:
+        cmp_a = packed_cmp_lanes(a_lanes, max_values)
+        cmp_b = packed_cmp_lanes(b_lanes, max_values)
+    else:
+        cmp_a, cmp_b = a_lanes[:n_cmp], b_lanes[:n_cmp]
+    rank_a = jnp.arange(na) + lex_searchsorted(cmp_b, cmp_a, side="left")
+    rank_b = jnp.arange(nb) + lex_searchsorted(cmp_a, cmp_b, side="right")
+    out = []
+    for a, b in zip(a_lanes, b_lanes):
+        o = jnp.zeros((na + nb,), a.dtype)
+        out.append(o.at[rank_a].set(a).at[rank_b].set(b))
+    return out

@@ -26,7 +26,17 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 __all__ = ["lex_gt_lanes", "lex_rank_count", "lex_merge_take", "map_lanes",
-           "select_lanes"]
+           "select_lanes", "sentinel_for"]
+
+
+def sentinel_for(dtype):
+    """The lex-maximal padding value of ``dtype`` (``iinfo.max`` for ints —
+    including signed, where it is the positive max — ``+inf`` for floats).
+    The padding contract every engine in this package shares; see
+    ``ops.sort_lex`` for the full sentinel/dtype discussion."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
 
 
 def lex_gt_lanes(a_lanes, b_lanes):
@@ -52,9 +62,10 @@ def lex_gt_lanes(a_lanes, b_lanes):
 def lex_rank_count(a_lanes, b_lanes, strict):
     """For each element of ``b``: how many elements of ``a`` are lex-below
     it (``strict``) or lex-at-or-below it (``not strict``). O(|a|·|b|)
-    broadcast compare — the merge-path rank at block granularity. Shared by
-    the distributed sample-sort destination step, the odd-even 'take' merge,
-    and the pipeline run merge."""
+    broadcast compare — the merge-path rank at block granularity, kept as
+    the *differential oracle* for the packed rank-key fast path
+    (``kernels/keypack.py``: ``lex_searchsorted`` computes the same counts
+    in O(|b| log |a|) gathers; the production merges all route there)."""
     a2 = [a[:, None] for a in a_lanes]
     b2 = [b[None, :] for b in b_lanes]
     cmp = lex_gt_lanes(b2, a2) if strict else ~lex_gt_lanes(a2, b2)
@@ -69,8 +80,10 @@ def lex_merge_take(a_lanes, b_lanes):
     own index + count of smaller elements in the other run — strict one way,
     non-strict the other, so equal tuples get distinct ranks and every
     output slot is written exactly once. Key-only runs rank in O(n log n)
-    via ``searchsorted``; wider tuples have no multi-lane searchsorted and
-    pay the O(|a|·|b|) broadcast compare. Runs may have different lengths.
+    via ``searchsorted``; wider tuples pay the O(|a|·|b|) broadcast compare
+    here — this is the lane-wise *oracle*; production merges use
+    ``keypack.merge_take_packed`` / ``ops.merge_sorted_lex``, which rank
+    every arity in O(n log n). Runs may have different lengths.
     """
     a_lanes, b_lanes = list(a_lanes), list(b_lanes)
     na, nb = a_lanes[0].shape[0], b_lanes[0].shape[0]

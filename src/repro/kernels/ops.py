@@ -11,7 +11,17 @@ Entry points:
   * ``sort_lex(keys_lanes, vals=None)`` — the variadic lexicographic
     front-end: sorts tuples of same-shape arrays lane-by-lane (lane 0 most
     significant), the multi-character word keys of the paper's pipeline
-    (``core/packing.py``). Same engine tiers as ``sort``.
+    (``core/packing.py``). Same engine tiers as ``sort``, plus an
+    ``engine='auto'|'lanes'|'packed'`` routing knob: 'packed' collapses the
+    tuple into 1-2 uint32 rank-key lanes (``kernels/keypack.py``), sorts
+    those, and unpacks — chosen automatically when the integer tuple fits
+    the 2-lane budget with fewer packed than original lanes.
+  * ``merge_sorted(a, b)`` / ``merge_sorted_lex(a_lanes, b_lanes)`` — the
+    run-merge front-end shared by every granularity (pipeline run
+    tournament, distributed 'take' merge and final combine): 'packed'
+    (rank-key searchsorted + one scatter), 'kernel' (the block-parallel
+    Pallas merge-path kernel, ``kernels/runmerge_kernel.py``), or 'lanes'
+    (the ``lex_merge_take`` broadcast oracle).
   * ``segmented_sort(keys, counts)`` — the fused bucket pipeline: one
     batched lex kernel launch over a whole (num_buckets, capacity, lanes)
     bucket tensor with per-bucket count masking (``core/bucketing``'s
@@ -61,12 +71,17 @@ import jax.numpy as jnp
 
 from .bitonic_kernel import bitonic_rows_lex_pallas
 from .distribute_kernel import distribute_rows_pallas
+from .keypack import (merge_take_packed, pack_rank_keys, plan_pack,
+                      unpack_rank_keys)
+from .lex import lex_merge_take, sentinel_for
 from .oets_kernel import oets_rows_lex_pallas
 from .partition_kernel import partition_rows_pallas
+from .runmerge_kernel import DEFAULT_MERGE_BLOCK, merge_runs_lex_pallas
 
 __all__ = ["sort", "sort_kv", "sort_lex", "segmented_sort", "distribute",
-           "bucketize", "choose_plan", "sort_rows", "sort_rows_kv",
-           "sort_rows_lex", "partition_rows"]
+           "bucketize", "choose_plan", "choose_lex_engine",
+           "merge_sorted", "merge_sorted_lex", "choose_merge_engine",
+           "sort_rows", "sort_rows_kv", "sort_rows_lex", "partition_rows"]
 
 _LANES = 128
 _SUBLANES = 8
@@ -82,10 +97,9 @@ def _auto_interpret(interpret):
     return interpret
 
 
-def _sentinel(dtype):
-    if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.array(jnp.inf, dtype)
-    return jnp.array(jnp.iinfo(dtype).max, dtype)
+# shared with the kernel modules (kernels/lex.py holds the definition so the
+# per-kernel modules never import this front-end back — no cycle)
+_sentinel = sentinel_for
 
 
 def _pad_cols(x, target):
@@ -161,8 +175,38 @@ def sort_kv(keys, vals, algorithm: str = "auto",
     return lanes[0], ov
 
 
+def choose_lex_engine(dtypes, max_values=None, engine: str = "auto") -> str:
+    """Pick the lane engine for :func:`sort_lex` — ``choose_plan``'s cost
+    model at tuple granularity. 'packed' wins exactly when the rank-key
+    packing is lossless *and* shrinks the comparator's lane count: every
+    swap network phase moves and compares each lane, so fewer lanes is
+    strictly less work, while a lossy packing would have to carry the
+    original lanes as tie-breaks and lose. Float lanes stay lane-wise (the
+    packed path re-materialises keys by unpacking, which cannot restore a
+    ``-0.0`` and would pin NaNs — see ``kernels/keypack.py``). Explicit
+    ``engine`` overrides, but never unsoundly: a 'packed' request that the
+    plan cannot honour exactly falls back to 'lanes'."""
+    if engine not in ("auto", "lanes", "packed"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "lanes":
+        return "lanes"
+    dtypes = tuple(jnp.dtype(d) for d in dtypes)
+    if any(not jnp.issubdtype(d, jnp.integer) for d in dtypes):
+        return "lanes"
+    try:
+        plan = plan_pack(dtypes, max_values)
+    except TypeError:
+        return "lanes"
+    if not plan.exact:
+        return "lanes"
+    if engine == "packed":
+        return "packed"
+    return "packed" if plan.n_packed < len(dtypes) else "lanes"
+
+
 def sort_lex(keys_lanes, vals=None, algorithm: str = "auto",
-             block_size: int | None = None, interpret: bool | None = None):
+             block_size: int | None = None, interpret: bool | None = None,
+             engine: str = "auto", max_values=None):
     """Lexicographic sort: ``keys_lanes`` is a sequence of same-shape 1-D or
     (rows, cols) arrays, compared element-wise lane-by-lane (lane 0 most
     significant — the lane-packing contract of ``core/packing.py``). All
@@ -173,6 +217,13 @@ def sort_lex(keys_lanes, vals=None, algorithm: str = "auto",
     ``vals`` is given. Engine tiers are the same as :func:`sort`
     (``choose_plan`` on the row width); every tier — including the
     multi-block blocksort — runs the full tuple through one Pallas engine.
+
+    ``engine``: 'lanes' (every key lane is its own comparator lane),
+    'packed' (collapse the tuple into 1-2 uint32 rank-key lanes via
+    ``kernels/keypack.py``, sort those, unpack — honoured only when the
+    packing is lossless for integer lanes, else falls back to 'lanes'), or
+    'auto' (:func:`choose_lex_engine`). ``max_values``: optional per-lane
+    upper bounds (hashable tuple) that tighten the packed widths.
     """
     lanes = list(keys_lanes)
     if not lanes:
@@ -180,6 +231,17 @@ def sort_lex(keys_lanes, vals=None, algorithm: str = "auto",
     arrs = lanes + ([vals] if vals is not None else [])
     if any(a.shape != arrs[0].shape for a in arrs[1:]):
         raise ValueError("all lanes (and vals) must have identical shapes")
+    eng = choose_lex_engine([a.dtype for a in lanes], max_values, engine)
+    if eng == "packed":
+        packed = pack_rank_keys(lanes, max_values)
+        out_packed = sort_lex(packed.lanes, vals=vals, algorithm=algorithm,
+                              block_size=block_size, interpret=interpret,
+                              engine="lanes")
+        if vals is not None:
+            out_packed, out_vals = out_packed
+        out = tuple(unpack_rank_keys(out_packed,
+                                     [a.dtype for a in lanes], max_values))
+        return out if vals is None else (out, out_vals)
     views = [_as_rows(a) for a in arrs]
     vec = views[0][1]
     a2 = [v[0] for v in views]
@@ -231,6 +293,89 @@ def segmented_sort(keys, counts=None, algorithm: str = "auto",
     return jnp.stack(sorted_lanes, axis=-1)
 
 
+def choose_merge_engine(total: int, engine: str = "auto") -> str:
+    """Pick the run-merge engine for a ``total``-element combine —
+    ``choose_plan``'s cost model at merge granularity. 'packed' (rank-key
+    searchsorted + one scatter) is the jnp fast path on every backend:
+    O(n log n) gathers against the broadcast's O(|a|·|b|·L). The Pallas
+    merge-path 'kernel' additionally replaces the HBM-wide scatter with
+    block-local VMEM merges, which only pays off compiled on TPU and past
+    one output tile (below that the packed scatter is a single cheap
+    launch). Lane count does not move the boundary — it scales both sides'
+    compare cost equally, so the model is size- and backend-driven only.
+    'lanes' — the broadcast ``lex_merge_take`` oracle — is never chosen
+    automatically. Explicit ``engine`` overrides."""
+    if engine != "auto":
+        if engine not in ("lanes", "packed", "kernel"):
+            raise ValueError(f"unknown engine {engine!r}")
+        return engine
+    if jax.default_backend() == "tpu" and total > 2 * DEFAULT_MERGE_BLOCK:
+        return "kernel"
+    return "packed"
+
+
+@functools.partial(jax.jit, static_argnames=("n_arr", "n_cmp", "max_values"))
+def _merge_packed_jit(*arrs, n_arr, n_cmp, max_values):
+    return tuple(merge_take_packed(list(arrs[:n_arr]), list(arrs[n_arr:]),
+                                   n_cmp=n_cmp, max_values=max_values))
+
+
+@functools.partial(jax.jit, static_argnames=("n_arr",))
+def _merge_lanes_jit(*arrs, n_arr):
+    return tuple(lex_merge_take(list(arrs[:n_arr]), list(arrs[n_arr:])))
+
+
+def merge_sorted_lex(a_lanes, b_lanes, engine: str = "auto",
+                     n_cmp: int | None = None, max_values=None,
+                     block_size: int | None = None,
+                     interpret: bool | None = None):
+    """Merge two *sorted* lex-tuple runs (tuples of parallel 1-D arrays, may
+    differ in length) into one sorted run — the shared run-merge primitive
+    of the pipeline tournament, the distributed 'take' merge, and the
+    sample-sort combine.
+
+    Every lane participates in the compare in tuple order (trailing lanes
+    are payload tie-breaks, ``kernels/lex.py`` conventions); output is
+    bit-identical to ``lex_merge_take`` across engines. ``engine``: 'packed'
+    (rank-key searchsorted ranks + one scatter), 'kernel' (the block-parallel
+    Pallas merge-path kernel), 'lanes' (the broadcast oracle), or 'auto'
+    (:func:`choose_merge_engine`). ``n_cmp``: the leading ``n_cmp`` lanes
+    are pre-packed compare lanes to rank on as-is (see
+    ``keypack.merge_take_packed``); ``max_values``: per-lane packing bounds
+    (hashable tuple).
+    """
+    a_lanes, b_lanes = tuple(a_lanes), tuple(b_lanes)
+    if max_values is not None:
+        max_values = tuple(max_values)  # static under jit: must be hashable
+    if len(a_lanes) != len(b_lanes) or not a_lanes:
+        raise ValueError("runs must share a non-zero lane arity")
+    if any(x.ndim != 1 for x in a_lanes + b_lanes):
+        raise ValueError("runs must be tuples of 1-D arrays")
+    if a_lanes[0].shape[0] == 0:
+        return b_lanes
+    if b_lanes[0].shape[0] == 0:
+        return a_lanes
+    eng = choose_merge_engine(a_lanes[0].shape[0] + b_lanes[0].shape[0],
+                              engine)
+    if eng == "lanes":
+        return _merge_lanes_jit(*a_lanes, *b_lanes, n_arr=len(a_lanes))
+    if eng == "packed":
+        return _merge_packed_jit(*a_lanes, *b_lanes, n_arr=len(a_lanes),
+                                 n_cmp=n_cmp, max_values=max_values)
+    return merge_runs_lex_pallas(a_lanes, b_lanes, n_cmp=n_cmp,
+                                 max_values=max_values, block=block_size,
+                                 interpret=_auto_interpret(interpret))
+
+
+def merge_sorted(a, b, engine: str = "auto", block_size: int | None = None,
+                 interpret: bool | None = None):
+    """Key-only special case of :func:`merge_sorted_lex`: merge two sorted
+    1-D arrays into one."""
+    (out,) = merge_sorted_lex((a,), (b,), engine=engine,
+                              block_size=block_size, interpret=interpret)
+    return out
+
+
 def distribute(keys, interpret: bool | None = None):
     """Run the on-device distribute pass over packed words (the paper's
     phases 1-2: count, then assign every element its sub-array slot).
@@ -258,6 +403,17 @@ def distribute(keys, interpret: bool | None = None):
     return dest[0, :n], rank[0, :n], counts[0, :num_buckets]
 
 
+def _optimistic_capacity(n: int, num_buckets: int) -> int:
+    """First-shot capacity for the two-tier autotune: a uniform length
+    spread with 4x headroom, rounded to a power of two so repeated sizes
+    share jit cache entries. Clamped at ~n/2 so a small bucket count (1-lane
+    words have only 5) never degenerates the optimistic tensor to the
+    worst case — a distribution skewed past half the input is exactly the
+    case the exact-count retry tier exists for."""
+    return max(1, min(n, _next_pow2(-(-4 * n // num_buckets)),
+                      _next_pow2(-(-n // 2))))
+
+
 def bucketize(keys, capacity: int | None = None,
               interpret: bool | None = None):
     """Scatter packed words into the paper's dense per-length bucket tensor
@@ -265,24 +421,38 @@ def bucketize(keys, capacity: int | None = None,
     scatter.
 
     ``keys``: (n, lanes) uint32 packed words. ``capacity``: slots per bucket
-    (static under jit); ``None`` sizes it at the exact histogram max, which
-    costs one scalar device->host sync — pass an explicit capacity to stay
-    inside a single jitted program. Returns ``(buckets, counts)``:
-    ``buckets`` (num_buckets, capacity, lanes) uint32 with bucket ``l``
-    holding the words of byte length ``l`` in arrival order and all unused
-    slots at the sentinel; ``counts`` (num_buckets,) int32 *true* counts —
-    when an explicit capacity is exceeded the excess words are dropped from
-    the tensor but still counted, so callers detect overflow by
-    ``counts.max() > capacity`` (mirrors the distributed exact-count
-    protocol: occupancy is never inferred from sentinel compares).
+    (static under jit). ``None`` runs the two-tier autotune: the scatter is
+    dispatched immediately at an optimistic capacity (uniform spread + 4x
+    headroom) *without* reading the histogram back, then the exact counts —
+    already computed by the distribute kernel, never inferred from sentinel
+    compares — decide whether a single retry at the true max is needed. On
+    the happy path the histogram sync overlaps the in-flight scatter instead
+    of blocking its launch; only a skewed length distribution pays the
+    second scatter. Returns ``(buckets, counts)``: ``buckets``
+    (num_buckets, capacity, lanes) uint32 with bucket ``l`` holding the
+    words of byte length ``l`` in arrival order and all unused slots at the
+    sentinel; ``counts`` (num_buckets,) int32 *true* counts — when an
+    explicit capacity is exceeded the excess words are dropped from the
+    tensor but still counted, so callers detect overflow by
+    ``counts.max() > capacity`` (the autotune path can never overflow).
     """
     n, lanes = keys.shape
     num_buckets = 4 * lanes + 1
     dest, rank, counts = distribute(keys, interpret=interpret)
+    keys = jnp.asarray(keys, jnp.uint32)
     if capacity is None:
-        capacity = max(1, int(jnp.max(counts))) if n else 0
-    return _scatter_to_buckets(jnp.asarray(keys, jnp.uint32), dest, rank,
-                               num_buckets=num_buckets,
+        if n == 0:
+            capacity = 0
+        else:
+            capacity = _optimistic_capacity(n, num_buckets)
+            buckets = _scatter_to_buckets(keys, dest, rank,
+                                          num_buckets=num_buckets,
+                                          capacity=capacity)
+            true_max = int(jnp.max(counts))  # syncs after the dispatch above
+            if true_max <= capacity:
+                return buckets, counts
+            capacity = true_max
+    return _scatter_to_buckets(keys, dest, rank, num_buckets=num_buckets,
                                capacity=capacity), counts
 
 

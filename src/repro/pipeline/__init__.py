@@ -11,9 +11,11 @@ kernels:
   ``ingest``     chunked sort: pack -> per-chunk fused bucketize+segmented
                  sort (``core.bucketing.sorted_packed``) -> sorted runs ->
                  k-way merge; ``chunked_sort_words`` is the words front-end.
-  ``merge``      the run combiner: tournament tree of merge-path takes over
-                 shortlex lex tuples (``kernels.lex.lex_merge_take`` — the
-                 same primitive ``core/distributed``'s 'take' merge uses).
+  ``merge``      the run combiner: tournament tree of packed rank-key
+                 merge-path takes over shortlex lex tuples
+                 (``kernels.ops.merge_sorted_lex`` / ``kernels/keypack.py``
+                 — the same primitive ``core/distributed``'s 'take' merge
+                 uses; rank keys ride the scatter between rounds).
   ``histogram``  the shared length-histogram / bucket-assignment utility
                  that ``data.bucketing`` planning and ``serve.scheduler``
                  admission both consume (one implementation of the paper's

@@ -6,30 +6,39 @@ Algorithms Using MPI*): produce locally sorted runs, combine them by merge.
 Here a "processor" is one device launch — each fixed-size chunk of packed
 words runs ``core.bucketing.sorted_packed`` (on-device distribute ->
 segmented in-bucket sort -> shortlex compaction) to yield a
-:class:`SortedRun`, and runs combine with the merge-path tournament of
-``pipeline.merge``. The *per-launch* working set is bounded by the chunk
-size — the fused program's bucket tensor is ``O(num_buckets *
-chunk_capacity)`` regardless of total input length, and every chunk reuses
-the same compiled executable (chunks share one static shape; only the tail
-chunk re-traces). The run *merge* is not yet similarly bounded: multi-lane
-tuples take ``lex_rank_count``'s O(|a|·|b|) broadcast compare, so the final
-tournament rounds dominate memory at large n — the u64 composite rank key
-that would make every round searchsorted-cheap is a ROADMAP open item.
+:class:`SortedRun`, and runs combine with the packed rank-key merge path of
+``pipeline.merge`` / ``kernels.ops.merge_sorted_lex``. The *per-launch*
+working set is bounded by the chunk size — the fused program's bucket
+tensor is ``O(num_buckets * chunk_capacity)`` regardless of total input
+length, and every chunk reuses the same compiled executable (chunks share
+one static shape; only the tail chunk re-traces). The run merge is bounded
+the same way per compare: each tournament round ranks by binary search over
+the packed shortlex keys (O(n log n) gathers — the fused program emits the
+keys during compaction, see ``SortedRun.cmp_lanes``), never by the
+O(|a|·|b|·L) broadcast the jnp-level combine used to pay.
 
 Runs carry an explicit length lane so the merge key is the shortlex tuple
 ``(length, lane_0, ..., lane_L-1)`` — packed keys alone order
 byte-lexicographically ("aa" < "z"), not shortlex ("z" < "aa").
+
+The words front-end also overlaps its host work with the device: chunk
+``i+1`` packs on a worker thread while chunk ``i``'s fused launch is in
+flight (async dispatch already queues the device side, so the only serial
+cost left was the packing loop itself).
 """
 
 from __future__ import annotations
 
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import packing
 from ..core.bucketing import sorted_packed
+from ..kernels.keypack import cmp_from_packed, packed_cmp_lanes, shortlex_max_values
 from .merge import merge_runs
 
 __all__ = ["DEFAULT_CHUNK", "SortedRun", "sorted_run",
@@ -44,15 +53,29 @@ DEFAULT_CHUNK = 4096
 @dataclass
 class SortedRun:
     """One shortlex-sorted run: ``lengths[i]`` is the byte length of the
-    word packed in ``keys[i]``; rows ascend by ``(length, bytes)``."""
+    word packed in ``keys[i]``; rows ascend by ``(length, bytes)``.
+    ``packed`` optionally holds the 1-2 uint32 rank-key lanes of the
+    shortlex tuples (``kernels/keypack.py``), emitted for free by the fused
+    per-chunk program."""
 
     lengths: jnp.ndarray   # (m,) int32
     keys: jnp.ndarray      # (m, lanes) uint32
+    packed: Optional[Tuple] = None
 
     def lanes(self):
         """The run as a merge-ready lex tuple (length lane first)."""
         return (self.lengths,
                 *(self.keys[:, l] for l in range(self.keys.shape[1])))
+
+    def cmp_lanes(self):
+        """The minimal compare-lane list for ranking this run in a merge:
+        the precomputed rank keys + keypack's tie-break suffix, or a fresh
+        packing when the run was built without one."""
+        lanes = list(self.lanes())
+        mv = shortlex_max_values(self.keys.shape[1])
+        if self.packed is None:
+            return packed_cmp_lanes(lanes, mv)
+        return cmp_from_packed(list(self.packed), lanes, mv)
 
     @classmethod
     def from_lanes(cls, lanes):
@@ -62,10 +85,19 @@ class SortedRun:
 def sorted_run(keys, algorithm: str = "pallas",
                capacity: int | None = None) -> SortedRun:
     """Sort one packed (n, lanes) chunk on device into a :class:`SortedRun`
-    (the per-chunk fused bucketize + segmented-sort launch)."""
-    lengths, sorted_keys = sorted_packed(keys, algorithm=algorithm,
-                                         capacity=capacity)
-    return SortedRun(lengths=lengths, keys=sorted_keys)
+    (the per-chunk fused bucketize + segmented-sort launch, rank keys
+    included)."""
+    lengths, sorted_keys, packed = sorted_packed(
+        keys, algorithm=algorithm, capacity=capacity, return_packed=True)
+    return SortedRun(lengths=lengths, keys=sorted_keys, packed=packed)
+
+
+def _merged_run(runs) -> SortedRun:
+    if len(runs) == 1:
+        return runs[0]
+    merged = merge_runs([r.lanes() for r in runs],
+                        cmp_runs=[r.cmp_lanes() for r in runs])
+    return SortedRun.from_lanes(merged)
 
 
 def chunked_sort_packed(keys, chunk_size: int = DEFAULT_CHUNK,
@@ -91,22 +123,48 @@ def chunked_sort_packed(keys, chunk_size: int = DEFAULT_CHUNK,
         chunk = keys[start: start + chunk_size]
         cap = capacity if capacity is not None else int(chunk.shape[0])
         runs.append(sorted_run(chunk, algorithm=algorithm, capacity=cap))
-    if len(runs) == 1:
-        return runs[0]
-    return SortedRun.from_lanes(merge_runs([r.lanes() for r in runs]))
+    return _merged_run(runs)
+
+
+def _prefetch_map(fn, items):
+    """Yield ``fn(item)`` in order, computing the *next* call on a worker
+    thread while the consumer processes the current result — the
+    double-buffering that keeps host packing off the critical path between
+    device launches."""
+    items = list(items)
+    if not items:
+        return
+    with ThreadPoolExecutor(max_workers=1) as ex:
+        fut = ex.submit(fn, items[0])
+        for nxt in items[1:]:
+            cur = fut.result()
+            fut = ex.submit(fn, nxt)
+            yield cur
+        yield fut.result()
 
 
 def chunked_sort_words(words, chunk_size: int = DEFAULT_CHUNK,
                        algorithm: str = "pallas",
                        capacity: int | None = None) -> list:
-    """Words front-end: pack once at the global width (ingress), chunked
-    device sort + run merge, unpack once (egress). Returns the words in
-    shortlex order — bit-identical to ``core.bucketed_sort_words`` but with
-    per-launch device memory bounded by ``chunk_size``."""
+    """Words front-end: chunked device sort + packed-rank-key run merge,
+    unpack once (egress). Returns the words in shortlex order —
+    bit-identical to ``core.bucketed_sort_words`` but with per-launch device
+    memory bounded by ``chunk_size``, and with each chunk packed (at the
+    global width, so all runs share one lane count) on a worker thread while
+    the previous chunk's fused launch is in flight."""
     words = list(words)
     if not words:
         return []
-    keys = jnp.asarray(packing.pack_words(words))
-    run = chunked_sort_packed(keys, chunk_size=chunk_size,
-                              algorithm=algorithm, capacity=capacity)
+    if chunk_size < 1:
+        raise ValueError("chunk_size must be >= 1")
+    width = max(packing.byte_length(w) for w in words)
+    chunks = [words[i: i + chunk_size]
+              for i in range(0, len(words), chunk_size)]
+    runs = []
+    for keys in _prefetch_map(
+            lambda ws: jnp.asarray(packing.pack_words(ws, width=width)),
+            chunks):
+        cap = capacity if capacity is not None else int(keys.shape[0])
+        runs.append(sorted_run(keys, algorithm=algorithm, capacity=cap))
+    run = _merged_run(runs)
     return packing.unpack_words(np.asarray(run.keys))

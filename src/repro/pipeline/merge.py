@@ -3,53 +3,69 @@
 A *run* here is a tuple of parallel 1-D arrays already sorted by the
 lane-by-lane lexicographic order (``kernels/lex.py`` conventions — for the
 word pipeline the tuple is ``(length, key_lane_0, ..., key_lane_L-1)``, i.e.
-shortlex). Two runs combine with one merge-path take
-(``kernels.lex.lex_merge_take``: rank = own index + cross-run rank count,
-then a single scatter — no re-sort), the same primitive the distributed
-odd-even engine's 'take' merge uses on its block exchanges; k runs combine
-as a tournament tree, log2(k) rounds of pairwise merges, so total compare
-work is O(n log k) in the searchsorted (key-only) regime.
+shortlex). Two runs combine through ``kernels.ops.merge_sorted_lex`` — the
+packed rank-key merge path (``kernels/keypack.py``: searchsorted ranks +
+one scatter, or the Pallas merge-path run kernel on TPU), the same
+primitive ``core/distributed``'s 'take' merge and sample-sort combine use —
+so every round costs O(n log n) gathers instead of ``lex_rank_count``'s
+O(|a|·|b|·L) broadcast. k runs combine as a tournament tree, log2(k) rounds
+of pairwise merges.
+
+The tournament works in the *extended* representation: each run's packed
+compare lanes (1-2 uint32 rank keys + keypack's minimal tie-break suffix)
+ride the scatter alongside the data lanes, so later rounds rank without
+re-packing. ``cmp_runs`` lets the chunked ingest hand over rank keys the
+fused bucketize program already computed.
 """
 
 from __future__ import annotations
 
-import jax
-
-from ..kernels.lex import lex_merge_take
+from ..kernels.keypack import packed_cmp_lanes
+from ..kernels.ops import merge_sorted_lex
 
 __all__ = ["merge_two", "merge_runs"]
 
 
-@jax.jit
-def _merge2(a_lanes, b_lanes):
-    return tuple(lex_merge_take(list(a_lanes), list(b_lanes)))
-
-
-def merge_two(a_lanes, b_lanes):
+def merge_two(a_lanes, b_lanes, engine: str = "auto", max_values=None):
     """Merge two sorted lex-tuple runs (tuples of parallel 1-D arrays, may
-    differ in length) into one sorted run. Jitted per (shape, arity)."""
-    a_lanes, b_lanes = tuple(a_lanes), tuple(b_lanes)
-    if len(a_lanes) != len(b_lanes):
-        raise ValueError("runs must have the same lane arity")
-    if a_lanes[0].shape[0] == 0:
-        return b_lanes
-    if b_lanes[0].shape[0] == 0:
-        return a_lanes
-    return _merge2(a_lanes, b_lanes)
+    differ in length) into one sorted run. Thin alias of
+    ``kernels.ops.merge_sorted_lex``, which validates arity and
+    short-circuits empty runs without device work."""
+    return merge_sorted_lex(tuple(a_lanes), tuple(b_lanes), engine=engine,
+                            max_values=max_values)
 
 
-def merge_runs(runs):
-    """Tournament-tree k-way merge: pairwise :func:`merge_two` rounds until
-    one run remains. ``runs``: non-empty list of sorted lex-tuple runs of
-    equal arity. Chunked ingest produces at most two distinct run lengths
-    (full chunks + one tail), so the tree re-traces only O(log k) shapes."""
+def merge_runs(runs, engine: str = "auto", max_values=None, cmp_runs=None):
+    """Tournament-tree k-way merge: pairwise merge rounds until one run
+    remains. ``runs``: list of sorted lex-tuple runs of equal arity; an
+    empty list returns ``()`` and a single run is returned as-is — both
+    without touching the device. Chunked ingest produces at most two
+    distinct run lengths (full chunks + one tail), so the tree re-traces
+    only O(log k) shapes.
+
+    ``cmp_runs``: optional parallel list of pre-packed compare-lane lists
+    (e.g. ``SortedRun.cmp_lanes()`` — rank keys the fused per-chunk program
+    already emitted); ``None`` packs them here via
+    ``keypack.packed_cmp_lanes`` with ``max_values``. Either way the compare
+    lanes are scattered through every round alongside the data, so no round
+    re-packs."""
     runs = [tuple(r) for r in runs]
     if not runs:
-        raise ValueError("need at least one run")
-    while len(runs) > 1:
-        nxt = [merge_two(runs[i], runs[i + 1])
-               for i in range(0, len(runs) - 1, 2)]
-        if len(runs) % 2:
-            nxt.append(runs[-1])
-        runs = nxt
-    return runs[0]
+        return ()
+    if len(runs) == 1:
+        return runs[0]
+    arity = len(runs[0])
+    if any(len(r) != arity for r in runs):
+        raise ValueError("runs must have the same lane arity")
+    if cmp_runs is None:
+        cmp_runs = [packed_cmp_lanes(list(r), max_values) for r in runs]
+    ext = [tuple(c) + r for c, r in zip(cmp_runs, runs)]
+    n_cmp = len(ext[0]) - arity
+    while len(ext) > 1:
+        nxt = [merge_sorted_lex(ext[i], ext[i + 1], engine=engine,
+                                n_cmp=n_cmp)
+               for i in range(0, len(ext) - 1, 2)]
+        if len(ext) % 2:
+            nxt.append(ext[-1])
+        ext = nxt
+    return ext[0][n_cmp:]

@@ -1,0 +1,294 @@
+"""Packed rank-key subsystem (kernels/keypack.py): the packed order must
+equal the lane-wise ``lex_gt_lanes`` order, exactly, across every bias rule
+and both packing tiers (exact 1-2 lane budgets and the >2-lane prefix
+fallback). The lane-wise ``lex_rank_count``/``lex_merge_take`` stay the
+differential oracle; sizes stay <= 128 per the interpret-mode compile-width
+constraint (the sort engines compile per shape)."""
+
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.kernels import keypack as kp
+from repro.kernels import sort_lex
+from repro.kernels.lex import lex_merge_take, lex_rank_count
+
+U32_MAX = np.uint32(0xFFFFFFFF)
+
+
+def _seed(*parts):
+    return zlib.crc32("-".join(map(str, parts)).encode())
+
+
+def _draw_lane(rng, n, dtype, flavor):
+    """flavor: 'random' | 'negatives' (int32 spanning the sign bit) |
+    'sentinel' (collides with 0xFFFFFFFF / iinfo.max) | 'dups' (tiny
+    alphabet, many ties)."""
+    if flavor == "negatives":
+        return rng.integers(-(2**31), 2**31, n).astype(np.int32)
+    if flavor == "sentinel":
+        x = rng.integers(0, 2**32, n).astype(np.uint32)
+        x[rng.random(n) < 0.4] = U32_MAX
+        return x
+    if flavor == "dups":
+        return rng.integers(0, 4, n).astype(dtype)
+    if dtype == np.int32:
+        return rng.integers(-(2**31), 2**31, n).astype(np.int32)
+    return rng.integers(0, 2**32, n).astype(np.uint32)
+
+
+def _sorted_lanes(lanes):
+    order = np.lexsort(tuple(np.asarray(a) for a in reversed(lanes)))
+    return [jnp.asarray(np.asarray(a)[order]) for a in lanes]
+
+
+# ---------------------------------------------------------------------------
+# bias rules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.int8, np.int16,
+                                   np.uint16])
+def test_bias_preserves_integer_order(dtype):
+    rng = np.random.default_rng(_seed("bias", dtype.__name__))
+    info = np.iinfo(dtype)
+    a = rng.integers(info.min, int(info.max) + 1, 200).astype(dtype)
+    b = rng.integers(info.min, int(info.max) + 1, 200).astype(dtype)
+    for edge in (info.min, info.max, 0):
+        a[rng.integers(0, 200)] = edge
+    ba = np.asarray(kp.bias_to_u32(jnp.asarray(a)))
+    bb = np.asarray(kp.bias_to_u32(jnp.asarray(b)))
+    np.testing.assert_array_equal(ba > bb, a > b)
+    np.testing.assert_array_equal(ba == bb, a == b)
+
+
+def test_bias_float32_total_order_and_zero_equality():
+    """The oracle is *jax's* compare (what ``lex_gt_lanes`` compiles to) —
+    XLA flushes denormals to zero in comparisons, and the bias must agree
+    with that, not with numpy."""
+    rng = np.random.default_rng(_seed("bias", "f32"))
+    a = jnp.asarray(np.concatenate(
+        [rng.normal(size=60), [0.0, -0.0, np.inf, -np.inf,
+                               1e-38, -1e-38]]).astype(np.float32))
+    b = jnp.asarray(np.concatenate(
+        [rng.normal(size=60), [-0.0, 0.0, -np.inf, np.inf,
+                               -1e-38, 1e-38]]).astype(np.float32))
+    ba = np.asarray(kp.bias_to_u32(a))
+    bb = np.asarray(kp.bias_to_u32(b))
+    np.testing.assert_array_equal(ba > bb, np.asarray(a > b))
+    # -0.0 is normalised before biasing, so packed equality matches ==
+    np.testing.assert_array_equal(ba == bb, np.asarray(a == b))
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+def test_pack_exact_roundtrip_tight_widths():
+    """Three bounded lanes collapse into a single uint32 rank key and come
+    back bit-identical."""
+    rng = np.random.default_rng(_seed("roundtrip"))
+    lanes = [jnp.asarray(rng.integers(0, 13, 100).astype(np.int32)),
+             jnp.asarray(rng.integers(0, 256, 100).astype(np.uint32)),
+             jnp.asarray(rng.integers(-128, 128, 100).astype(np.int8))]
+    mv = (12, 255, None)
+    pk = kp.pack_rank_keys(lanes, mv)
+    assert pk.plan.exact and pk.plan.n_packed == 1 and pk.plan.covered == 3
+    back = kp.unpack_rank_keys(pk.lanes, [a.dtype for a in lanes], mv)
+    for a, r in zip(lanes, back):
+        assert r.dtype == a.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
+def test_pack_two_lane_budget_roundtrip():
+    rng = np.random.default_rng(_seed("u64"))
+    lanes = [jnp.asarray(rng.integers(-(2**31), 2**31, 90).astype(np.int32)),
+             jnp.asarray(rng.integers(0, 2**32, 90).astype(np.uint32))]
+    pk = kp.pack_rank_keys(lanes)
+    assert pk.plan.exact and pk.plan.n_packed == 2
+    back = kp.unpack_rank_keys(pk.lanes, [a.dtype for a in lanes])
+    for a, r in zip(lanes, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+
+def test_pack_overflow_is_inexact_and_unpack_refuses():
+    lanes = [jnp.zeros((4,), jnp.uint32)] * 3
+    pk = kp.pack_rank_keys(lanes)
+    assert not pk.plan.exact and pk.plan.covered == 2
+    with pytest.raises(ValueError, match="inexact"):
+        kp.unpack_rank_keys(pk.lanes, [jnp.uint32] * 3)
+
+
+def test_bad_inputs():
+    with pytest.raises(ValueError):
+        kp.pack_rank_keys([])
+    with pytest.raises(ValueError):
+        kp.plan_pack([jnp.uint32], max_values=(1, 2))
+    with pytest.raises(TypeError):
+        kp.plan_pack([jnp.float64])
+    with pytest.raises(ValueError):
+        kp.lex_searchsorted([jnp.zeros(3)], [jnp.zeros(3)], side="middle")
+
+
+def test_bounded_float_lane_refused():
+    """max_values on a float lane would pack by fraction truncation
+    (1.9 and 1.2 both -> 1) — it must raise, and the merge front-end must
+    fall back to a correct lane-wise rank instead of emitting unsorted
+    output."""
+    with pytest.raises(TypeError, match="integer"):
+        kp.plan_pack([jnp.float32], max_values=(7,))
+    with pytest.raises(TypeError, match="integer"):
+        kp.bias_to_u32(jnp.asarray([1.9], jnp.float32), max_value=7)
+    from repro.kernels import merge_sorted_lex
+    a = (jnp.asarray([1.9], jnp.float32),)
+    b = (jnp.asarray([1.2], jnp.float32),)
+    (out,) = merge_sorted_lex(a, b, engine="packed", max_values=(7,))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.array([1.2, 1.9], np.float32))
+
+
+def test_sort_lex_packed_engine_validates_shapes():
+    """Shape validation must run before the packed routing: mismatched
+    lanes raise instead of silently broadcasting through the pack."""
+    from repro.kernels import sort_lex as ops_sort_lex
+    a = jnp.asarray([3, 1, 2], jnp.uint8)
+    b = jnp.asarray([0], jnp.uint8)
+    with pytest.raises(ValueError, match="identical shapes"):
+        ops_sort_lex([a, b])
+
+
+# ---------------------------------------------------------------------------
+# packed order == lane-wise order (the subsystem's whole contract)
+# ---------------------------------------------------------------------------
+
+FLAVORS = ["random", "negatives", "sentinel", "dups"]
+
+
+@pytest.mark.parametrize("flavor", FLAVORS)
+@pytest.mark.parametrize("n_lanes", [1, 2, 3, 4])
+def test_packed_searchsorted_matches_broadcast_oracle(n_lanes, flavor):
+    """Ranks from the packed binary search equal ``lex_rank_count``'s
+    broadcast on both sides (strict/left and non-strict/right) — covering
+    signed negatives, 0xFFFFFFFF sentinel collisions, the >2-lane prefix
+    fallback, and dup-heavy ties."""
+    rng = np.random.default_rng(_seed("ss", n_lanes, flavor))
+    A = _sorted_lanes([_draw_lane(rng, 96, np.uint32, flavor)
+                       for _ in range(n_lanes)])
+    V = [jnp.asarray(_draw_lane(rng, 57, np.uint32, flavor))
+         for _ in range(n_lanes)]
+    for side, strict in [("left", True), ("right", False)]:
+        got = kp.packed_searchsorted(A, V, side=side)
+        want = lex_rank_count(A, V, strict=strict)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("flavor", FLAVORS)
+@pytest.mark.parametrize("n_lanes", [1, 2, 3])
+@pytest.mark.parametrize("na,nb", [(80, 47), (1, 64), (33, 33)])
+def test_merge_take_packed_bit_identical(n_lanes, flavor, na, nb):
+    rng = np.random.default_rng(_seed("mt", n_lanes, flavor, na, nb))
+    A = _sorted_lanes([_draw_lane(rng, na, np.uint32, flavor)
+                       for _ in range(n_lanes)])
+    B = _sorted_lanes([_draw_lane(rng, nb, np.uint32, flavor)
+                       for _ in range(n_lanes)])
+    got = kp.merge_take_packed(A, B)
+    want = lex_merge_take(A, B)
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_cmp_from_packed_consistent_with_fresh_packing():
+    """Rank keys packed ahead of time (the fused-program path) rank
+    identically to a fresh ``packed_cmp_lanes``."""
+    rng = np.random.default_rng(_seed("cfp"))
+    lens = np.sort(rng.integers(0, 9, 70)).astype(np.int32)
+    keys = rng.integers(0, 2**32, (70, 2)).astype(np.uint32)
+    lanes = [jnp.asarray(lens)] + [jnp.asarray(keys[:, l]) for l in range(2)]
+    lanes = _sorted_lanes(lanes)
+    keys2d = jnp.stack(lanes[1:], axis=1)
+    pk = kp.pack_shortlex(lanes[0], keys2d)
+    mv = kp.shortlex_max_values(2)
+    via_precomputed = kp.cmp_from_packed(list(pk.lanes), lanes, mv)
+    fresh = kp.packed_cmp_lanes(lanes, mv)
+    assert len(via_precomputed) == len(fresh)
+    for a, b in zip(via_precomputed, fresh):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sort_lex_packed_engine_matches_lanes():
+    """The ops.sort_lex routing knob: an exact small-range tuple sorts
+    bit-identically through the packed rank-key engine."""
+    rng = np.random.default_rng(_seed("sort-packed"))
+    lanes = [jnp.asarray(rng.integers(0, 13, (3, 40)).astype(np.int32)),
+             jnp.asarray(rng.integers(0, 200, (3, 40)).astype(np.uint32)),
+             jnp.asarray(rng.integers(0, 100, (3, 40)).astype(np.uint32))]
+    mv = (12, 255, 127)
+    from repro.kernels import choose_lex_engine
+    assert choose_lex_engine([a.dtype for a in lanes], mv) == "packed"
+    got = sort_lex(lanes, engine="packed", max_values=mv)
+    want = sort_lex(lanes, engine="lanes")
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_sort_lex_packed_engine_overflow_falls_back():
+    """>2-lane full-width tuples exceed the 2xu32 budget: the packed engine
+    must fall back to the lane-wise path (never sort on a lossy key) and
+    stay bit-identical."""
+    rng = np.random.default_rng(_seed("sort-fallback"))
+    lanes = [jnp.asarray(rng.integers(0, 2**32, (2, 33)).astype(np.uint32))
+             for _ in range(3)]
+    from repro.kernels import choose_lex_engine
+    assert choose_lex_engine([a.dtype for a in lanes],
+                             engine="packed") == "lanes"
+    got = sort_lex(lanes, engine="packed")
+    want = sort_lex(lanes, engine="lanes")
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_sort_lex_float_lanes_stay_lanewise():
+    from repro.kernels import choose_lex_engine
+    assert choose_lex_engine([jnp.float32, jnp.uint32]) == "lanes"
+    assert choose_lex_engine([jnp.float32], engine="packed") == "lanes"
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (slow tier)
+# ---------------------------------------------------------------------------
+
+# equal inner lengths are enforced inside the test (truncate to the min):
+# the hypothesis-compat shim cannot express .filter at module scope
+lane_lists = st.lists(
+    st.lists(st.integers(min_value=-(2**31), max_value=2**31 - 1),
+             min_size=1, max_size=64),
+    min_size=1, max_size=3)
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(lane_lists, lane_lists)
+def test_packed_rank_property(a_ls, b_ls):
+    """Random int32 tuples (any arity 1-3, dup-heavy by construction):
+    packed ranks equal the broadcast oracle and the packed merge is
+    bit-identical to the lane-wise one."""
+    arity = min(len(a_ls), len(b_ls))
+    na = min(len(l) for l in a_ls[:arity])
+    nb = min(len(l) for l in b_ls[:arity])
+    A = _sorted_lanes([jnp.asarray(np.asarray(l[:na], np.int32))
+                       for l in a_ls[:arity]])
+    B = _sorted_lanes([jnp.asarray(np.asarray(l[:nb], np.int32))
+                       for l in b_ls[:arity]])
+    for side, strict in [("left", True), ("right", False)]:
+        got = kp.packed_searchsorted(A, B, side=side)
+        want = lex_rank_count(A, B, strict=strict)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got = kp.merge_take_packed(A, B)
+    want = lex_merge_take(A, B)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))

@@ -1,0 +1,175 @@
+"""The run-merge front-end (``ops.merge_sorted``/``merge_sorted_lex``) and
+the Pallas merge-path run kernel: every engine must produce output
+bit-identical to the lane-wise ``lex_merge_take`` oracle, and the pipeline
+tournament's fast paths must not touch the device. Kernel cases use
+block_size=128 and small runs (interpret-mode compiles per shape)."""
+
+import zlib
+from unittest import mock
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+import repro.pipeline.merge as pipeline_merge
+from repro.kernels import (choose_merge_engine, merge_runs_lex_pallas,
+                           merge_sorted, merge_sorted_lex)
+from repro.kernels.lex import lex_merge_take
+from repro.pipeline import merge_runs, merge_two
+
+ENGINES = ["packed", "kernel", "lanes"]
+
+
+def _seed(*parts):
+    return zlib.crc32("-".join(map(str, parts)).encode())
+
+
+def _sorted_run(rng, n, n_lanes, flavor):
+    if flavor == "dups":
+        draw = lambda: rng.integers(0, 3, n).astype(np.uint32)
+    elif flavor == "sentinel":
+        def draw():
+            x = rng.integers(0, 2**32, n).astype(np.uint32)
+            x[rng.random(n) < 0.3] = np.uint32(0xFFFFFFFF)
+            return x
+    elif flavor == "negatives":
+        draw = lambda: rng.integers(-(2**31), 2**31, n).astype(np.int32)
+    else:
+        draw = lambda: rng.integers(0, 2**32, n).astype(np.uint32)
+    lanes = [draw() for _ in range(n_lanes)]
+    order = np.lexsort(tuple(reversed(lanes)))
+    return [jnp.asarray(a[order]) for a in lanes]
+
+
+# ---------------------------------------------------------------------------
+# engine differential suite
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("flavor", ["random", "dups", "sentinel", "negatives"])
+@pytest.mark.parametrize("n_lanes", [1, 2, 4])
+def test_merge_sorted_lex_bit_identical(engine, flavor, n_lanes):
+    rng = np.random.default_rng(_seed("ms", engine, flavor, n_lanes))
+    for na, nb in [(130, 89), (128, 128), (5, 100), (1, 1)]:
+        A = _sorted_run(rng, na, n_lanes, flavor)
+        B = _sorted_run(rng, nb, n_lanes, flavor)
+        got = merge_sorted_lex(A, B, engine=engine, block_size=128)
+        want = lex_merge_take(A, B)
+        for g, w in zip(got, want):
+            assert g.dtype == w.dtype
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_merge_sorted_lex_empty_runs(engine):
+    a = jnp.asarray(np.sort(np.arange(5).astype(np.int32)))
+    empty = jnp.zeros((0,), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(merge_sorted_lex((a,), (empty,), engine=engine)[0]),
+        np.asarray(a))
+    np.testing.assert_array_equal(
+        np.asarray(merge_sorted_lex((empty,), (a,), engine=engine)[0]),
+        np.asarray(a))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_merge_sorted_key_only(engine):
+    rng = np.random.default_rng(_seed("key", engine))
+    a = np.sort(rng.integers(0, 1000, 140)).astype(np.int32)
+    b = np.sort(rng.integers(0, 1000, 71)).astype(np.int32)
+    got = merge_sorted(jnp.asarray(a), jnp.asarray(b), engine=engine,
+                       block_size=128)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.sort(np.concatenate([a, b])))
+
+
+def test_merge_sorted_validation():
+    a = jnp.zeros((4,), jnp.int32)
+    with pytest.raises(ValueError, match="arity"):
+        merge_sorted_lex((a,), (a, a))
+    with pytest.raises(ValueError, match="1-D"):
+        merge_sorted_lex((jnp.zeros((2, 2), jnp.int32),),
+                         (jnp.zeros((2, 2), jnp.int32),))
+    with pytest.raises(ValueError, match="unknown engine"):
+        choose_merge_engine(10, engine="bogus")
+    with pytest.raises(ValueError, match="power of two"):
+        merge_runs_lex_pallas([a], [a], block=100)
+
+
+def test_runmerge_kernel_total_below_one_block():
+    """total < block: a single grid step, tail masked to sentinel and
+    sliced off."""
+    a = jnp.asarray(np.sort(np.array([3, 9, 9, 40], np.int32)))
+    b = jnp.asarray(np.sort(np.array([1, 9, 50], np.int32)))
+    (got,) = merge_runs_lex_pallas([a], [b], block=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  [1, 3, 9, 9, 9, 40, 50])
+
+
+# ---------------------------------------------------------------------------
+# pipeline tournament fast paths + packed-key reuse
+# ---------------------------------------------------------------------------
+
+def test_merge_runs_empty_list_returns_empty_tuple():
+    assert merge_runs([]) == ()
+
+
+def test_merge_runs_single_run_no_device_work():
+    """One run must short-circuit: no merge primitive, no packing, no
+    device launch — the run comes back as the identical objects."""
+    a = (jnp.asarray([1, 2, 3], jnp.int32), jnp.asarray([4, 5, 6], jnp.uint32))
+    with mock.patch.object(pipeline_merge, "merge_sorted_lex",
+                           side_effect=AssertionError("merge ran")), \
+         mock.patch.object(pipeline_merge, "packed_cmp_lanes",
+                           side_effect=AssertionError("packing ran")):
+        out = merge_runs([a])
+    assert out[0] is a[0] and out[1] is a[1]
+
+
+def test_merge_two_empty_side_no_device_work():
+    """An empty side returns the other run's identical array objects —
+    merge_sorted_lex's fast path fires before any rank/scatter work."""
+    a = (jnp.asarray([1, 2], jnp.int32),)
+    empty = (jnp.zeros((0,), jnp.int32),)
+    assert merge_two(a, empty)[0] is a[0]
+    assert merge_two(empty, a)[0] is a[0]
+
+
+def test_merge_runs_cmp_runs_matches_fresh_packing():
+    """Tournament fed precomputed rank keys (the fused-program handoff)
+    equals the self-packing tournament bit-for-bit."""
+    from repro.kernels.keypack import packed_cmp_lanes
+    rng = np.random.default_rng(_seed("cmp-runs"))
+    runs = [tuple(_sorted_run(rng, n, 3, "dups")) for n in (40, 40, 17)]
+    fresh = merge_runs(runs)
+    handed = merge_runs(runs, cmp_runs=[packed_cmp_lanes(list(r))
+                                        for r in runs])
+    for g, w in zip(handed, fresh):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    flat = np.stack([np.concatenate([np.asarray(l) for l in (r[i] for r in runs)])
+                     for i in range(3)])
+    order = np.lexsort(tuple(reversed(list(flat))))
+    for i, g in enumerate(fresh):
+        np.testing.assert_array_equal(np.asarray(g), flat[i][order])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (slow tier)
+# ---------------------------------------------------------------------------
+
+run_strategy = st.lists(st.integers(min_value=0, max_value=7),
+                        min_size=0, max_size=80)
+
+
+@pytest.mark.slow
+@settings(max_examples=25, deadline=None)
+@given(run_strategy, run_strategy, st.sampled_from(ENGINES))
+def test_merge_sorted_property(a_vals, b_vals, engine):
+    a = jnp.asarray(np.sort(np.asarray(a_vals, np.int32)))
+    b = jnp.asarray(np.sort(np.asarray(b_vals, np.int32)))
+    got = merge_sorted(a, b, engine=engine, block_size=128)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.sort(np.concatenate([np.asarray(a_vals, np.int32),
+                                                 np.asarray(b_vals, np.int32)])))

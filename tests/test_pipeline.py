@@ -99,6 +99,36 @@ def test_bucketize_explicit_capacity_counts_overflow():
         bucketize_packed(keys, capacity=2)
 
 
+@pytest.mark.parametrize("kind", ["random", "skew"])
+def test_bucketize_capacity_autotune_exact(kind):
+    """The two-tier autotune (capacity=None): the optimistic first shot
+    must hold every word on near-uniform inputs, and the skewed case —
+    one length holding most of the words, far past the optimistic cap —
+    must retry at the true max. Either way zero words drop and the tensor
+    equals the host reference's buckets."""
+    rng = np.random.default_rng({"random": 21, "skew": 22}[kind])
+    words = _word_set(kind, 260, rng, max_len=7)
+    keys = jnp.asarray(pack_words(words))
+    bk, counts = bucketize(keys)
+    assert bk.shape[1] >= int(jnp.max(counts))  # no overflow ever
+    host = bucketize_words(words)
+    host_by_len = dict(zip(host.lengths.tolist(), range(len(host.lengths))))
+    for l in range(bk.shape[0]):
+        if l in host_by_len:
+            cnt = int(host.counts[host_by_len[l]])
+            assert int(counts[l]) == cnt
+            np.testing.assert_array_equal(
+                np.asarray(bk)[l, :cnt], host.keys[host_by_len[l], :cnt])
+        else:
+            assert int(counts[l]) == 0
+    if kind == "skew":
+        # the dominant length must exceed the optimistic first-shot cap,
+        # otherwise this case stopped exercising the retry tier
+        from repro.kernels.ops import _optimistic_capacity
+        assert int(jnp.max(counts)) > _optimistic_capacity(len(words),
+                                                           bk.shape[0])
+
+
 def test_host_reference_buckets_by_byte_length():
     """Host and device agree on non-ASCII: both bucket by *encoded byte*
     length (the unit the packed lanes sort by), so 'é' (2 bytes) shares a
@@ -214,6 +244,54 @@ def test_chunked_edge_cases():
     assert chunked_sort_words(["b", "a"], chunk_size=1) == ["a", "b"]
     with pytest.raises(ValueError):
         chunked_sort_words(["a"], chunk_size=0)
+
+
+def test_prefetch_map_orders_and_overlaps():
+    """The packing double-buffer: results come back in order, one per item,
+    and item i+1 runs on the worker thread while the consumer still holds
+    item i (i.e. before the generator is advanced again)."""
+    import time
+
+    from repro.pipeline.ingest import _prefetch_map
+    calls = []
+
+    def fn(x):
+        calls.append(x)
+        return x * 10
+
+    gen = _prefetch_map(fn, [1, 2, 3])
+    first = next(gen)
+    # without advancing the generator, the worker must already be packing
+    # item 2 — that is the whole point of the prefetch
+    deadline = time.monotonic() + 5
+    while len(calls) < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert calls == [1, 2]
+    assert [first] + list(gen) == [10, 20, 30]
+    assert calls == [1, 2, 3]
+    assert list(_prefetch_map(fn, [])) == []
+
+
+def test_chunked_words_runs_carry_packed_rank_keys():
+    """Every per-chunk run ships the fused program's packed shortlex rank
+    keys to the merge tier (no re-pack), and the packed lanes order exactly
+    as the shortlex tuples."""
+    from repro.pipeline import sorted_run
+    rng = np.random.default_rng(23)
+    words = _word_set("random", 60, rng, max_len=7)
+    run = sorted_run(jnp.asarray(pack_words(words)))
+    assert run.packed is not None and len(run.packed) == 2
+    cmp = run.cmp_lanes()
+    assert len(cmp) <= 1 + run.keys.shape[1]
+    # packed lex order must be non-decreasing down the sorted run
+    flat = np.stack([np.asarray(c) for c in cmp])
+    prev, cur = flat[:, :-1], flat[:, 1:]
+    gt = np.zeros(prev.shape[1], bool)
+    eq = np.ones(prev.shape[1], bool)
+    for i in range(flat.shape[0]):
+        gt = gt | (eq & (prev[i] > cur[i]))
+        eq = eq & (prev[i] == cur[i])
+    assert not gt.any()
 
 
 words_strategy = st.lists(
