@@ -1,6 +1,9 @@
 """Fault-tolerant checkpointing: atomic manifest+npy snapshots, keep-N GC,
-async save thread, reshard-on-restore for elastic recovery."""
+async save thread, reshard-on-restore for elastic recovery, and manifest
+metadata readable without loading arrays (sorted-run resume discovery)."""
 
-from .manager import CheckpointManager, latest_step, restore, save
+from .manager import (CheckpointManager, latest_step, list_steps,
+                      read_manifest, restore, save)
 
-__all__ = ["CheckpointManager", "save", "restore", "latest_step"]
+__all__ = ["CheckpointManager", "save", "restore", "latest_step",
+           "list_steps", "read_manifest"]

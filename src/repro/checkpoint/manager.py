@@ -23,7 +23,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager", "save", "restore", "latest_step"]
+__all__ = ["CheckpointManager", "save", "restore", "latest_step",
+           "read_manifest", "list_steps"]
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
@@ -39,8 +40,13 @@ def _leaf_names(tree):
     return names, [l for _, l in paths_leaves]
 
 
-def save(directory: str, step: int, tree: Any) -> str:
-    """Atomic synchronous snapshot. Returns the final path."""
+def save(directory: str, step: int, tree: Any, extra: Any = None) -> str:
+    """Atomic synchronous snapshot. Returns the final path.
+
+    ``extra``: optional JSON-serialisable metadata stored under the
+    manifest's ``"extra"`` key — e.g. the sort pipeline's per-run invariants
+    (``pipeline.manifest.RunManifest``), readable without loading any array
+    via :func:`read_manifest`."""
     names, leaves = _leaf_names(tree)
     tmp = os.path.join(directory, f".tmp_{step}")
     final = os.path.join(directory, f"step_{step}")
@@ -48,6 +54,8 @@ def save(directory: str, step: int, tree: Any) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     manifest = {"step": step, "leaves": []}
+    if extra is not None:
+        manifest["extra"] = extra
     for name, leaf in zip(names, leaves):
         arr = np.asarray(jax.device_get(leaf))
         fname = f"{name}.npy"
@@ -68,6 +76,23 @@ def latest_step(directory: str) -> Optional[int]:
         return None
     steps = [int(m.group(1)) for d in os.listdir(directory) if (m := _STEP_RE.match(d))]
     return max(steps) if steps else None
+
+
+def list_steps(directory: str) -> list:
+    """All completed snapshot steps, ascending (resume discovery for stores
+    that keep many live steps, e.g. one per sorted run)."""
+    if not os.path.isdir(directory):
+        return []
+    return sorted(int(m.group(1)) for d in os.listdir(directory)
+                  if (m := _STEP_RE.match(d)))
+
+
+def read_manifest(directory: str, step: int) -> dict:
+    """The snapshot's manifest (leaf specs + any ``extra`` metadata) without
+    touching the arrays — how a resuming sort job decides which runs are
+    already complete before loading anything."""
+    with open(os.path.join(directory, f"step_{step}", "manifest.json")) as f:
+        return json.load(f)
 
 
 def restore(directory: str, step: int, target: Any, shardings: Any = None) -> Any:
@@ -122,13 +147,13 @@ class CheckpointManager:
         for s in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s}"), ignore_errors=True)
 
-    def save(self, step: int, tree: Any):
+    def save(self, step: int, tree: Any, extra: Any = None):
         self.wait()
         # materialize on host *before* returning so donated buffers are safe
         host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
 
         def work():
-            save(self.directory, step, host_tree)
+            save(self.directory, step, host_tree, extra=extra)
             self._gc()
 
         if self.async_save:

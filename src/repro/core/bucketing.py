@@ -35,6 +35,7 @@ Chunked ingest of inputs larger than one launch lives one layer up in
 from __future__ import annotations
 
 import functools
+import logging
 from dataclasses import dataclass
 
 import jax
@@ -48,6 +49,8 @@ from .oets import oets_sort
 __all__ = ["Buckets", "bucketize_words", "bucketize_packed", "sort_buckets",
            "sorted_packed", "bucketed_sort_words"]
 
+log = logging.getLogger("repro.core")
+
 
 @dataclass
 class Buckets:
@@ -56,28 +59,32 @@ class Buckets:
     keys: np.ndarray        # (num_buckets, capacity, lanes) uint32; sentinel padded
     counts: np.ndarray      # (num_buckets,) int32 — real elements per bucket
     lengths: np.ndarray     # (num_buckets,) int32 — word length of each bucket
+    dropped: int = 0        # elements clipped under on_overflow='clip'
 
 
-def bucketize_packed(keys, capacity: int | None = None) -> Buckets:
+def bucketize_packed(keys, capacity: int | None = None,
+                     on_overflow: str = "raise") -> Buckets:
     """Device counterpart of :func:`bucketize_words`: distribute an already
     packed (n, lanes) uint32 word tensor into the dense per-length bucket
     tensor via ``kernels.ops.bucketize`` (Pallas histogram/rank pass + one
     scatter) — no host per-word loop. Bucket ``l`` holds the words of byte
     length ``l`` in arrival order; ``lengths`` is ``arange(4*lanes+1)``.
-    An explicit ``capacity`` that some bucket exceeds raises ``ValueError``
-    (the host reference's contract)."""
+
+    ``on_overflow`` — the degrade policy when an explicit ``capacity`` is
+    exceeded (``kernels.ops.bucketize`` semantics): ``'raise'`` (default —
+    the host reference's contract; raises ``repro.runtime.CapacityOverflow``,
+    a ``ValueError``), ``'retry'`` (one exact-count re-scatter at the true
+    max, lossless), or ``'clip'`` (keep the static tensor, report the loss
+    in ``Buckets.dropped`` and a warning log)."""
     from ..kernels.ops import bucketize  # lazy: core imports kernels
     keys = jnp.asarray(keys, jnp.uint32)
     if keys.ndim != 2:
         raise ValueError("keys must be (n, lanes) packed words")
-    bucket_keys, counts = bucketize(keys, capacity=capacity)
-    if capacity is not None and keys.shape[0]:
-        over = int(jnp.max(counts))
-        if over > capacity:
-            ln = int(jnp.argmax(counts))
-            raise ValueError(f"bucket for length {ln} exceeds capacity {capacity}")
+    bucket_keys, counts, dropped = bucketize(keys, capacity=capacity,
+                                             on_overflow=on_overflow)
     return Buckets(keys=bucket_keys, counts=counts,
-                   lengths=jnp.arange(bucket_keys.shape[0], dtype=jnp.int32))
+                   lengths=jnp.arange(bucket_keys.shape[0], dtype=jnp.int32),
+                   dropped=dropped)
 
 
 def bucketize_words(words, capacity: int | None = None) -> Buckets:
@@ -184,7 +191,8 @@ def _fused_sort_packed(keys, *, capacity: int, algorithm: str):
 
 
 def sorted_packed(keys, algorithm: str = "pallas",
-                  capacity: int | None = None, return_packed: bool = False):
+                  capacity: int | None = None, return_packed: bool = False,
+                  on_overflow: str = "raise"):
     """Shortlex-sort a packed (n, lanes) uint32 word tensor entirely on
     device: distribute -> segmented in-bucket sort -> compact, zero host
     per-word loops. Returns ``(lengths (n,), sorted_keys (n, lanes))``
@@ -196,9 +204,16 @@ def sorted_packed(keys, algorithm: str = "pallas",
 
     ``capacity``: per-bucket slots for the fused program (static under jit);
     ``None`` sizes it at the histogram max (one extra distribute launch +
-    one scalar sync); a too-small explicit capacity raises ``ValueError``
-    rather than dropping words. The per-chunk producer of the
-    ``repro.pipeline`` sorted-run tier."""
+    one scalar sync). ``on_overflow`` — policy for a too-small explicit
+    capacity: ``'raise'`` (default; ``repro.runtime.CapacityOverflow``, a
+    ``ValueError``), ``'retry'`` (re-run the fused program at the true
+    histogram max — lossless, one extra launch), or ``'clip'`` (drop the
+    overflow: the outputs shrink to the surviving element count, with a
+    warning log). The per-chunk producer of the ``repro.pipeline``
+    sorted-run tier."""
+    from ..runtime.failure import CapacityOverflow
+    if on_overflow not in ("raise", "retry", "clip"):
+        raise ValueError(f"unknown on_overflow policy {on_overflow!r}")
     keys = jnp.asarray(keys, jnp.uint32)
     n = keys.shape[0]
     if n == 0:
@@ -213,9 +228,25 @@ def sorted_packed(keys, algorithm: str = "pallas",
         capacity = max(1, int(jnp.max(counts)))
     flat_lens, flat_keys, counts, packed = _fused_sort_packed(
         keys, capacity=capacity, algorithm=algorithm)
-    if int(jnp.max(counts)) > capacity:
+    true_max = int(jnp.max(counts))
+    if true_max > capacity:
         ln = int(jnp.argmax(counts))
-        raise ValueError(f"bucket for length {ln} exceeds capacity {capacity}")
+        dropped = int(jnp.sum(jnp.maximum(counts - capacity, 0)))
+        if on_overflow == "raise":
+            raise CapacityOverflow(
+                f"bucket for length {ln} exceeds capacity {capacity}",
+                capacity, required=true_max, dropped=dropped)
+        if on_overflow == "retry":
+            log.warning("sorted_packed overflow: capacity %d -> %d "
+                        "(lossless retry of the fused program)",
+                        capacity, true_max)
+            flat_lens, flat_keys, counts, packed = _fused_sort_packed(
+                keys, capacity=true_max, algorithm=algorithm)
+        else:
+            log.warning("sorted_packed overflow: dropping %d element(s) "
+                        "past capacity %d (bucket for length %d needs %d)",
+                        dropped, capacity, ln, true_max)
+            n = n - dropped
     if not return_packed:
         return flat_lens[:n], flat_keys[:n]
     return flat_lens[:n], flat_keys[:n], tuple(p[:n] for p in packed)

@@ -58,6 +58,7 @@ bytes for zero additional latency-bound round trips, the right trade at
 from __future__ import annotations
 
 import functools
+import logging
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -75,6 +76,8 @@ __all__ = [
     "sample_sort", "sample_sort_lex", "sample_sort_exact", "SampleSortResult",
     "distributed_sort", "distributed_sort_kv", "distributed_sort_lex",
 ]
+
+log = logging.getLogger("repro.core")
 
 
 # --------------------------------------------------------------------------
@@ -363,8 +366,12 @@ def sample_sort_exact(lanes, axis_name: str, n_valid: Optional[int] = None,
     device — no extra collective), never from values. Placement ships an
     explicit occupancy flag through the exchange, so receivers select real
     elements per slot without comparing against the sentinel. Returns
-    ``(out_lanes, overflow)``; unfilled slots (input padding) hold the
-    lex-maximal sentinel tuple.
+    ``(out_lanes, overflow, kept)``: ``overflow`` is this device's inbound
+    overflow flag (OR across the axis for the global verdict); ``kept`` is
+    the *global* number of elements that survived capacity clipping
+    (``sum(min(count_matrix, capacity))``, replicated — equals the real
+    element count whenever ``overflow`` is False everywhere). Unfilled
+    slots (input padding) hold the lex-maximal sentinel tuple.
     """
     num = axis_size(axis_name)
     me = lax.axis_index(axis_name)
@@ -375,6 +382,7 @@ def sample_sort_exact(lanes, axis_name: str, n_valid: Optional[int] = None,
 
     # my elements' global ranks: offset of my valid run + local index
     all_counts = jnp.sum(jnp.minimum(count_matrix, cap), axis=0)
+    kept = jnp.sum(all_counts)
     cnt = all_counts[me]
     my_off = (jnp.cumsum(all_counts) - all_counts)[me]
     i = jnp.arange(m)
@@ -398,7 +406,7 @@ def sample_sort_exact(lanes, axis_name: str, n_valid: Optional[int] = None,
     # source; empty slots keep source 0's sentinel fill
     src = jnp.argmax(rocc, axis=0)
     cols = jnp.arange(b)
-    return tuple(r[src, cols] for r in recv), overflow
+    return tuple(r[src, cols] for r in recv), overflow, kept
 
 
 def sample_sort(block, axis_name: str, capacity: int | None = None,
@@ -443,10 +451,14 @@ def _pad_tail(a, npad):
 
 @functools.lru_cache(maxsize=128)
 def _build_host_fn(mesh, axis, eng, merge, local_sort, oversample, n,
-                   dtypes):
+                   dtypes, capacity=None):
     """Jitted host function for one (mesh, config, shape) combination —
     cached so repeated calls (serving admission waves, benchmarks) reuse the
-    compiled executable instead of re-tracing per call."""
+    compiled executable instead of re-tracing per call. Returns
+    ``run(*padded) -> (data_lanes, overflow_flags, kept)``: for the sample
+    engine ``overflow_flags`` is the (P,) per-device inbound overflow vector
+    and ``kept`` the global surviving-element count (replicated); for
+    odd_even — which has no capacity to overflow — both are ``None``."""
     from jax.sharding import PartitionSpec as P
 
     from ..parallel.compat import shard_map_norep
@@ -456,31 +468,41 @@ def _build_host_fn(mesh, axis, eng, merge, local_sort, oversample, n,
     if eng == "odd_even":
         body = functools.partial(odd_even_block_sort_lex, axis_name=axis,
                                  merge=merge, local_sort=local_sort)
+        fn = shard_map_norep(lambda *ls: body(list(ls)), mesh=mesh,
+                             in_specs=spec_in, out_specs=spec_in)
+
+        @jax.jit
+        def run(*padded):
+            # Sorted in place across the axis: padding tuples (all-sentinel,
+            # hence lex-maximal) sort to the global tail, so the leading-n
+            # slice is exact.
+            return tuple(o[:n] for o in fn(*padded)), None, None
     else:
-        def body(ls):
-            out, _ = sample_sort_exact(ls, axis_name=axis, n_valid=n,
-                                       oversample=oversample,
-                                       local_sort=local_sort)
-            return out
+        def body(*ls):
+            out, ovf, kept = sample_sort_exact(
+                list(ls), axis_name=axis, n_valid=n, capacity=capacity,
+                oversample=oversample, local_sort=local_sort)
+            return (*out, ovf[None].astype(jnp.int32), kept[None])
 
-    fn = shard_map_norep(lambda *ls: body(list(ls)), mesh=mesh,
-                         in_specs=spec_in, out_specs=spec_in)
+        fn = shard_map_norep(body, mesh=mesh, in_specs=spec_in,
+                             out_specs=spec_in + (P(axis), P(axis)))
 
-    @jax.jit
-    def run(*padded):
-        # Both engines return exactly placed shards with the padding tuples
-        # (all-sentinel, hence lex-maximal) at the global tail — for
-        # odd_even because they sort there, for sample because the exact
-        # rank placement fills unassigned tail slots with sentinel — so the
-        # leading-n slice is exact.
-        return tuple(o[:n] for o in fn(*padded))
+        @jax.jit
+        def run(*padded):
+            # Exact rank placement puts every surviving element at its
+            # global rank and sentinel-fills unassigned tail slots, so the
+            # leading-n slice is exact whenever nothing overflowed.
+            res = fn(*padded)
+            return (tuple(o[:n] for o in res[:-2]), res[-2], res[-1])
 
     return run
 
 
 def distributed_sort_lex(keys_lanes, mesh, axis: str = "data", vals=None,
                          engine: str = "auto", merge: str = "bitonic",
-                         local_sort="auto", oversample: int = 8):
+                         local_sort="auto", oversample: int = 8,
+                         capacity: int | None = None,
+                         on_overflow: str = "raise", validate: str = "off"):
     """Sort 1-D lex tuples sharded over ``axis`` of ``mesh``. Host-facing.
 
     ``keys_lanes``: sequence of same-shape 1-D arrays, lane 0 most
@@ -488,11 +510,32 @@ def distributed_sort_lex(keys_lanes, mesh, axis: str = "data", vals=None,
     tie-break lane (``kernels.ops.sort_lex`` semantics). ``engine``: 'auto'
     (:func:`choose_engine`), 'odd_even', or 'sample'; ``merge`` applies to
     odd_even only. Any length: non-divisible inputs are sentinel-padded to
-    the next multiple of the axis size and sliced back, and the sample
-    engine's capacity is sized at the worst case so zero elements can be
-    dropped. Returns a tuple of sorted lanes, or ``(lanes, sorted_vals)``
-    when ``vals`` is given.
+    the next multiple of the axis size and sliced back.
+
+    ``capacity`` (sample engine only) bounds the per-source-per-destination
+    exchange bucket; the default ``None`` sizes it at the worst-case block
+    so zero elements can ever be dropped. A smaller explicit capacity
+    shrinks the exchange tensor ``P * capacity``-fold but can overflow on
+    skew; ``on_overflow`` is then the degrade policy:
+      * ``'raise'`` — raise ``repro.runtime.CapacityOverflow``;
+      * ``'retry'`` — double the capacity and re-run until the exchange
+        fits (bounded: the worst-case block size always fits), logging each
+        escalation — the supervisor-friendly lossless policy;
+      * ``'clip'``  — return only the surviving elements (the output
+        shortens to the exchanged count) with a warning log.
+
+    ``validate``: ``'off'`` | ``'cheap'`` (host check that the output is
+    lex-sorted and, on lossless paths, conserves the element count) |
+    ``'full'`` (adds multiset conservation via the order-independent content
+    digest of ``pipeline.validate``) — raises
+    ``pipeline.validate.ValidationError`` on violation.
+
+    Returns a tuple of sorted lanes, or ``(lanes, sorted_vals)`` when
+    ``vals`` is given.
     """
+    from ..runtime.failure import CapacityOverflow
+    if on_overflow not in ("raise", "retry", "clip"):
+        raise ValueError(f"unknown on_overflow policy {on_overflow!r}")
     arrs = list(keys_lanes) + ([vals] if vals is not None else [])
     if not arrs or any(a.ndim != 1 for a in arrs):
         raise ValueError("need 1-D lanes")
@@ -506,13 +549,49 @@ def distributed_sort_lex(keys_lanes, mesh, axis: str = "data", vals=None,
     if eng == "odd_even" and merge == "bitonic" and b & (b - 1):
         merge = "resort"  # bitonic merge needs pow2 blocks; stay exact
     dtypes = tuple(jnp.asarray(a).dtype for a in arrs)
-    if callable(local_sort):  # unhashable config: build uncached
-        run = _build_host_fn.__wrapped__(mesh, axis, eng, merge, local_sort,
-                                         oversample, n, dtypes)
-    else:
-        run = _build_host_fn(mesh, axis, eng, merge, local_sort, oversample,
-                             n, dtypes)
-    out = run(*[_pad_tail(a, npad) for a in arrs])
+    cap = capacity if eng == "sample" else None
+    padded = [_pad_tail(a, npad) for a in arrs]
+    clipped = False
+    while True:
+        if callable(local_sort):  # unhashable config: build uncached
+            run = _build_host_fn.__wrapped__(mesh, axis, eng, merge,
+                                             local_sort, oversample, n,
+                                             dtypes, cap)
+        else:
+            run = _build_host_fn(mesh, axis, eng, merge, local_sort,
+                                 oversample, n, dtypes, cap)
+        out, ovf, kept = run(*padded)
+        if ovf is None or cap is None or not bool(jnp.any(ovf)):
+            break
+        if on_overflow == "raise":
+            # the exchange reports the flag, not the exact need: required
+            # defaults to the always-sufficient worst-case block size
+            raise CapacityOverflow(
+                f"sample-sort exchange overflowed capacity {cap} "
+                f"(block size {b} always fits)", cap, required=b)
+        if on_overflow == "clip":
+            kept_n = int(kept[0])
+            log.warning("sample-sort exchange overflow: clipping %d "
+                        "element(s) past capacity %d", n - kept_n, cap)
+            out = tuple(o[:kept_n] for o in out)
+            clipped = True
+            break
+        new_cap = min(cap * 2, b)
+        log.warning("sample-sort exchange overflow: capacity %d -> %d "
+                    "(retry)", cap, new_cap)
+        cap = new_cap
+    if validate != "off":
+        from ..pipeline.validate import check_lanes_sorted, check_multiset
+        check_lanes_sorted(out, what="distributed_sort_lex output")
+        if not clipped:
+            if out[0].shape[0] != n:
+                from ..pipeline.validate import ValidationError
+                raise ValidationError(
+                    f"distributed_sort_lex lost elements: {out[0].shape[0]}"
+                    f" != {n}")
+            if validate == "full":
+                check_multiset(arrs, out,
+                               what="distributed_sort_lex multiset")
     if vals is None:
         return out
     return out[:-1], out[-1]

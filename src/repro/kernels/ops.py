@@ -65,6 +65,8 @@ should quarantine them first; ``tests/test_ops_dtypes.py`` pins this.
 from __future__ import annotations
 
 import functools
+import logging
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -79,9 +81,12 @@ from .partition_kernel import partition_rows_pallas
 from .runmerge_kernel import DEFAULT_MERGE_BLOCK, merge_runs_lex_pallas
 
 __all__ = ["sort", "sort_kv", "sort_lex", "segmented_sort", "distribute",
-           "bucketize", "choose_plan", "choose_lex_engine",
+           "bucketize", "BucketizeResult", "choose_plan",
+           "choose_lex_engine",
            "merge_sorted", "merge_sorted_lex", "choose_merge_engine",
            "sort_rows", "sort_rows_kv", "sort_rows_lex", "partition_rows"]
+
+log = logging.getLogger("repro.kernels")
 
 _LANES = 128
 _SUBLANES = 8
@@ -414,8 +419,24 @@ def _optimistic_capacity(n: int, num_buckets: int) -> int:
                       _next_pow2(-(-n // 2))))
 
 
+class BucketizeResult(NamedTuple):
+    """Result of :func:`bucketize`. ``buckets``
+    (num_buckets, capacity, lanes) uint32 — bucket ``l`` holds the words of
+    byte length ``l`` in arrival order, unused slots at the sentinel;
+    ``counts`` (num_buckets,) int32 *true* per-bucket counts (never inferred
+    from sentinel compares); ``dropped`` — host int, the number of elements
+    clipped out of the tensor because their bucket exceeded an explicit
+    ``capacity`` under ``on_overflow='clip'`` (0 on every other path).
+    Indexes like the historical ``(buckets, counts)`` pair."""
+
+    buckets: jax.Array
+    counts: jax.Array
+    dropped: int
+
+
 def bucketize(keys, capacity: int | None = None,
-              interpret: bool | None = None):
+              interpret: bool | None = None,
+              on_overflow: str = "clip") -> BucketizeResult:
     """Scatter packed words into the paper's dense per-length bucket tensor
     — ``bucketize_words``'s host dict loop as one kernel pass + one device
     scatter.
@@ -428,14 +449,23 @@ def bucketize(keys, capacity: int | None = None,
     compares — decide whether a single retry at the true max is needed. On
     the happy path the histogram sync overlaps the in-flight scatter instead
     of blocking its launch; only a skewed length distribution pays the
-    second scatter. Returns ``(buckets, counts)``: ``buckets``
-    (num_buckets, capacity, lanes) uint32 with bucket ``l`` holding the
-    words of byte length ``l`` in arrival order and all unused slots at the
-    sentinel; ``counts`` (num_buckets,) int32 *true* counts — when an
-    explicit capacity is exceeded the excess words are dropped from the
-    tensor but still counted, so callers detect overflow by
-    ``counts.max() > capacity`` (the autotune path can never overflow).
+    second scatter. The autotune path can never overflow.
+
+    ``on_overflow`` is the degrade policy when an *explicit* capacity is
+    exceeded — the overflow is never silent:
+      * ``'clip'``  — keep the statically sized tensor, drop the excess
+                      elements from it (true counts still report them), log
+                      a structured warning, and report the loss in
+                      ``BucketizeResult.dropped``;
+      * ``'raise'`` — raise :class:`repro.runtime.CapacityOverflow` carrying
+                      the required capacity, so a supervisor can escalate;
+      * ``'retry'`` — re-scatter once at the exact required capacity (the
+                      true counts are already on hand) and return with
+                      ``dropped == 0``.
     """
+    from ..runtime.failure import CapacityOverflow
+    if on_overflow not in ("clip", "raise", "retry"):
+        raise ValueError(f"unknown on_overflow policy {on_overflow!r}")
     n, lanes = keys.shape
     num_buckets = 4 * lanes + 1
     dest, rank, counts = distribute(keys, interpret=interpret)
@@ -450,10 +480,32 @@ def bucketize(keys, capacity: int | None = None,
                                           capacity=capacity)
             true_max = int(jnp.max(counts))  # syncs after the dispatch above
             if true_max <= capacity:
-                return buckets, counts
+                return BucketizeResult(buckets, counts, 0)
             capacity = true_max
-    return _scatter_to_buckets(keys, dest, rank, num_buckets=num_buckets,
-                               capacity=capacity), counts
+        return BucketizeResult(
+            _scatter_to_buckets(keys, dest, rank, num_buckets=num_buckets,
+                                capacity=capacity), counts, 0)
+    dropped = int(jnp.sum(jnp.maximum(counts - capacity, 0))) if n else 0
+    if dropped:
+        true_max = int(jnp.max(counts))
+        if on_overflow == "raise":
+            raise CapacityOverflow(
+                f"bucketize overflow: largest bucket holds {true_max} and "
+                f"exceeds capacity {capacity} ({dropped} element(s) would "
+                f"drop)", capacity, required=true_max, dropped=dropped)
+        if on_overflow == "retry":
+            log.warning("bucketize overflow: capacity %d -> %d (exact-count "
+                        "retry, %d element(s) would have dropped)",
+                        capacity, true_max, dropped)
+            capacity, dropped = true_max, 0
+        else:
+            log.warning("bucketize overflow: dropping %d element(s) past "
+                        "capacity %d (max bucket holds %d) — pass "
+                        "on_overflow='raise'|'retry' for a lossless policy",
+                        dropped, capacity, true_max)
+    return BucketizeResult(
+        _scatter_to_buckets(keys, dest, rank, num_buckets=num_buckets,
+                            capacity=capacity), counts, dropped)
 
 
 @functools.partial(jax.jit, static_argnames=("num_buckets", "capacity"))

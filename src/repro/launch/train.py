@@ -103,7 +103,10 @@ def train_loop(cfg, steps: int = 20, batch: int = 4, seq: int = 32,
             return 0, (fresh, init_opt_state(fresh))
         return step, (state["params"], state["opt"])
 
-    sup = ElasticSupervisor(ckpt, initial_devices=len(jax.devices()))
+    # single-host: a "failed" device is the restarted process itself, so the
+    # world size never shrinks (restartable recovery, not an elastic shrink)
+    sup = ElasticSupervisor(ckpt, initial_devices=len(jax.devices()),
+                            restartable=True)
     out = sup.run(run_segment, remesh, (params, opt), 0)
     return out[0], losses, sup.events
 

@@ -20,6 +20,12 @@ kernels:
                  that ``data.bucketing`` planning and ``serve.scheduler``
                  admission both consume (one implementation of the paper's
                  phase-1 count, three call sites).
+  ``manifest``   per-run invariant summaries (:class:`RunManifest`) and the
+                 atomic resumable run store (:class:`RunStore`) behind
+                 ``chunked_sort_*(store=...)``.
+  ``validate``   the invariant-validation gate: sortedness, count /
+                 histogram conservation, order-independent content digests
+                 (``validate='off'|'cheap'|'full'``).
 """
 
 from .histogram import (assign_buckets, bucket_of, length_histogram,
@@ -29,6 +35,9 @@ __all__ = [
     "DEFAULT_CHUNK", "SortedRun", "sorted_run",
     "chunked_sort_packed", "chunked_sort_words",
     "merge_runs", "merge_two",
+    "RunManifest", "RunStore",
+    "ValidationError", "multiset_digest", "keys_digest",
+    "check_lanes_sorted", "check_multiset", "check_run", "check_chunked",
     "length_histogram", "assign_buckets", "bucket_of", "quantile_bounds",
 ]
 
@@ -40,6 +49,11 @@ _LAZY = {
     "DEFAULT_CHUNK": "ingest", "SortedRun": "ingest", "sorted_run": "ingest",
     "chunked_sort_packed": "ingest", "chunked_sort_words": "ingest",
     "merge_runs": "merge", "merge_two": "merge",
+    "RunManifest": "manifest", "RunStore": "manifest",
+    "ValidationError": "validate", "multiset_digest": "validate",
+    "keys_digest": "validate", "check_lanes_sorted": "validate",
+    "check_multiset": "validate", "check_run": "validate",
+    "check_chunked": "validate",
 }
 
 

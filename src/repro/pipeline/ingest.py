@@ -29,6 +29,7 @@ cost left was the packing loop itself).
 
 from __future__ import annotations
 
+import logging
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Optional, Tuple
@@ -39,10 +40,16 @@ import numpy as np
 from ..core import packing
 from ..core.bucketing import sorted_packed
 from ..kernels.keypack import cmp_from_packed, packed_cmp_lanes, shortlex_max_values
+from .manifest import RunManifest
 from .merge import merge_runs
+from .validate import check_chunked, keys_digest
 
 __all__ = ["DEFAULT_CHUNK", "SortedRun", "sorted_run",
            "chunked_sort_packed", "chunked_sort_words"]
+
+log = logging.getLogger("repro.pipeline")
+
+_VALIDATE_MODES = ("off", "cheap", "full")
 
 # Chunk size balancing launch count against the fused program's bucket
 # tensor footprint (num_buckets * capacity * lanes uint32 slots; capacity
@@ -83,26 +90,75 @@ class SortedRun:
 
 
 def sorted_run(keys, algorithm: str = "pallas",
-               capacity: int | None = None) -> SortedRun:
+               capacity: int | None = None,
+               on_overflow: str = "raise") -> SortedRun:
     """Sort one packed (n, lanes) chunk on device into a :class:`SortedRun`
     (the per-chunk fused bucketize + segmented-sort launch, rank keys
-    included)."""
+    included). ``on_overflow`` forwards to ``core.bucketing.sorted_packed``
+    ('raise' | 'retry' | 'clip')."""
     lengths, sorted_keys, packed = sorted_packed(
-        keys, algorithm=algorithm, capacity=capacity, return_packed=True)
+        keys, algorithm=algorithm, capacity=capacity, return_packed=True,
+        on_overflow=on_overflow)
     return SortedRun(lengths=lengths, keys=sorted_keys, packed=packed)
 
 
-def _merged_run(runs) -> SortedRun:
+def _run_from_arrays(lengths, keys, packed) -> SortedRun:
+    return SortedRun(
+        lengths=jnp.asarray(lengths), keys=jnp.asarray(keys),
+        packed=tuple(jnp.asarray(p) for p in packed) if packed else None)
+
+
+def _ingest_chunk(chunk, chunk_id: int, *, algorithm: str, capacity,
+                  on_overflow: str, store, supervisor, need_manifest: bool):
+    """Produce one (run, manifest) for a chunk — by resuming it from the
+    store when an intact matching run is already persisted, else by
+    launching the fused per-chunk sort (through the supervisor's
+    ``ingest_chunk`` stage when one is given) and persisting it."""
+    if store is not None:
+        man = store.manifest(chunk_id)
+        if man is not None:
+            # A stored run matches iff it holds the same multiset as the
+            # incoming chunk — the digest is order-independent, so the
+            # *input* chunk digests straight against the *sorted* run's
+            # manifest. A mismatch means the store is stale (same path,
+            # different dataset): recompute instead of merging foreign data.
+            if (man.count == int(chunk.shape[0])
+                    and man.digest == keys_digest(chunk)):
+                return _run_from_arrays(*store.load(chunk_id)), man
+            log.warning(
+                "run store: chunk %d manifest does not match incoming data "
+                "(stale store?) — re-ingesting", chunk_id)
+
+    def launch():
+        return sorted_run(chunk, algorithm=algorithm, capacity=capacity,
+                          on_overflow=on_overflow)
+
+    if supervisor is not None:
+        run = supervisor.run_stage("ingest_chunk", launch)
+    else:
+        run = launch()
+    man = (RunManifest.from_run(run, chunk_id)
+           if (store is not None or need_manifest) else None)
+    if store is not None:
+        store.put(man, run)
+    return run, man
+
+
+def _merged_run(runs, manifests=None, supervisor=None) -> SortedRun:
     if len(runs) == 1:
         return runs[0]
     merged = merge_runs([r.lanes() for r in runs],
-                        cmp_runs=[r.cmp_lanes() for r in runs])
+                        cmp_runs=[r.cmp_lanes() for r in runs],
+                        manifests=manifests, supervisor=supervisor)
     return SortedRun.from_lanes(merged)
 
 
 def chunked_sort_packed(keys, chunk_size: int = DEFAULT_CHUNK,
                         algorithm: str = "pallas",
-                        capacity: int | None = None) -> SortedRun:
+                        capacity: int | None = None,
+                        store=None, supervisor=None,
+                        validate: str = "off",
+                        on_overflow: str = "raise") -> SortedRun:
     """Shortlex-sort a packed (n, lanes) uint32 tensor of any length by
     streaming ``chunk_size`` rows per launch and merging the sorted runs.
 
@@ -111,19 +167,48 @@ def chunked_sort_packed(keys, chunk_size: int = DEFAULT_CHUNK,
     so all full chunks share one compiled executable with no histogram sync;
     pass a smaller value to shrink the bucket tensor when the length
     distribution is known. Returns the full-input :class:`SortedRun`.
+
+    Robustness knobs:
+
+    * ``store`` — a :class:`~repro.pipeline.manifest.RunStore`. Every
+      completed run persists atomically before the next chunk launches, and
+      chunks whose intact runs are already stored are *loaded, not re-sorted*
+      — a killed job resumes from its completed runs.
+    * ``supervisor`` — a ``runtime.SortSupervisor``; chunk launches run as
+      its ``ingest_chunk`` stage and merge rounds as ``merge_round``, with
+      bounded retry on transient :class:`~repro.runtime.sortfault.
+      StageFailure`.
+    * ``validate`` — ``'off' | 'cheap' | 'full'`` invariant gate
+      (``pipeline.validate.check_chunked``): per-run manifest reconciliation
+      + merge count/histogram/sortedness conservation; ``'full'`` adds
+      order-independent content digests.
+    * ``on_overflow`` — bucket-capacity overflow policy for the per-chunk
+      fused program ('raise' | 'retry' | 'clip').
     """
+    if validate not in _VALIDATE_MODES:
+        raise ValueError(f"validate must be one of {_VALIDATE_MODES}")
     keys = jnp.asarray(keys, jnp.uint32)
     n = keys.shape[0]
     if chunk_size < 1:
         raise ValueError("chunk_size must be >= 1")
     if n == 0:
         return SortedRun(lengths=jnp.zeros((0,), jnp.int32), keys=keys)
-    runs = []
-    for start in range(0, n, chunk_size):
+    track = store is not None or validate != "off"
+    runs, manifests = [], []
+    for ci, start in enumerate(range(0, n, chunk_size)):
         chunk = keys[start: start + chunk_size]
         cap = capacity if capacity is not None else int(chunk.shape[0])
-        runs.append(sorted_run(chunk, algorithm=algorithm, capacity=cap))
-    return _merged_run(runs)
+        run, man = _ingest_chunk(
+            chunk, ci, algorithm=algorithm, capacity=cap,
+            on_overflow=on_overflow, store=store, supervisor=supervisor,
+            need_manifest=validate != "off")
+        runs.append(run)
+        manifests.append(man)
+    merged = _merged_run(runs, manifests=manifests if track else None,
+                         supervisor=supervisor)
+    if validate != "off":
+        check_chunked(runs, manifests, merged, mode=validate)
+    return merged
 
 
 def _prefetch_map(fn, items):
@@ -145,13 +230,22 @@ def _prefetch_map(fn, items):
 
 def chunked_sort_words(words, chunk_size: int = DEFAULT_CHUNK,
                        algorithm: str = "pallas",
-                       capacity: int | None = None) -> list:
+                       capacity: int | None = None,
+                       store=None, supervisor=None,
+                       validate: str = "off",
+                       on_overflow: str = "raise") -> list:
     """Words front-end: chunked device sort + packed-rank-key run merge,
     unpack once (egress). Returns the words in shortlex order —
     bit-identical to ``core.bucketed_sort_words`` but with per-launch device
     memory bounded by ``chunk_size``, and with each chunk packed (at the
     global width, so all runs share one lane count) on a worker thread while
-    the previous chunk's fused launch is in flight."""
+    the previous chunk's fused launch is in flight.
+
+    ``store`` / ``supervisor`` / ``validate`` / ``on_overflow`` behave as on
+    :func:`chunked_sort_packed` — persisted-run resume, supervised stage
+    retry, the invariant-validation gate, and the bucket-overflow policy."""
+    if validate not in _VALIDATE_MODES:
+        raise ValueError(f"validate must be one of {_VALIDATE_MODES}")
     words = list(words)
     if not words:
         return []
@@ -160,11 +254,20 @@ def chunked_sort_words(words, chunk_size: int = DEFAULT_CHUNK,
     width = max(packing.byte_length(w) for w in words)
     chunks = [words[i: i + chunk_size]
               for i in range(0, len(words), chunk_size)]
-    runs = []
-    for keys in _prefetch_map(
+    track = store is not None or validate != "off"
+    runs, manifests = [], []
+    for ci, keys in enumerate(_prefetch_map(
             lambda ws: jnp.asarray(packing.pack_words(ws, width=width)),
-            chunks):
+            chunks)):
         cap = capacity if capacity is not None else int(keys.shape[0])
-        runs.append(sorted_run(keys, algorithm=algorithm, capacity=cap))
-    run = _merged_run(runs)
+        run, man = _ingest_chunk(
+            keys, ci, algorithm=algorithm, capacity=cap,
+            on_overflow=on_overflow, store=store, supervisor=supervisor,
+            need_manifest=validate != "off")
+        runs.append(run)
+        manifests.append(man)
+    run = _merged_run(runs, manifests=manifests if track else None,
+                      supervisor=supervisor)
+    if validate != "off":
+        check_chunked(runs, manifests, run, mode=validate)
     return packing.unpack_words(np.asarray(run.keys))

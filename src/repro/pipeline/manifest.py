@@ -1,0 +1,126 @@
+"""Run manifests + resumable run storage for the chunked ingest pipeline.
+
+A multi-minute out-of-core sort is only as trustworthy as its weakest
+chunk: a killed job must resume from the runs it already produced, and the
+merge must be able to prove those runs are intact before combining them.
+Each completed :class:`~repro.pipeline.ingest.SortedRun` therefore gets a
+:class:`RunManifest` — chunk id, exact element count, dense per-length
+histogram, shortlex min/max key, and an order-independent content digest
+(``pipeline/validate.py``) — and optionally persists through
+:class:`RunStore`, which rides ``checkpoint/manager.py``'s atomic
+tmp-then-rename snapshots (a crash mid-write can never leave a torn run;
+the manifest lives in the snapshot's ``extra`` metadata and is readable
+without loading any array).
+
+Resume protocol (``chunked_sort_*(store=...)``): for each chunk, if the
+store holds a manifest whose count **and input digest** match the incoming
+chunk, the stored run is loaded instead of re-ingesting — the digest check
+makes a stale store (same path, different dataset) recompute instead of
+silently merging foreign data. ``pipeline/merge`` then reconciles every
+run's manifest count before any merge round runs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..checkpoint import manager as ckpt
+from .validate import keys_digest, length_histogram_of
+
+__all__ = ["RunManifest", "RunStore"]
+
+
+@dataclass(frozen=True)
+class RunManifest:
+    """Invariant summary of one sorted run — everything the merge and the
+    validation gate need to reconcile the run without rescanning it."""
+
+    chunk_id: int
+    count: int
+    lanes: int                           # uint32 key lanes per word
+    length_histogram: Tuple[int, ...]    # dense per-byte-length counts
+    min_key: Optional[Tuple[int, ...]]   # (length, *lanes) of the first row
+    max_key: Optional[Tuple[int, ...]]   # (length, *lanes) of the last row
+    digest: int                          # order-independent content digest
+
+    @classmethod
+    def from_run(cls, run, chunk_id: int) -> "RunManifest":
+        """Summarise a :class:`~repro.pipeline.ingest.SortedRun` (syncs the
+        run to host once; O(count) host work)."""
+        lengths = np.asarray(run.lengths)
+        keys = np.asarray(run.keys)
+        n, lanes = keys.shape
+        hist = length_histogram_of(lengths, 4 * lanes + 1)
+        row = lambda i: (int(lengths[i]), *(int(v) for v in keys[i]))  # noqa: E731
+        return cls(chunk_id=int(chunk_id), count=int(n), lanes=int(lanes),
+                   length_histogram=tuple(int(c) for c in hist),
+                   min_key=row(0) if n else None,
+                   max_key=row(n - 1) if n else None,
+                   digest=keys_digest(keys))
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "RunManifest":
+        return cls(chunk_id=int(d["chunk_id"]), count=int(d["count"]),
+                   lanes=int(d["lanes"]),
+                   length_histogram=tuple(d["length_histogram"]),
+                   min_key=tuple(d["min_key"]) if d["min_key"] is not None
+                   else None,
+                   max_key=tuple(d["max_key"]) if d["max_key"] is not None
+                   else None,
+                   digest=int(d["digest"]))
+
+
+class RunStore:
+    """Directory of completed sorted runs keyed by chunk id.
+
+    Each run is one ``checkpoint`` snapshot (``step_<chunk_id>/``):
+    ``lengths`` + ``keys`` (+ the packed rank-key lanes the fused program
+    emitted, so a resumed run re-enters the merge without re-packing), with
+    the :class:`RunManifest` in the snapshot's ``extra`` metadata. Writes
+    are atomic (tmp dir + one ``os.replace``), so every manifest the store
+    reports corresponds to a fully landed run — the resume discovery needs
+    no journal."""
+
+    def __init__(self, directory: str):
+        import os
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def completed(self) -> list:
+        """Chunk ids with fully landed runs, ascending."""
+        return ckpt.list_steps(self.directory)
+
+    def manifest(self, chunk_id: int) -> Optional[RunManifest]:
+        if chunk_id not in set(ckpt.list_steps(self.directory)):
+            return None
+        extra = ckpt.read_manifest(self.directory, chunk_id).get("extra")
+        return RunManifest.from_json(extra) if extra is not None else None
+
+    def put(self, manifest: RunManifest, run) -> None:
+        """Persist one completed run (synchronous + atomic: when this
+        returns, the run survives a kill)."""
+        tree = {"lengths": np.asarray(run.lengths),
+                "keys": np.asarray(run.keys)}
+        if run.packed is not None:
+            for i, p in enumerate(run.packed):
+                tree[f"packed{i}"] = np.asarray(p)
+        ckpt.save(self.directory, manifest.chunk_id, tree,
+                  extra=manifest.to_json())
+
+    def load(self, chunk_id: int):
+        """Load a stored run's arrays: ``(lengths, keys, packed_or_None)``
+        (the caller — ``pipeline.ingest`` — rebuilds its ``SortedRun``)."""
+        man = ckpt.read_manifest(self.directory, chunk_id)
+        names = [e["name"] for e in man["leaves"]]
+        target = {e["name"]: np.empty(e["shape"], dtype=e["dtype"])
+                  for e in man["leaves"]}
+        tree = ckpt.restore(self.directory, chunk_id, target)
+        packed_names = sorted(n for n in names if n.startswith("packed"))
+        packed = tuple(tree[n] for n in packed_names) or None
+        return tree["lengths"], tree["keys"], packed

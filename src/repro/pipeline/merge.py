@@ -35,7 +35,8 @@ def merge_two(a_lanes, b_lanes, engine: str = "auto", max_values=None):
                             max_values=max_values)
 
 
-def merge_runs(runs, engine: str = "auto", max_values=None, cmp_runs=None):
+def merge_runs(runs, engine: str = "auto", max_values=None, cmp_runs=None,
+               manifests=None, supervisor=None):
     """Tournament-tree k-way merge: pairwise merge rounds until one run
     remains. ``runs``: list of sorted lex-tuple runs of equal arity; an
     empty list returns ``()`` and a single run is returned as-is — both
@@ -48,8 +49,25 @@ def merge_runs(runs, engine: str = "auto", max_values=None, cmp_runs=None):
     already emitted); ``None`` packs them here via
     ``keypack.packed_cmp_lanes`` with ``max_values``. Either way the compare
     lanes are scattered through every round alongside the data, so no round
-    re-packs."""
+    re-packs.
+
+    ``manifests``: optional parallel list of ``RunManifest``-likes; each
+    run's element count is reconciled against its manifest *before* any
+    round runs, so a truncated/stale run (e.g. loaded from a resume store)
+    fails loudly instead of merging short. ``supervisor``: optional
+    ``runtime.SortSupervisor`` — each merge round executes through
+    ``run_stage('merge_round', ...)``, and because rounds are pure functions
+    of their input runs, a failed round simply re-executes."""
     runs = [tuple(r) for r in runs]
+    if manifests is not None:
+        from .validate import ValidationError
+        if len(manifests) != len(runs):
+            raise ValueError("manifests must parallel runs")
+        for r, m in zip(runs, manifests):
+            if r and int(r[0].shape[0]) != m.count:
+                raise ValidationError(
+                    f"run {m.chunk_id}: {int(r[0].shape[0])} element(s) "
+                    f"but manifest records {m.count} — refusing to merge")
     if not runs:
         return ()
     if len(runs) == 1:
@@ -61,11 +79,18 @@ def merge_runs(runs, engine: str = "auto", max_values=None, cmp_runs=None):
         cmp_runs = [packed_cmp_lanes(list(r), max_values) for r in runs]
     ext = [tuple(c) + r for c, r in zip(cmp_runs, runs)]
     n_cmp = len(ext[0]) - arity
-    while len(ext) > 1:
-        nxt = [merge_sorted_lex(ext[i], ext[i + 1], engine=engine,
+
+    def one_round(ext_rs):
+        nxt = [merge_sorted_lex(ext_rs[i], ext_rs[i + 1], engine=engine,
                                 n_cmp=n_cmp)
-               for i in range(0, len(ext) - 1, 2)]
-        if len(ext) % 2:
-            nxt.append(ext[-1])
-        ext = nxt
+               for i in range(0, len(ext_rs) - 1, 2)]
+        if len(ext_rs) % 2:
+            nxt.append(ext_rs[-1])
+        return nxt
+
+    while len(ext) > 1:
+        if supervisor is None:
+            ext = one_round(ext)
+        else:
+            ext = supervisor.run_stage("merge_round", one_round, ext)
     return ext[0][n_cmp:]

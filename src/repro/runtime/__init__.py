@@ -1,7 +1,27 @@
 """Cluster runtime concerns, testable on one host: elastic failure recovery,
-straggler detection, and simulated failure injection."""
+straggler detection, simulated failure injection, and the sort pipeline's
+stage-level fault supervision (``sortfault``)."""
 
-from .failure import DeviceFailure, ElasticSupervisor, FailureInjector
+from .failure import (CapacityOverflow, DeviceFailure, ElasticSupervisor,
+                      FailureInjector)
 from .straggler import StragglerMonitor
 
-__all__ = ["DeviceFailure", "ElasticSupervisor", "FailureInjector", "StragglerMonitor"]
+__all__ = ["DeviceFailure", "CapacityOverflow", "ElasticSupervisor",
+           "FailureInjector", "StragglerMonitor",
+           "StageFailure", "StageFailureInjector", "RetryPolicy",
+           "StageEvent", "SortSupervisor"]
+
+# ``sortfault``'s supervisor drives the device pipeline, but the module
+# itself is dependency-light; expose it lazily (PEP 562, the
+# ``repro.pipeline`` idiom) so ``kernels``/``core`` can import the failure
+# types above without re-entering this package mid-initialisation.
+_LAZY = {"StageFailure": "sortfault", "StageFailureInjector": "sortfault",
+         "RetryPolicy": "sortfault", "StageEvent": "sortfault",
+         "SortSupervisor": "sortfault"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from importlib import import_module
+        return getattr(import_module(f".{_LAZY[name]}", __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -15,7 +15,8 @@ import dataclasses
 import logging
 from typing import Callable, Optional
 
-__all__ = ["DeviceFailure", "FailureInjector", "ElasticSupervisor"]
+__all__ = ["DeviceFailure", "CapacityOverflow", "FailureInjector",
+           "ElasticSupervisor"]
 
 log = logging.getLogger("repro.runtime")
 
@@ -26,6 +27,21 @@ class DeviceFailure(RuntimeError):
     def __init__(self, msg: str, failed_devices: int = 1):
         super().__init__(msg)
         self.failed_devices = failed_devices
+
+
+class CapacityOverflow(ValueError):
+    """A statically sized buffer (bucket tensor, exchange capacity) received
+    more elements than it holds. Carries enough structure for a supervisor
+    to escalate into a capacity-doubling retry instead of dropping data
+    (``runtime/sortfault.py``); subclasses ``ValueError`` so pre-existing
+    ``except ValueError`` overflow handling keeps working."""
+
+    def __init__(self, msg: str, capacity: int, required: int | None = None,
+                 dropped: int | None = None):
+        super().__init__(msg)
+        self.capacity = capacity
+        self.required = required
+        self.dropped = dropped
 
 
 class FailureInjector:
@@ -56,14 +72,23 @@ class ElasticSupervisor:
     steps until completion or raises DeviceFailure. ``remesh(devices)`` tells
     the caller to rebuild mesh/shardings/jit for the new world size and
     restore ``state`` from the checkpoint manager.
+
+    ``restartable=True`` models single-host (or respawning-scheduler)
+    recovery: a failed device is replaced by the restarted process, so the
+    world size never shrinks — recovery is restore-from-checkpoint only.
+    The default ``False`` is true elastic semantics: survivors only, and
+    dropping below ``min_devices`` raises instead of pretending lost
+    hardware still exists.
     """
 
     def __init__(self, ckpt_manager, initial_devices: int,
-                 min_devices: int = 1, max_recoveries: int = 8):
+                 min_devices: int = 1, max_recoveries: int = 8,
+                 restartable: bool = False):
         self.ckpt = ckpt_manager
         self.devices = initial_devices
         self.min_devices = min_devices
         self.max_recoveries = max_recoveries
+        self.restartable = restartable
         self.events: list[RecoveryEvent] = []
 
     def run(self, run_segment: Callable, remesh: Callable, state, start_step: int = 0):
@@ -77,9 +102,23 @@ class ElasticSupervisor:
                 if recoveries > self.max_recoveries:
                     raise RuntimeError("exceeded max recoveries") from e
                 before = self.devices
-                self.devices = max(self.min_devices, self.devices - e.failed_devices)
-                log.warning("device failure at step %s: %s -> %s devices",
-                            step, before, self.devices)
+                if self.restartable:
+                    # the scheduler respawns the lost device: same world
+                    # size, recovery is restore-from-checkpoint only
+                    log.warning("device failure at step %s: restarting on "
+                                "%s devices", step, self.devices)
+                else:
+                    survivors = self.devices - e.failed_devices
+                    if survivors < self.min_devices:
+                        # pretending min_devices still exist would run work
+                        # on hardware that is gone — fail loudly instead of
+                        # clamping
+                        raise RuntimeError(
+                            f"insufficient surviving devices: {survivors} < "
+                            f"min_devices={self.min_devices}") from e
+                    self.devices = survivors
+                    log.warning("device failure at step %s: %s -> %s devices",
+                                step, before, self.devices)
                 self.ckpt.wait()  # let any in-flight snapshot land
                 restored = remesh(self.devices)
                 if restored is None:

@@ -1,0 +1,216 @@
+"""Stage-level fault injection + supervised recovery for the sort engine.
+
+``runtime/failure.py`` models whole-job elasticity for the *training* loop
+(checkpoint/restart on ``DeviceFailure``). The sort pipeline fails at finer
+granularity — one chunk launch, one collective exchange, one merge round —
+and each stage has a cheaper recovery than a full restart:
+
+  stage             injected fault        recovery
+  ----------------- --------------------- ----------------------------------
+  ingest_chunk      StageFailure          re-launch the chunk (backoff retry)
+  merge_round       StageFailure          re-run the round (rounds are pure)
+  exchange          DeviceFailure         shrink mesh, re-run the sample
+                                          sort on the survivors
+  exchange          CapacityOverflow      double the exchange capacity and
+                                          retry (never drop elements)
+
+:class:`StageFailureInjector` produces those faults deterministically (by
+stage name + occurrence index, each fires exactly once), so tests can kill
+the pipeline mid-flight and assert the recovered output is bit-identical to
+the no-failure oracle. :class:`SortSupervisor` is the recovery driver:
+bounded exponential-backoff retry for transient stage failures,
+``ElasticSupervisor``-style mesh shrink for device loss, and capacity
+doubling for overflow. Every recovery is recorded in ``events`` for
+observability and test bookkeeping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+from .failure import CapacityOverflow, DeviceFailure
+
+__all__ = ["StageFailure", "StageFailureInjector", "RetryPolicy",
+           "StageEvent", "SortSupervisor"]
+
+log = logging.getLogger("repro.runtime")
+
+
+class StageFailure(RuntimeError):
+    """A transient failure of one pipeline stage execution (a failed kernel
+    launch, a lost RPC) — retryable in place, unlike :class:`DeviceFailure`
+    which requires a mesh rebuild."""
+
+    def __init__(self, stage: str, occurrence: int, msg: str | None = None):
+        super().__init__(msg or f"injected {stage} failure "
+                                f"(occurrence {occurrence})")
+        self.stage = stage
+        self.occurrence = occurrence
+
+
+class StageFailureInjector:
+    """Deterministic per-stage failure schedule.
+
+    ``fail_at``: mapping ``stage -> iterable of occurrence indices`` that
+    raise :class:`StageFailure` (transient — a supervisor retries in place).
+    ``device_fail_at``: same shape, raising :class:`DeviceFailure` with
+    ``failed_devices`` lost (a supervisor shrinks the mesh). ``check(stage)``
+    counts every call per stage; each scheduled fault fires exactly once, so
+    the retry of a failed occurrence succeeds — mirroring
+    ``runtime.failure.FailureInjector``'s fire-once contract at stage
+    granularity.
+    """
+
+    def __init__(self, fail_at=None, device_fail_at=None,
+                 failed_devices: int = 1):
+        self.fail_at = {s: set(ix) for s, ix in (fail_at or {}).items()}
+        self.device_fail_at = {s: set(ix)
+                               for s, ix in (device_fail_at or {}).items()}
+        self.failed_devices = failed_devices
+        self.occurrences: dict[str, int] = {}
+        self.fired: list[tuple[str, int, str]] = []
+
+    def check(self, stage: str):
+        idx = self.occurrences.get(stage, 0)
+        self.occurrences[stage] = idx + 1
+        if idx in self.device_fail_at.get(stage, ()):
+            self.device_fail_at[stage].discard(idx)
+            self.fired.append((stage, idx, "device"))
+            raise DeviceFailure(
+                f"injected device failure in {stage} (occurrence {idx})",
+                self.failed_devices)
+        if idx in self.fail_at.get(stage, ()):
+            self.fail_at[stage].discard(idx)
+            self.fired.append((stage, idx, "transient"))
+            raise StageFailure(stage, idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff for transient stage failures. The default
+    base of 0 keeps tests instant; production callers set e.g.
+    ``RetryPolicy(max_retries=5, backoff_base=0.5)`` for 0.5/1/2/4/8 s."""
+
+    max_retries: int = 3
+    backoff_base: float = 0.0
+    backoff_factor: float = 2.0
+
+    def delay(self, attempt: int) -> float:
+        return self.backoff_base * (self.backoff_factor ** (attempt - 1))
+
+
+@dataclasses.dataclass
+class StageEvent:
+    """One recovery action, for observability and test assertions."""
+
+    stage: str
+    attempt: int
+    action: str    # 'retry' | 'remesh' | 'capacity_double'
+    detail: str
+
+
+class SortSupervisor:
+    """Recovery driver for the sort pipeline's stages.
+
+    ``run_stage`` wraps one stage callable with the injector probe and the
+    transient-retry policy; ``run_with_capacity`` escalates overflow into
+    capacity doubling; ``run_distributed`` adds the mesh-shrink path for
+    device loss during the sample-sort exchange. Pass the supervisor to
+    ``pipeline.ingest.chunked_sort_*`` (which routes chunk launches and
+    merge rounds through ``run_stage``) or call ``run_distributed`` around
+    ``core.distributed``.
+    """
+
+    def __init__(self, policy: RetryPolicy = RetryPolicy(),
+                 injector: Optional[StageFailureInjector] = None,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.policy = policy
+        self.injector = injector
+        self.events: list[StageEvent] = []
+        self._sleep = sleep
+
+    # -------------------------------------------------- transient retries
+
+    def run_stage(self, stage: str, fn: Callable, *args, **kwargs):
+        """Execute ``fn(*args, **kwargs)`` with the injector probe and
+        bounded backoff retry on :class:`StageFailure`. ``DeviceFailure``
+        and :class:`CapacityOverflow` are *not* retried here — they need a
+        different recovery (remesh / bigger capacity) and propagate to the
+        caller (``run_distributed`` / ``run_with_capacity``)."""
+        attempt = 0
+        while True:
+            try:
+                if self.injector is not None:
+                    self.injector.check(stage)
+                return fn(*args, **kwargs)
+            except StageFailure as e:
+                attempt += 1
+                if attempt > self.policy.max_retries:
+                    raise
+                delay = self.policy.delay(attempt)
+                log.warning("stage %s failed (attempt %d/%d): %s — retrying"
+                            " in %.3gs", stage, attempt,
+                            self.policy.max_retries, e, delay)
+                self.events.append(StageEvent(stage, attempt, "retry", str(e)))
+                if delay:
+                    self._sleep(delay)
+
+    # -------------------------------------------------- overflow escalation
+
+    def run_with_capacity(self, stage: str, fn: Callable, capacity: int,
+                          max_doublings: int = 8):
+        """Run ``fn(capacity)`` (through the stage retry machinery),
+        doubling ``capacity`` on :class:`CapacityOverflow` — the degrade
+        policy that converges instead of dropping elements. When the
+        overflow reports its true requirement, jump straight there."""
+        for _ in range(max_doublings + 1):
+            try:
+                return self.run_stage(stage, fn, capacity)
+            except CapacityOverflow as e:
+                new_cap = max(capacity * 2, e.required or 0)
+                log.warning("stage %s overflowed capacity %d — retrying at "
+                            "%d", stage, capacity, new_cap)
+                self.events.append(StageEvent(
+                    stage, 0, "capacity_double",
+                    f"capacity {capacity} -> {new_cap}"))
+                capacity = new_cap
+        raise CapacityOverflow(
+            f"stage {stage} still overflowing after {max_doublings} "
+            f"doublings", capacity)
+
+    # -------------------------------------------------- mesh-shrink re-run
+
+    def run_distributed(self, make_mesh: Callable[[int], object],
+                        devices: int, run: Callable, *,
+                        min_devices: int = 1, max_recoveries: int = 8):
+        """Execute ``run(mesh)`` — typically a closure over
+        ``core.distributed.distributed_sort_lex`` — rebuilding a smaller
+        mesh on ``DeviceFailure`` (the ``ElasticSupervisor`` control flow,
+        minus the checkpoint: a sort's input is its own checkpoint, so lost
+        chunks simply re-execute on the survivors). The injector's
+        ``exchange`` stage probes each dispatch."""
+        recoveries = 0
+        while True:
+            try:
+                if self.injector is not None:
+                    self.injector.check("exchange")
+                return run(make_mesh(devices))
+            except DeviceFailure as e:
+                recoveries += 1
+                if recoveries > max_recoveries:
+                    raise RuntimeError("exceeded max recoveries") from e
+                survivors = devices - e.failed_devices
+                if survivors < min_devices:
+                    raise RuntimeError(
+                        f"insufficient surviving devices: {survivors} < "
+                        f"min_devices={min_devices}") from e
+                log.warning("device failure during exchange: %d -> %d "
+                            "devices — re-running on survivors",
+                            devices, survivors)
+                self.events.append(StageEvent(
+                    "exchange", recoveries, "remesh",
+                    f"{devices} -> {survivors} devices"))
+                devices = survivors

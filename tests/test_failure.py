@@ -1,0 +1,258 @@
+"""Failure-handling units: ``ElasticSupervisor`` edge cases,
+``StragglerMonitor`` re-baselining after a durable regime shift, and the
+sort pipeline's stage-level fault machinery (``StageFailureInjector`` /
+``SortSupervisor``) — all host-only, no device work.
+"""
+
+import pytest
+
+from repro.runtime import (CapacityOverflow, DeviceFailure,
+                           ElasticSupervisor, RetryPolicy, SortSupervisor,
+                           StageFailure, StageFailureInjector,
+                           StragglerMonitor)
+
+
+class _FakeCkpt:
+    def wait(self):
+        pass
+
+
+def _remesh_factory(snapshots):
+    """remesh(devices) -> latest (step, state) snapshot, or None."""
+    def remesh(devices):
+        return snapshots[-1] if snapshots else None
+    return remesh
+
+
+# ---------------------------------------------------------------------------
+# ElasticSupervisor edge cases
+# ---------------------------------------------------------------------------
+
+def test_elastic_shrink_below_min_devices_raises():
+    """Losing more devices than min_devices allows must fail loudly (the old
+    clamp silently pretended min_devices still existed)."""
+    sup = ElasticSupervisor(_FakeCkpt(), initial_devices=4, min_devices=3)
+
+    def run_segment(state, step, devices):
+        raise DeviceFailure("two nodes gone", failed_devices=2)
+
+    with pytest.raises(RuntimeError, match="insufficient surviving devices"):
+        sup.run(run_segment, _remesh_factory([(0, {})]), {}, 0)
+    try:
+        sup.run(run_segment, _remesh_factory([(0, {})]), {}, 0)
+    except RuntimeError as e:
+        assert isinstance(e.__cause__, DeviceFailure)  # original chained
+    # devices never mutated to a fictional survivor count
+    assert sup.devices == 4
+    assert sup.events == []
+
+
+def test_elastic_max_recoveries_exhaustion_chains_original():
+    sup = ElasticSupervisor(_FakeCkpt(), initial_devices=16,
+                            max_recoveries=3)
+    calls = []
+
+    def run_segment(state, step, devices):
+        calls.append(devices)
+        raise DeviceFailure(f"flaky at {devices}", failed_devices=1)
+
+    with pytest.raises(RuntimeError, match="exceeded max recoveries") as ei:
+        sup.run(run_segment, _remesh_factory([(0, {})]), {}, 0)
+    assert isinstance(ei.value.__cause__, DeviceFailure)
+    # 1 initial attempt + 3 recoveries, shrinking one device each time
+    assert calls == [16, 15, 14, 13]
+    assert len(sup.events) == 3
+
+
+def test_elastic_recovery_event_bookkeeping():
+    sup = ElasticSupervisor(_FakeCkpt(), initial_devices=8)
+    attempts = []
+
+    def run_segment(state, step, devices):
+        attempts.append((step, devices))
+        if len(attempts) == 1:
+            raise DeviceFailure("one gone", failed_devices=1)
+        if len(attempts) == 2:
+            raise DeviceFailure("two gone", failed_devices=2)
+        return state, step
+
+    final = sup.run(run_segment, _remesh_factory([(5, "S")]), "S0", 0)
+    assert final == ("S", 5)
+    assert [(e.devices_before, e.devices_after) for e in sup.events] == \
+        [(8, 7), (7, 5)]
+    assert all(e.step == 5 for e in sup.events)  # resumed-from step recorded
+    assert attempts == [(0, 8), (5, 7), (5, 5)]
+
+
+def test_elastic_restartable_keeps_world_size():
+    """Single-host / respawning-scheduler mode: the 'lost' device is the
+    restarted process, so recovery restores from checkpoint at the SAME
+    world size instead of shrinking (1 - 1 = 0 would otherwise raise)."""
+    sup = ElasticSupervisor(_FakeCkpt(), initial_devices=1,
+                            restartable=True)
+    attempts = []
+
+    def run_segment(state, step, devices):
+        attempts.append((step, devices))
+        if len(attempts) == 1:
+            raise DeviceFailure("process died", failed_devices=1)
+        return state, step
+
+    out = sup.run(run_segment, _remesh_factory([(7, "S")]), "S0", 0)
+    assert out == ("S", 7)
+    assert attempts == [(0, 1), (7, 1)]  # same world size after recovery
+    assert [(e.devices_before, e.devices_after) for e in sup.events] == \
+        [(1, 1)]
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor re-baselining (frozen-baseline pathology)
+# ---------------------------------------------------------------------------
+
+def test_straggler_rebaseline_after_durable_regime_shift():
+    """Flagged steps never feed the EWMA, so without re-baselining a durable
+    slowdown (migration to slower hardware) is flagged *forever*. After
+    ``rebaseline_after`` consecutive flags the monitor must adopt the new
+    regime and stop flagging it."""
+    mon = StragglerMonitor(threshold=3.0, warmup=5, rebaseline_after=4)
+    for s in range(20):
+        assert mon.record(s, 0.1 + 0.001 * (s % 3)) is False
+    # durable shift: every step is now ~10x slower
+    flags = [mon.record(20 + i, 1.0 + 0.001 * (i % 3)) for i in range(12)]
+    assert flags[:4] == [True, True, True, True]   # streak builds...
+    assert mon.rebaselines == [23]                 # ...then re-baseline
+    assert not any(flags[4:])                      # new regime is the norm
+    assert mon.mean == pytest.approx(1.0, rel=0.05)
+    # a genuine outlier against the NEW baseline still flags
+    assert mon.record(40, 30.0) is True
+
+
+def test_straggler_one_off_does_not_rebaseline():
+    mon = StragglerMonitor(threshold=3.0, warmup=5, rebaseline_after=3)
+    for s in range(15):
+        mon.record(s, 0.1)
+    assert mon.record(15, 5.0) is True    # one-off straggler
+    assert mon.record(16, 0.1) is False   # healthy step resets the streak
+    assert mon.record(17, 5.0) is True
+    assert mon.record(18, 0.1) is False
+    assert mon.rebaselines == []
+    assert mon.mean == pytest.approx(0.1, rel=0.05)  # baseline unpolluted
+
+
+# ---------------------------------------------------------------------------
+# StageFailureInjector
+# ---------------------------------------------------------------------------
+
+def test_injector_fires_once_per_scheduled_occurrence():
+    inj = StageFailureInjector(fail_at={"ingest_chunk": {0, 2}},
+                               device_fail_at={"exchange": {1}},
+                               failed_devices=3)
+    with pytest.raises(StageFailure) as ei:
+        inj.check("ingest_chunk")          # occurrence 0: scheduled
+    assert ei.value.stage == "ingest_chunk" and ei.value.occurrence == 0
+    inj.check("ingest_chunk")              # occurrence 1: clean
+    with pytest.raises(StageFailure):
+        inj.check("ingest_chunk")          # occurrence 2: scheduled
+    inj.check("ingest_chunk")              # occurrence 3: clean
+
+    inj.check("exchange")                  # occurrence 0: clean
+    with pytest.raises(DeviceFailure) as ei:
+        inj.check("exchange")              # occurrence 1: device loss
+    assert ei.value.failed_devices == 3
+    inj.check("exchange")                  # fired faults never repeat
+
+    assert inj.fired == [("ingest_chunk", 0, "transient"),
+                         ("ingest_chunk", 2, "transient"),
+                         ("exchange", 1, "device")]
+    assert inj.occurrences == {"ingest_chunk": 4, "exchange": 3}
+
+
+# ---------------------------------------------------------------------------
+# SortSupervisor
+# ---------------------------------------------------------------------------
+
+def test_run_stage_retries_transient_then_succeeds():
+    inj = StageFailureInjector(fail_at={"merge_round": {0, 1}})
+    sup = SortSupervisor(policy=RetryPolicy(max_retries=3), injector=inj)
+    calls = []
+    out = sup.run_stage("merge_round", lambda: calls.append(1) or "ok")
+    assert out == "ok" and calls == [1]
+    assert [(e.stage, e.action) for e in sup.events] == \
+        [("merge_round", "retry"), ("merge_round", "retry")]
+
+
+def test_run_stage_exhausts_retries():
+    inj = StageFailureInjector(fail_at={"ingest_chunk": {0, 1, 2, 3, 4}})
+    sup = SortSupervisor(policy=RetryPolicy(max_retries=2), injector=inj)
+    with pytest.raises(StageFailure):
+        sup.run_stage("ingest_chunk", lambda: "never")
+    assert len([e for e in sup.events if e.action == "retry"]) == 2
+
+
+def test_run_stage_exponential_backoff_schedule():
+    inj = StageFailureInjector(fail_at={"ingest_chunk": {0, 1, 2}})
+    delays = []
+    sup = SortSupervisor(
+        policy=RetryPolicy(max_retries=3, backoff_base=0.5),
+        injector=inj, sleep=delays.append)
+    assert sup.run_stage("ingest_chunk", lambda: 42) == 42
+    assert delays == [0.5, 1.0, 2.0]
+
+
+def test_run_with_capacity_doubles_to_required():
+    sup = SortSupervisor()
+    attempts = []
+
+    def fn(cap):
+        attempts.append(cap)
+        if cap < 40:
+            raise CapacityOverflow("too small", cap, required=40)
+        return cap
+
+    assert sup.run_with_capacity("ingest_chunk", fn, 4) == 40
+    # jumps straight to the reported requirement, not 4->8->16->32->64
+    assert attempts == [4, 40]
+    assert [e.action for e in sup.events] == ["capacity_double"]
+
+
+def test_run_with_capacity_gives_up_after_max_doublings():
+    sup = SortSupervisor()
+
+    def fn(cap):
+        raise CapacityOverflow("bottomless", cap)
+
+    with pytest.raises(CapacityOverflow, match="still overflowing"):
+        sup.run_with_capacity("ingest_chunk", fn, 1, max_doublings=3)
+
+
+def test_run_distributed_shrinks_on_device_failure():
+    inj = StageFailureInjector(device_fail_at={"exchange": {0}},
+                               failed_devices=2)
+    sup = SortSupervisor(injector=inj)
+    meshes = []
+    out = sup.run_distributed(lambda d: meshes.append(d) or f"mesh{d}",
+                              8, lambda mesh: (mesh, "sorted"))
+    assert out == ("mesh6", "sorted")
+    assert meshes == [6]  # never built the 8-device mesh: probe fired first
+    assert [(e.stage, e.action, e.detail) for e in sup.events] == \
+        [("exchange", "remesh", "8 -> 6 devices")]
+
+
+def test_run_distributed_below_min_devices():
+    inj = StageFailureInjector(device_fail_at={"exchange": {0}},
+                               failed_devices=7)
+    sup = SortSupervisor(injector=inj)
+    with pytest.raises(RuntimeError,
+                       match="insufficient surviving devices") as ei:
+        sup.run_distributed(lambda d: d, 8, lambda mesh: mesh,
+                            min_devices=4)
+    assert isinstance(ei.value.__cause__, DeviceFailure)
+
+
+def test_run_distributed_max_recoveries():
+    inj = StageFailureInjector(device_fail_at={"exchange": {0, 1, 2}})
+    sup = SortSupervisor(injector=inj)
+    with pytest.raises(RuntimeError, match="exceeded max recoveries") as ei:
+        sup.run_distributed(lambda d: d, 8, lambda mesh: mesh,
+                            max_recoveries=2)
+    assert isinstance(ei.value.__cause__, DeviceFailure)

@@ -58,7 +58,7 @@ def test_device_bucketize_matches_host(kind):
     words = _word_set(kind, 300, rng)
     keys = jnp.asarray(pack_words(words))
     host = bucketize_words(words)
-    dev_keys, dev_counts = bucketize(keys)
+    dev_keys, dev_counts, _ = bucketize(keys)
     dev_counts = np.asarray(dev_counts)
     # dense per-length device buckets vs sparse host buckets: same counts,
     # same contents in arrival order, everything else empty
@@ -93,10 +93,40 @@ def test_bucketize_explicit_capacity_counts_overflow():
     """Clipped words drop from the tensor but stay in the true counts (the
     exact-count contract); bucketize_packed raises like the host version."""
     keys = jnp.asarray(pack_words(["aa", "bb", "cc", "d"]))
-    bk, counts = bucketize(keys, capacity=2)
+    bk, counts, dropped = bucketize(keys, capacity=2)
     assert int(counts[2]) == 3 and bk.shape[1] == 2
+    assert dropped == 1  # the clipped word is *reported*, never silent
     with pytest.raises(ValueError, match="exceeds capacity"):
         bucketize_packed(keys, capacity=2)
+
+
+def test_bucketize_skew_overflow_policies():
+    """A skewed dataset (90% of words one length) against a capacity sized
+    for the uniform case: 'clip' must report exactly how many words fell
+    past capacity, 'retry' must converge losslessly at the true max, and
+    'raise' must carry capacity/required/dropped on the exception."""
+    from repro.runtime import CapacityOverflow
+
+    rng = np.random.default_rng(33)
+    words = _word_set("skew", 120, rng, max_len=7)
+    keys = jnp.asarray(pack_words(words))
+    per_len = np.bincount([len(w.encode()) for w in words], minlength=9)
+    cap = 16
+    want_drop = int(np.maximum(per_len - cap, 0).sum())
+    assert want_drop > 0  # the skew really overflows this capacity
+
+    bk, counts, dropped = bucketize(keys, capacity=cap, on_overflow="clip")
+    assert dropped == want_drop
+    np.testing.assert_array_equal(np.asarray(counts), per_len[: counts.shape[0]])
+
+    bk, counts, dropped = bucketize(keys, capacity=cap, on_overflow="retry")
+    assert dropped == 0 and bk.shape[1] == int(per_len.max())
+
+    with pytest.raises(CapacityOverflow) as ei:
+        bucketize(keys, capacity=cap, on_overflow="raise")
+    assert ei.value.capacity == cap
+    assert ei.value.required == int(per_len.max())
+    assert ei.value.dropped == want_drop
 
 
 @pytest.mark.parametrize("kind", ["random", "skew"])
@@ -109,8 +139,9 @@ def test_bucketize_capacity_autotune_exact(kind):
     rng = np.random.default_rng({"random": 21, "skew": 22}[kind])
     words = _word_set(kind, 260, rng, max_len=7)
     keys = jnp.asarray(pack_words(words))
-    bk, counts = bucketize(keys)
+    bk, counts, dropped = bucketize(keys)
     assert bk.shape[1] >= int(jnp.max(counts))  # no overflow ever
+    assert dropped == 0
     host = bucketize_words(words)
     host_by_len = dict(zip(host.lengths.tolist(), range(len(host.lengths))))
     for l in range(bk.shape[0]):

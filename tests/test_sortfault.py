@@ -1,0 +1,371 @@
+"""Fault-injected end-to-end sort paths: every injected failure must
+recover to output *bit-identical* to the no-failure oracle, resume must
+reuse persisted runs instead of re-launching them, and the
+``validate='cheap'|'full'`` gate must catch seeded corruption (a flipped
+element, a dropped run, a double-counted bucket).
+
+Sizes stay small (chunks of 64, words <= 8 bytes): every chunk compiles an
+interpret-mode Pallas program on this CPU container. The mesh-scale paths
+(exchange failure remesh, exchange capacity doubling) ride the 8-fake-device
+subprocess pattern of ``test_distributed_sort.py``.
+"""
+
+import os
+import subprocess
+import sys
+from unittest import mock
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.pipeline.ingest as ingest_mod
+from repro.core.packing import pack_words
+from repro.pipeline import (RunManifest, RunStore, ValidationError,
+                            check_chunked, check_run, chunked_sort_packed,
+                            chunked_sort_words, keys_digest, multiset_digest)
+from repro.pipeline.ingest import SortedRun
+from repro.runtime import (RetryPolicy, SortSupervisor, StageFailure,
+                           StageFailureInjector)
+
+
+def _words(n, seed, max_len=8):
+    rng = np.random.default_rng(seed)
+    alpha = list("abcdefgh")
+    return ["".join(rng.choice(alpha, l))
+            for l in rng.integers(0, max_len + 1, n)]
+
+
+def _shortlex(words):
+    return sorted(words, key=lambda w: (len(w.encode()), w.encode()))
+
+
+def _sup(inj=None, retries=3):
+    return SortSupervisor(policy=RetryPolicy(max_retries=retries),
+                          injector=inj)
+
+
+# ---------------------------------------------------------------------------
+# injected stage failures recover bit-identically
+# ---------------------------------------------------------------------------
+
+def test_chunk_launch_failure_recovers_bit_identical():
+    words = _words(200, 0)
+    oracle = chunked_sort_words(words, chunk_size=64)
+    inj = StageFailureInjector(fail_at={"ingest_chunk": {0, 2}})
+    sup = _sup(inj)
+    out = chunked_sort_words(words, chunk_size=64, supervisor=sup)
+    assert out == oracle == _shortlex(words)
+    assert [f[2] for f in inj.fired] == ["transient", "transient"]
+    assert [e.action for e in sup.events] == ["retry", "retry"]
+
+
+def test_merge_round_failure_recovers_bit_identical():
+    words = _words(300, 1)  # 5 runs -> 3 merge rounds
+    oracle = chunked_sort_words(words, chunk_size=64)
+    inj = StageFailureInjector(fail_at={"merge_round": {0, 1}})
+    sup = _sup(inj)
+    out = chunked_sort_words(words, chunk_size=64, supervisor=sup,
+                             validate="full")
+    assert out == oracle
+    assert ("merge_round", 0, "transient") in inj.fired
+
+
+def test_retries_exhausted_propagates_stage_failure():
+    words = _words(100, 2)
+    inj = StageFailureInjector(fail_at={"ingest_chunk": {0, 1, 2}})
+    sup = _sup(inj, retries=2)
+    with pytest.raises(StageFailure):
+        chunked_sort_words(words, chunk_size=64, supervisor=sup)
+
+
+# ---------------------------------------------------------------------------
+# resume from persisted runs
+# ---------------------------------------------------------------------------
+
+def test_resume_skips_completed_runs(tmp_path):
+    """A job killed after N chunks must re-launch only the missing ones;
+    the resumed output is bit-identical to a clean run."""
+    words = _words(256, 3)  # 4 chunks of 64
+    oracle = chunked_sort_words(words, chunk_size=64)
+
+    # first attempt dies on chunk 2 (retries exhausted immediately)
+    store = RunStore(str(tmp_path))
+    inj = StageFailureInjector(fail_at={"ingest_chunk": {2, 3, 4}})
+    with pytest.raises(StageFailure):
+        chunked_sort_words(words, chunk_size=64, store=store,
+                           supervisor=_sup(inj, retries=2))
+    assert store.completed() == [0, 1]  # chunks 0-1 landed atomically
+
+    # resume: only chunks 2-3 may launch
+    launches = []
+    real = ingest_mod.sorted_run
+
+    def counting(keys, **kw):
+        launches.append(int(keys.shape[0]))
+        return real(keys, **kw)
+
+    with mock.patch.object(ingest_mod, "sorted_run", counting):
+        out = chunked_sort_words(words, chunk_size=64, store=store,
+                                 validate="full")
+    assert out == oracle
+    assert len(launches) == 2  # 0 and 1 loaded from the store
+    assert store.completed() == [0, 1, 2, 3]
+
+    # second resume is pure load: zero launches
+    with mock.patch.object(ingest_mod, "sorted_run", counting):
+        out = chunked_sort_words(words, chunk_size=64, store=store,
+                                 validate="full")
+    assert out == oracle and len(launches) == 2
+
+
+def test_stale_store_recomputes(tmp_path):
+    """A store written by a *different* dataset must not poison the sort:
+    the manifest's content digest cannot match the incoming chunks, so every
+    chunk re-ingests (and the store is overwritten with the right runs)."""
+    store = RunStore(str(tmp_path))
+    chunked_sort_words(_words(128, 4), chunk_size=64, store=store)
+    words = _words(128, 5)  # same shape, different content
+    out = chunked_sort_words(words, chunk_size=64, store=store,
+                             validate="full")
+    assert out == _shortlex(words)
+    # the store now holds the new dataset's runs: resuming uses them
+    launches = []
+    real = ingest_mod.sorted_run
+    with mock.patch.object(ingest_mod, "sorted_run",
+                           lambda k, **kw: launches.append(1) or real(k, **kw)):
+        assert chunked_sort_words(words, chunk_size=64, store=store) == out
+    assert launches == []
+
+
+def test_tampered_stored_run_caught_by_validate(tmp_path):
+    """Flip one bit inside a persisted run's npy: resume happily loads it
+    (the *input* digest still matches the manifest), but the
+    ``validate='full'`` gate must refuse the corrupted run — whichever
+    invariant (sortedness or content digest) trips first."""
+    words = _words(128, 6)
+    store = RunStore(str(tmp_path))
+    chunked_sort_words(words, chunk_size=64, store=store)
+    keys_file = os.path.join(str(tmp_path), "step_1", "keys.npy")
+    keys = np.load(keys_file)
+    keys[3, 0] ^= np.uint32(1 << 7)  # one bit, one element
+    np.save(keys_file, keys)
+    with pytest.raises(ValidationError, match="run 1"):
+        chunked_sort_words(words, chunk_size=64, store=store,
+                           validate="full")
+
+
+# ---------------------------------------------------------------------------
+# the validation gate catches seeded corruption
+# ---------------------------------------------------------------------------
+
+def _runs_and_manifests(words, chunk_size=64):
+    packed = jnp.asarray(pack_words(words))
+    runs = []
+    for ci, start in enumerate(range(0, packed.shape[0], chunk_size)):
+        chunk = packed[start: start + chunk_size]
+        runs.append(ingest_mod.sorted_run(chunk,
+                                          capacity=int(chunk.shape[0])))
+    manifests = [RunManifest.from_run(r, ci) for ci, r in enumerate(runs)]
+    merged = ingest_mod._merged_run(runs)
+    return runs, manifests, merged
+
+
+def test_validate_passes_clean_pipeline():
+    runs, manifests, merged = _runs_and_manifests(_words(192, 7))
+    check_chunked(runs, manifests, merged, mode="full")
+
+
+def test_validate_cheap_catches_dropped_run():
+    runs, manifests, merged = _runs_and_manifests(_words(192, 8))
+    short = ingest_mod._merged_run(runs[:-1])  # one run never merged
+    with pytest.raises(ValidationError, match="lost or duplicated"):
+        check_chunked(runs, manifests, short, mode="cheap")
+
+
+def test_validate_cheap_catches_double_counted_bucket():
+    runs, manifests, merged = _runs_and_manifests(_words(192, 9))
+    dup = SortedRun(  # one element duplicated, as a double-counted slot would
+        lengths=jnp.concatenate([merged.lengths[:1], merged.lengths]),
+        keys=jnp.concatenate([merged.keys[:1], merged.keys]))
+    with pytest.raises(ValidationError, match="lost or duplicated"):
+        check_chunked(runs, manifests, dup, mode="cheap")
+
+
+def test_validate_cheap_catches_unsorted_output():
+    runs, manifests, merged = _runs_and_manifests(_words(192, 10))
+    lengths = np.asarray(merged.lengths).copy()
+    lengths[[0, -1]] = lengths[[-1, 0]]  # swap two rows' length lane
+    keys = np.asarray(merged.keys).copy()
+    keys[[0, -1]] = keys[[-1, 0]]
+    bad = SortedRun(lengths=jnp.asarray(lengths), keys=jnp.asarray(keys))
+    with pytest.raises(ValidationError, match="not sorted"):
+        check_chunked(runs, manifests, bad, mode="cheap")
+
+
+def test_validate_full_catches_flipped_element():
+    """An in-place value flip that keeps count, histogram, and sortedness
+    intact (last element bumped) slides past 'cheap' — the 'full' digest
+    must catch it."""
+    runs, manifests, merged = _runs_and_manifests(_words(192, 11))
+    keys = np.asarray(merged.keys).copy()
+    keys[-1, -1] ^= np.uint32(1)  # still sorted, same lengths
+    bad = SortedRun(lengths=merged.lengths, keys=jnp.asarray(keys))
+    check_chunked(runs, manifests, bad, mode="cheap")  # invisible to cheap
+    with pytest.raises(ValidationError, match="digest"):
+        check_chunked(runs, manifests, bad, mode="full")
+
+
+def test_check_run_catches_histogram_mismatch():
+    runs, manifests, _ = _runs_and_manifests(_words(100, 12))
+    run = runs[0]
+    lengths = np.asarray(run.lengths).copy()
+    victim = int(np.argmax(lengths))
+    lengths[victim] -= 1  # claim one word is a byte shorter
+    bad = SortedRun(lengths=jnp.asarray(lengths), keys=run.keys)
+    with pytest.raises(ValidationError, match="histogram"):
+        check_run(bad, manifests[0], mode="cheap")
+
+
+def test_multiset_digest_is_additive_and_order_independent():
+    rng = np.random.default_rng(13)
+    a = rng.integers(0, 2**32, (50, 3), dtype=np.uint32)
+    b = rng.integers(0, 2**32, (30, 3), dtype=np.uint32)
+    both = np.concatenate([a, b])
+    assert keys_digest(both) == (keys_digest(a) + keys_digest(b)) % (1 << 64)
+    perm = rng.permutation(both.shape[0])
+    assert keys_digest(both[perm]) == keys_digest(both)
+    assert keys_digest(a) != keys_digest(b)
+    assert multiset_digest([]) == 0
+
+
+def test_manifest_json_roundtrip():
+    runs, manifests, _ = _runs_and_manifests(_words(64, 14))
+    m = manifests[0]
+    assert RunManifest.from_json(m.to_json()) == m
+    assert m.count == 64 and sum(m.length_histogram) == 64
+    assert m.min_key is not None and m.min_key <= m.max_key
+
+
+# ---------------------------------------------------------------------------
+# overflow degrade policies on the chunked path
+# ---------------------------------------------------------------------------
+
+def test_chunked_sort_overflow_retry_converges():
+    """A capacity sized far below the skewed chunk's biggest bucket must
+    converge losslessly under on_overflow='retry' — same words out as the
+    uncapped oracle, validation gate green."""
+    rng = np.random.default_rng(15)
+    words = ["".join(rng.choice(list("abcd"), 5)) for _ in range(180)]
+    oracle = chunked_sort_words(words, chunk_size=64)
+    out = chunked_sort_words(words, chunk_size=64, capacity=8,
+                             on_overflow="retry", validate="full")
+    assert out == oracle
+
+    with pytest.raises(ValueError, match="exceeds capacity"):
+        chunked_sort_words(words, chunk_size=64, capacity=8,
+                           on_overflow="raise")
+
+
+def test_chunked_sort_packed_store_resume(tmp_path):
+    """The packed front-end shares the same store/resume machinery."""
+    rng = np.random.default_rng(16)
+    words = _words(150, 17)
+    packed = jnp.asarray(pack_words(words))
+    store = RunStore(str(tmp_path))
+    run1 = chunked_sort_packed(packed, chunk_size=64, store=store,
+                               validate="full")
+    launches = []
+    real = ingest_mod.sorted_run
+    with mock.patch.object(ingest_mod, "sorted_run",
+                           lambda k, **kw: launches.append(1) or real(k, **kw)):
+        run2 = chunked_sort_packed(packed, chunk_size=64, store=store,
+                                   validate="full")
+    assert launches == []
+    np.testing.assert_array_equal(np.asarray(run1.keys),
+                                  np.asarray(run2.keys))
+    np.testing.assert_array_equal(np.asarray(run1.lengths),
+                                  np.asarray(run2.lengths))
+
+
+# ---------------------------------------------------------------------------
+# mesh-scale faults (8 fake devices, subprocess)
+# ---------------------------------------------------------------------------
+
+def _run_multidev(script, timeout=600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_exchange_device_failure_remesh_bit_identical():
+    """An injected device loss during the sample-sort exchange re-runs the
+    whole sort on a smaller mesh; the output must match the oracle."""
+    out = _run_multidev("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.distributed import distributed_sort_lex
+from repro.runtime import SortSupervisor, StageFailureInjector
+
+rng = np.random.default_rng(0)
+a = jnp.asarray(rng.integers(0, 40, 128), jnp.int32)
+b = jnp.asarray(rng.integers(0, 1000, 128), jnp.uint32)
+inj = StageFailureInjector(device_fail_at={"exchange": {0}},
+                           failed_devices=4)
+sup = SortSupervisor(injector=inj)
+
+def make_mesh(n):
+    return Mesh(np.array(jax.devices()[:n]), ("data",))
+
+out = sup.run_distributed(
+    make_mesh, 8,
+    lambda mesh: distributed_sort_lex((a, b), mesh, engine="sample",
+                                      validate="full"))
+order = np.lexsort((np.asarray(b), np.asarray(a)))
+assert np.array_equal(np.asarray(out[0]), np.asarray(a)[order])
+assert np.array_equal(np.asarray(out[1]), np.asarray(b)[order])
+assert [(e.action, e.detail) for e in sup.events] == \\
+    [("remesh", "8 -> 4 devices")]
+print("REMESH_OK")
+""")
+    assert "REMESH_OK" in out
+
+
+def test_exchange_capacity_retry_and_clip():
+    """Skewed keys against a tiny exchange capacity: 'retry' doubles until
+    lossless (bit-identical to the oracle), 'clip' returns the survivors
+    with the loss reported in the shape."""
+    out = _run_multidev("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.distributed import distributed_sort_lex
+from repro.runtime import CapacityOverflow
+
+mesh = Mesh(np.array(jax.devices()), ("data",))
+rng = np.random.default_rng(1)
+a = jnp.zeros(128, jnp.int32)  # total skew: one splitter bucket
+b = jnp.asarray(rng.integers(0, 1000, 128), jnp.uint32)
+
+try:
+    distributed_sort_lex((a, b), mesh, engine="sample", capacity=2,
+                         on_overflow="raise")
+    raise SystemExit("expected CapacityOverflow")
+except CapacityOverflow as e:
+    assert e.capacity == 2
+
+out = distributed_sort_lex((a, b), mesh, engine="sample", capacity=2,
+                           on_overflow="retry", validate="full")
+assert np.array_equal(np.asarray(out[1]), np.sort(np.asarray(b)))
+
+clipped = distributed_sort_lex((a, b), mesh, engine="sample", capacity=2,
+                               on_overflow="clip", validate="cheap")
+assert clipped[0].shape[0] < 128
+print("OVERFLOW_OK")
+""")
+    assert "OVERFLOW_OK" in out
