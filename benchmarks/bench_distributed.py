@@ -21,7 +21,7 @@ import os
 import subprocess
 import sys
 
-from .common import emit
+from .common import emit, rng as bench_rng
 
 _SCRIPT = r"""
 import numpy as np, jax, jax.numpy as jnp
@@ -29,7 +29,7 @@ from benchmarks.common import timeit
 from repro.core.distributed import distributed_sort, distributed_sort_lex
 from repro.parallel.compat import AxisType, mesh_from_devices
 
-rng = np.random.default_rng(0)
+rng = bench_rng("bench_distributed", 0)
 
 def mesh_for(p):
     return mesh_from_devices(np.array(jax.devices()[:p]), ("d",),

@@ -19,7 +19,7 @@ from repro.core.blocksort import default_block_size
 from repro.core.oets import oets_sort
 from repro.kernels import choose_plan, sort, sort_lex, sort_rows
 
-from .common import emit, timeit
+from .common import emit, rng as bench_rng, timeit
 
 # Interpret-mode OETS over a single padded block is O(n) phases of O(n) work;
 # past this it stops being measurable in reasonable wall clock (the point of
@@ -29,7 +29,7 @@ _SWEEP_NS = [1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20]
 
 
 def traced_networks():
-    rng = np.random.default_rng(0)
+    rng = bench_rng("bench_kernels", 0)
     for rows, cols in [(8, 128), (32, 256), (64, 512)]:
         x = jnp.asarray(rng.integers(0, 2**31, (rows, cols)).astype(np.int32))
 
@@ -52,7 +52,7 @@ def traced_networks():
 def blocksort_sweep():
     """Single-block padded OETS vs the hierarchical blocksort engine on 1-D
     inputs up to 2^20, interpret-mode wall clock."""
-    rng = np.random.default_rng(1)
+    rng = bench_rng("bench_kernels", 1)
     for n in _SWEEP_NS:
         x = jnp.asarray(rng.integers(0, 2**31, n).astype(np.int32))
         iters = 3 if n <= (1 << 14) else 1
@@ -79,7 +79,7 @@ def lex_lanes_sweep():
     drawn from a tiny alphabet so the deeper lanes actually break ties.
     cols=128 keeps the interpret-mode compile inside one lane tile — the
     lane-count scaling is the measurement, not the width."""
-    rng = np.random.default_rng(2)
+    rng = bench_rng("bench_kernels", 2)
     rows, cols = 8, 128
     engine = choose_plan(cols)[0]
     for n_lanes in (1, 2, 4, 8):

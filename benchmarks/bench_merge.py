@@ -32,7 +32,7 @@ import numpy as np
 from repro.kernels.lex import lex_merge_take
 from repro.kernels.ops import merge_sorted_lex
 
-from .common import emit, timeit
+from .common import emit, rng as bench_rng, timeit
 
 _TINY = bool(int(os.environ.get("BENCH_MERGE_TINY", "0")))
 
@@ -53,7 +53,7 @@ def _sorted_run(rng, n, n_lanes, hi):
 
 
 def packed_vs_lanes():
-    rng = np.random.default_rng(0)
+    rng = bench_rng("bench_merge", 0)
     for n in _NS:
         for n_lanes in _LANES:
             a = _sorted_run(rng, n, n_lanes, 2**32)
@@ -83,7 +83,7 @@ def packed_vs_lanes():
 
 
 def kernel_vs_jnp_combine():
-    rng = np.random.default_rng(1)
+    rng = bench_rng("bench_merge", 1)
     for n in _NS:
         for n_lanes in ([2] if _TINY else [1, 4]):
             a = _sorted_run(rng, n, n_lanes, 2**32)

@@ -33,7 +33,7 @@ from repro.core.packing import pack_words
 from repro.kernels import bucketize
 from repro.pipeline import chunked_sort_packed
 
-from .common import emit, timeit
+from .common import emit, rng as bench_rng, timeit
 
 _TINY = bool(int(os.environ.get("BENCH_PIPELINE_TINY", "0")))
 
@@ -51,7 +51,7 @@ def _words(n, rng, max_len=11):
 
 
 def host_vs_device_bucketize():
-    rng = np.random.default_rng(0)
+    rng = bench_rng("bench_pipeline", 0)
     for n in _BUCKETIZE_NS:
         words = _words(n, rng)
         keys = jnp.asarray(pack_words(words))
@@ -67,7 +67,7 @@ def host_vs_device_bucketize():
 
 
 def single_launch_vs_chunked():
-    rng = np.random.default_rng(1)
+    rng = bench_rng("bench_pipeline", 1)
     for n, chunk in _CHUNK_CASES:
         words = _words(n, rng, max_len=7)
         keys = jnp.asarray(pack_words(words))

@@ -13,7 +13,7 @@ from repro.models import init_lm
 from repro.parallel.sharding import Rules
 from repro.serve import BucketedScheduler, Engine, Request
 
-from .common import emit
+from .common import emit, rng as bench_rng
 
 
 def main():
@@ -21,7 +21,7 @@ def main():
     params, _ = init_lm(cfg, jax.random.PRNGKey(0))
     engine = Engine(cfg, params, Rules(), max_seq=96)
 
-    rng = np.random.default_rng(0)
+    rng = bench_rng("bench_serving", 0)
     reqs = [Request(i, list(rng.integers(1, cfg.vocab_size, int(l))), max_new=4)
             for i, l in enumerate(rng.choice([4, 8, 12, 24, 48], size=32,
                                              p=[0.3, 0.3, 0.2, 0.15, 0.05]))]

@@ -1,17 +1,50 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities: timing, record emission with execution
+provenance, and the one deterministic seed every module draws from."""
 
 from __future__ import annotations
 
 import time
+import zlib
 
 import jax
+import numpy as np
 
-__all__ = ["timeit", "emit", "RECORDS"]
+__all__ = ["timeit", "emit", "RECORDS", "SEED", "rng", "provenance"]
 
 # Every emit() appends here; benchmarks/run.py drains it into the
 # BENCH_kernels.json trajectory file after each module so regressions are
-# trackable across PRs.
+# trackable across PRs (benchmarks/gate.py is the check).
 RECORDS: list[dict] = []
+
+# The one deterministic seed behind every benchmark draw: trajectory
+# entries are comparable across runs and machines because every module
+# draws identical data. Derive per-site streams with rng(...) — never
+# default_rng() bare.
+SEED = 0
+
+
+def rng(*parts) -> np.random.Generator:
+    """Deterministic per-site generator: ``rng("kernels", "oets", n)``
+    always yields the same stream (crc32, not PYTHONHASHSEED-randomized
+    hash()), independent across call sites."""
+    site = zlib.crc32("-".join(map(str, parts)).encode())
+    return np.random.default_rng((SEED, site))
+
+
+_PROVENANCE: dict | None = None
+
+
+def provenance() -> dict:
+    """The execution-provenance stamp shared by every record this process
+    emits (``repro.kernels.ops.execution_provenance``: backend, device
+    kind, Pallas lowering, mode label, jax version). ``benchmarks/gate.py``
+    only ever compares records whose stamps match — an interpret-cpu number
+    is meaningless against a compiled-tpu baseline."""
+    global _PROVENANCE
+    if _PROVENANCE is None:
+        from repro.kernels.ops import execution_provenance
+        _PROVENANCE = execution_provenance()
+    return _PROVENANCE
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 5, **kw):
@@ -30,7 +63,8 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 5, **kw):
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
-    """CSV row: name,us_per_call,derived (also recorded for run.py's JSON)."""
+    """CSV row: name,us_per_call,derived (also recorded, with the process
+    provenance stamp, for run.py's trajectory JSON)."""
     RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
-                    "derived": derived})
+                    "derived": derived, "provenance": provenance()})
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,155 @@
+"""Perf regression gate over the ``BENCH_kernels.json`` trajectory.
+
+    PYTHONPATH=src python -m benchmarks.gate [--trajectory PATH]
+        [--threshold X] [--allowlist PATH]
+
+The latest trajectory entry is checked against the rest of the history:
+for each record name, the baseline is the *best* (minimum ``us_per_call``)
+prior value whose provenance stamp is compatible — a stamped baseline must
+match the latest record's backend / device kind / Pallas lowering, while
+legacy records predating the stamp are accepted so old history still
+gates. A record regresses when
+
+    us_per_call > threshold * best_prior_us
+
+Name patterns in the allowlist file (fnmatch, ``gate_allowlist.json`` next
+to this module) are reported but never fail the gate; every entry carries
+a reason — e.g. ``distributed/*``: host-emulated collective timings whose
+run-to-run spread reaches ~8x (ROADMAP documents them as untrustworthy for
+absolute numbers). The default threshold also lives in that file so the
+noise policy is reviewed in one place.
+
+Records with no compatible baseline are reported as ``new`` and pass — the
+first stamped run after a provenance change (new backend, new jax) seeds
+fresh baselines instead of comparing apples to oranges.
+
+Exit status: 0 clean, 1 regression (or the latest entry recorded module
+failures), 2 trajectory unusable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_TRAJECTORY = os.path.join(os.path.dirname(_HERE), "BENCH_kernels.json")
+_ALLOWLIST = os.path.join(_HERE, "gate_allowlist.json")
+
+__all__ = ["load_allowlist", "check_latest", "main"]
+
+
+def load_allowlist(path: str = _ALLOWLIST) -> dict:
+    """{'default_threshold': float, 'allow': [{'pattern', 'reason'}, ...]}"""
+    with open(path) as f:
+        allow = json.load(f)
+    assert allow.get("default_threshold", 0) > 1, \
+        "default_threshold must be > 1 (it multiplies the baseline)"
+    for entry in allow.get("allow", []):
+        assert entry.get("pattern") and entry.get("reason"), \
+            f"allowlist entries need pattern AND reason: {entry}"
+    return allow
+
+
+def _prov_key(record: dict) -> tuple:
+    p = record.get("provenance") or {}
+    return (p.get("backend"), p.get("device_kind"), p.get("pallas"))
+
+
+def _compatible(baseline: dict, latest: dict) -> bool:
+    # unstamped legacy baselines gate everything; stamped ones only gate
+    # like-for-like runs
+    if baseline.get("provenance") is None:
+        return True
+    return _prov_key(baseline) == _prov_key(latest)
+
+
+def _allowed(name: str, allow: dict):
+    for entry in allow.get("allow", []):
+        if fnmatch.fnmatch(name, entry["pattern"]):
+            return entry
+    return None
+
+
+def check_latest(history: list, allow: dict,
+                 threshold: float | None = None) -> dict:
+    """Gate history[-1] against history[:-1]. Returns a report dict:
+    {'regressions': [...], 'allowed': [...], 'new': [...], 'checked': int,
+    'failures': [...]} — the gate fails when 'regressions' or 'failures'
+    is non-empty."""
+    if not history:
+        raise ValueError("empty trajectory: nothing to gate")
+    threshold = threshold or allow["default_threshold"]
+    latest, prior = history[-1], history[:-1]
+    baselines: dict = {}
+    for entry in prior:
+        for rec in entry.get("records", []):
+            baselines.setdefault(rec["name"], []).append(rec)
+
+    report = {"regressions": [], "allowed": [], "new": [],
+              "checked": 0, "threshold": threshold,
+              "failures": list(latest.get("failures", []))}
+    for rec in latest.get("records", []):
+        name, us = rec["name"], rec["us_per_call"]
+        if us <= 0:
+            continue
+        compat = [b["us_per_call"] for b in baselines.get(name, [])
+                  if _compatible(b, rec) and b["us_per_call"] > 0]
+        if not compat:
+            report["new"].append(name)
+            continue
+        report["checked"] += 1
+        best = min(compat)
+        ratio = us / best
+        if ratio <= threshold:
+            continue
+        finding = {"name": name, "us_per_call": us, "baseline_us": best,
+                   "ratio": round(ratio, 2)}
+        entry = _allowed(name, allow)
+        if entry:
+            finding["reason"] = entry["reason"]
+            report["allowed"].append(finding)
+        else:
+            report["regressions"].append(finding)
+    return report
+
+
+def _print_report(report: dict) -> None:
+    print(f"gate: {report['checked']} records checked against baselines "
+          f"(threshold {report['threshold']}x), "
+          f"{len(report['new'])} new (no compatible baseline)")
+    for f in report["allowed"]:
+        print(f"  ALLOWED    {f['name']}: {f['us_per_call']} vs "
+              f"{f['baseline_us']} ({f['ratio']}x) — {f['reason']}")
+    for f in report["regressions"]:
+        print(f"  REGRESSION {f['name']}: {f['us_per_call']} vs "
+              f"{f['baseline_us']} ({f['ratio']}x)")
+    if report["failures"]:
+        print(f"  FAILURES   latest entry recorded module failures: "
+              f"{report['failures']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trajectory", default=_TRAJECTORY)
+    ap.add_argument("--allowlist", default=_ALLOWLIST)
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="override the allowlist's default_threshold")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.trajectory) as f:
+            history = json.load(f)
+        allow = load_allowlist(args.allowlist)
+        report = check_latest(history, allow, args.threshold)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"gate: unusable trajectory/allowlist: {e}", file=sys.stderr)
+        return 2
+    _print_report(report)
+    return 1 if report["regressions"] or report["failures"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

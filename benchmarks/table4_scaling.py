@@ -26,11 +26,11 @@ import numpy as np
 
 from repro.core.bucketing import sort_buckets
 
-from .common import emit
+from .common import emit, rng as bench_rng
 
 
 def measured_bucket_parallelism(n_buckets: int = 64, cap: int = 192):
-    rng = np.random.default_rng(0)
+    rng = bench_rng("table4_scaling", 0)
     keys = rng.integers(0, 2**31, (n_buckets, cap, 1), dtype=np.uint32)
     keys = jnp.asarray(keys)
 

@@ -19,16 +19,19 @@ from .lex import lex_gt_lanes, lex_merge_take, lex_rank_count, sentinel_for
 from .merge_kernel import (merge_adjacent_kv_pallas, merge_adjacent_lex_pallas,
                            merge_adjacent_pallas)
 from .ops import (bucketize, choose_lex_engine, choose_merge_engine,
-                  choose_plan, distribute, merge_sorted, merge_sorted_lex,
-                  partition_rows, segmented_sort, sort, sort_kv, sort_lex,
-                  sort_rows, sort_rows_kv, sort_rows_lex)
+                  choose_plan, distribute, execution_provenance,
+                  merge_sorted, merge_sorted_lex, pallas_lowering,
+                  partition_rows, scatter_to_buckets, segmented_sort, sort,
+                  sort_kv, sort_lex, sort_rows, sort_rows_kv, sort_rows_lex)
 from .ref import partition_rows_ref, sort_rows_kv_ref, sort_rows_ref
 from .runmerge_kernel import (DEFAULT_MERGE_BLOCK, merge_runs_lex_pallas,
                               merge_runs_pallas)
 
 __all__ = [
     "sort", "sort_kv", "sort_lex", "segmented_sort", "distribute",
-    "bucketize", "choose_plan", "choose_lex_engine", "choose_merge_engine",
+    "bucketize", "scatter_to_buckets",
+    "pallas_lowering", "execution_provenance",
+    "choose_plan", "choose_lex_engine", "choose_merge_engine",
     "merge_sorted", "merge_sorted_lex",
     "sort_rows", "sort_rows_kv", "sort_rows_lex", "partition_rows",
     "lex_gt_lanes", "lex_merge_take", "lex_rank_count", "sentinel_for",

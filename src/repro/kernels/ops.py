@@ -54,12 +54,18 @@ for ints — including signed, where it is the positive max, never -1 — and
 ``+inf`` for floats). Real elements *equal* to the sentinel still sort
 correctly: key-only outputs are sliced back to the real width, and kv/lex
 payload lanes participate in the compare as final tie-breaks, keeping the
-all-sentinel padding tuple strictly maximal. float32 NaN: the comparator
-networks are swap-based, so the output is always a *permutation* of the
-input, but NaN compares false against everything and never moves — elements
-on opposite sides of a NaN may stay unsorted relative to each other (unlike
-``jnp.sort``, which sinks NaNs to the tail). Callers that may see NaNs
-should quarantine them first; ``tests/test_ops_dtypes.py`` pins this.
+all-sentinel padding tuple strictly maximal. float32 NaN: callers MUST
+quarantine NaNs first. NaN compares false against everything, so elements
+on opposite sides of a NaN stay unsorted relative to each other (unlike
+``jnp.sort``, which sinks NaNs to the tail) — and worse, on the *padded*
+engines (bitonic; blocksort's per-block bitonic) a NaN can strand a padding
+sentinel inside the sliced-back region while a real element is left in the
+padding tail: the output is then not even a permutation of the input
+(``+inf`` values appear, real values vanish). Only ``oets`` preserves the
+element multiset under NaN, because adjacent exchanges never move the inert
+padding suffix left past real data. ``tests/test_ops_dtypes.py`` pins the
+oets permutation contract; ``tests/test_conformance.py`` pins the padded
+data-loss hazard strict-xfail (ROADMAP: NaN-total-order comparator).
 """
 
 from __future__ import annotations
@@ -81,9 +87,10 @@ from .partition_kernel import partition_rows_pallas
 from .runmerge_kernel import DEFAULT_MERGE_BLOCK, merge_runs_lex_pallas
 
 __all__ = ["sort", "sort_kv", "sort_lex", "segmented_sort", "distribute",
-           "bucketize", "BucketizeResult", "choose_plan",
-           "choose_lex_engine",
+           "bucketize", "BucketizeResult", "scatter_to_buckets",
+           "choose_plan", "choose_lex_engine",
            "merge_sorted", "merge_sorted_lex", "choose_merge_engine",
+           "pallas_lowering", "execution_provenance",
            "sort_rows", "sort_rows_kv", "sort_rows_lex", "partition_rows"]
 
 log = logging.getLogger("repro.kernels")
@@ -100,6 +107,36 @@ def _auto_interpret(interpret):
     if interpret is None:
         return jax.default_backend() != "tpu"
     return interpret
+
+
+def pallas_lowering(interpret: bool | None = None) -> str:
+    """How the Pallas kernel bodies of this module execute for a given
+    ``interpret`` request: ``'interpret'`` (the Pallas interpreter, unrolled
+    into the surrounding XLA program — the only option on CPU) or
+    ``'compiled'`` (native Mosaic/Triton lowering on TPU/GPU). ``None``
+    resolves the same auto rule every op front-end uses."""
+    return "interpret" if _auto_interpret(interpret) else "compiled"
+
+
+def execution_provenance(interpret: bool | None = None,
+                         mode: str | None = None) -> dict:
+    """Provenance of a run through these ops on this host: the fields every
+    benchmark record and conformance result is stamped with so numbers are
+    only ever compared like-with-like (``benchmarks/gate.py``,
+    ``repro.testing``). ``mode`` is the caller's execution-mode label (e.g.
+    ``'interpret-cpu'``); when omitted it is derived from the backend and
+    the resolved Pallas lowering."""
+    backend = jax.default_backend()
+    lowering = pallas_lowering(interpret)
+    dev = jax.devices()[0]
+    return {
+        "backend": backend,
+        "device_kind": getattr(dev, "device_kind", "unknown"),
+        "pallas": lowering,
+        "mode": mode or ("interpret-" + backend if lowering == "interpret"
+                         else "compiled-" + backend),
+        "jax": jax.__version__,
+    }
 
 
 # shared with the kernel modules (kernels/lex.py holds the definition so the
@@ -509,7 +546,15 @@ def bucketize(keys, capacity: int | None = None,
 
 
 @functools.partial(jax.jit, static_argnames=("num_buckets", "capacity"))
-def _scatter_to_buckets(keys, dest, rank, *, num_buckets, capacity):
+def scatter_to_buckets(keys, dest, rank, *, num_buckets, capacity):
+    """The traceable core of :func:`bucketize`: one scatter placing word
+    ``i`` at ``buckets[dest[i], rank[i]]``, unused slots at the uint32
+    sentinel, ranks past ``capacity`` dropped into a discard slot. Pure and
+    static-shaped, so it composes under an outer ``jax.jit`` — the
+    compiled-mode path of the conformance kit (``repro.testing``) runs
+    ``distribute`` + this in one program; :func:`bucketize` itself adds the
+    host-synced capacity autotune / overflow policies around it and is
+    therefore *not* traceable."""
     n, lanes = keys.shape
     flat = jnp.full((num_buckets * capacity + 1, lanes),
                     jnp.uint32(0xFFFFFFFF), jnp.uint32)
@@ -517,6 +562,9 @@ def _scatter_to_buckets(keys, dest, rank, *, num_buckets, capacity):
     slot = jnp.where(keep, dest * capacity + rank, num_buckets * capacity)
     return flat.at[slot].set(keys)[: num_buckets * capacity].reshape(
         num_buckets, capacity, lanes)
+
+
+_scatter_to_buckets = scatter_to_buckets
 
 
 def sort_rows(x, algorithm: str = "oets", interpret: bool | None = None):

@@ -1,0 +1,26 @@
+"""Conformance kit: the op-contract registry, adversarial generators, and
+execution-mode axis behind ``tests/test_conformance.py`` — the single
+tier-1 contract surface of the sort engine — plus the per-run provenance
+that ``benchmarks/gate.py`` stamps into ``BENCH_kernels.json``.
+
+The source paper's claim is empirical (one sort, measured across execution
+configurations); this package is the apparatus that keeps every engine in
+this repo *provably* equivalent across those configurations: each op in
+``kernels.ops`` carries a NumPy oracle, a canonical adversarial input set,
+and runs under every execution mode the host offers, bit-identical across
+all of them.
+"""
+
+from .contracts import (CONTRACTS, Case, ConformanceRun, OpContract,
+                        assert_conforms, iter_matrix, run_case)
+from .generators import (ADVERSARIAL, applicable, check_mode, default_n,
+                         fill_elements, make_words, sorted_run_sizes)
+from .modes import ExecutionMode, available_modes, provenance
+
+__all__ = [
+    "CONTRACTS", "Case", "ConformanceRun", "OpContract", "assert_conforms",
+    "iter_matrix", "run_case",
+    "ADVERSARIAL", "applicable", "check_mode", "default_n", "fill_elements",
+    "make_words", "sorted_run_sizes",
+    "ExecutionMode", "available_modes", "provenance",
+]

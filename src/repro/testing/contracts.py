@@ -1,0 +1,561 @@
+"""Op-contract registry: every public engine of ``kernels.ops`` bound to a
+NumPy oracle, the canonical adversarial generator set, and the
+execution-mode axis.
+
+One :class:`OpContract` per front-end op —
+``sort / sort_kv / sort_lex / segmented_sort / merge_sorted /
+merge_sorted_lex / bucketize / distribute`` — declaring:
+
+  * ``engines`` — every engine the op routes between (comparator
+    algorithms for the sorts, merge engines for the merges, the capacity
+    tiers for bucketize); the conformance matrix runs all of them, so "the
+    cost model picked a different engine" can never hide a broken one;
+  * ``generators`` × ``dtypes`` — which adversarial cases apply
+    (``repro.testing.generators``), with per-generator dtype restriction so
+    the sentinel case runs on every sentinel-colliding dtype while cheap
+    structural edges don't multiply the interpret-mode compile budget;
+  * ``build`` / ``oracle`` / ``check`` — deterministic case construction
+    (CRC-seeded, stable across processes), the NumPy reference, and the
+    conformance predicate: bit-identical by default, bit-level multiset
+    for the NaN permutation contract, capacity-parametric for bucketize
+    (the op picks its own autotuned capacity);
+  * ``run`` — executes the op under an :class:`~repro.testing.modes.
+    ExecutionMode`: the mode's Pallas ``interpret`` flag threads through,
+    and ``jit`` modes trace the whole call into one cached compiled
+    program (jitted callables are memoized module-wide — a fresh
+    ``jax.jit`` per test would recompile every case).
+
+``iter_matrix()`` expands the registry into (op, engine, mode, generator,
+dtype) points — the single tier-1 contract surface
+``tests/test_conformance.py`` parametrizes over. ``run_case`` returns the
+outputs together with per-run provenance
+(``kernels.ops.execution_provenance``), the same stamp
+``benchmarks/gate.py`` requires on benchmark records.
+
+Mode support is explicit, not silent: a combination an engine cannot honor
+(e.g. the host-synced capacity-autotune retry tier under ``jit``) is
+reported by ``supports()`` with a reason and surfaces as a *skip* in the
+matrix, never as a quietly-identical re-run.
+"""
+
+from __future__ import annotations
+
+import functools
+import zlib
+from dataclasses import dataclass, field
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.packing import byte_length, pack_words
+from ..kernels import ops
+from ..kernels.lex import sentinel_for
+from .generators import (applicable, check_mode, default_n, fill_elements,
+                         make_words, sorted_run_sizes)
+from .modes import ExecutionMode, provenance
+
+__all__ = ["Case", "OpContract", "ConformanceRun", "CONTRACTS",
+           "iter_matrix", "run_case", "assert_conforms"]
+
+# forced blocksort block so sub-block inputs still exercise the engine and
+# tile_boundary (n=129) genuinely spans two blocks
+_BLOCK = 128
+_WORD_WIDTH = 8          # bytes -> 2 uint32 lanes, num_buckets = 9
+_SEG_SHAPE = (6, 32, 2)  # (buckets, capacity, lanes) of the segmented case
+
+
+def _seed(*parts) -> int:
+    # stable across processes (hash() is PYTHONHASHSEED-randomized)
+    return zlib.crc32("-".join(map(str, parts)).encode())
+
+
+@dataclass(frozen=True)
+class Case:
+    """One conformance input: ``arrays`` feed the op, ``meta`` carries
+    host-side context the oracle needs (word lengths, counts, capacity)."""
+
+    op: str
+    gen: str
+    dtype: str
+    arrays: tuple
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def check(self) -> str:
+        return check_mode(self.gen)
+
+
+class ConformanceRun(NamedTuple):
+    """Outputs of one op execution plus the provenance it ran under."""
+
+    outputs: tuple
+    provenance: dict
+
+
+@dataclass(frozen=True)
+class OpContract:
+    name: str
+    engines: tuple
+    generators: tuple
+    dtypes_for: Callable[[str], tuple]
+    build: Callable[[str, str], Case]
+    run: Callable[[Case, str, ExecutionMode], tuple]
+    oracle: Callable[[Case], tuple]
+    # returns a skip reason, or None when the combination is runnable
+    supports: Callable[[str, ExecutionMode, str], Optional[str]] = \
+        lambda engine, mode, gen: None
+    # override for ops whose conformance is not plain output==oracle
+    check: Optional[Callable[[Case, tuple], None]] = None
+
+
+# --- shared helpers ----------------------------------------------------------
+
+_JIT_CACHE: dict = {}
+
+
+def _maybe_jit(key, fn, jit: bool):
+    """Memoized ``jax.jit`` wrapper: one traced callable per (op, engine,
+    mode) so repeated cases share compile-cache entries."""
+    if not jit:
+        return fn
+    cached = _JIT_CACHE.get(key)
+    if cached is None:
+        cached = _JIT_CACHE[key] = jax.jit(fn)
+    return cached
+
+
+def _np(outs):
+    return tuple(np.asarray(o) for o in outs)
+
+
+def _bits(a: np.ndarray) -> np.ndarray:
+    """Bit-pattern view for order-insensitive multiset compares (NaN-safe)."""
+    return a.view({4: np.uint32, 8: np.uint64, 2: np.uint16, 1: np.uint8}
+                  [a.dtype.itemsize])
+
+
+def _assert_permutation(got, want):
+    """The NaN contract: outputs are a bit-level row-multiset permutation of
+    the inputs (lanes compared as parallel tuples)."""
+    g = np.stack([_bits(np.ascontiguousarray(a)) for a in got])
+    w = np.stack([_bits(np.ascontiguousarray(a)) for a in want])
+    if g.shape != w.shape:
+        raise AssertionError(f"shape changed: {g.shape} != {w.shape}")
+    if g.size:
+        g = g[:, np.lexsort(g[::-1])]
+        w = w[:, np.lexsort(w[::-1])]
+    np.testing.assert_array_equal(g, w)
+
+
+def assert_conforms(contract: OpContract, case: Case, outputs: tuple):
+    """The conformance predicate: contract-custom check, bit-level
+    permutation (NaN cases), or exact equality against the NumPy oracle."""
+    if contract.check is not None:
+        contract.check(case, outputs)
+        return
+    got = _np(outputs)
+    want = _np(contract.oracle(case))
+    assert len(got) == len(want)
+    if case.check == "permutation":
+        _assert_permutation(got, want)
+        return
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype, f"dtype changed: {g.dtype} != {w.dtype}"
+        np.testing.assert_array_equal(g, w)
+
+
+def run_case(contract: OpContract, case: Case, engine: str,
+             mode: ExecutionMode) -> ConformanceRun:
+    """Execute one (case, engine, mode) cell and stamp its provenance."""
+    outputs = contract.run(case, engine, mode)
+    return ConformanceRun(outputs, provenance(mode))
+
+
+# --- sort / sort_kv ----------------------------------------------------------
+
+_SORT_ENGINES = ("oets", "bitonic", "blocksort")
+
+# Padded comparator networks are NOT NaN-safe — discovered by this matrix:
+# a NaN compares false both ways, so a padding sentinel (+inf) can be left
+# stranded inside the sliced-back region while a real element stays in the
+# padding tail — silent data loss, not even a permutation. Only oets honors
+# the permutation contract (adjacent exchanges never move the inert padding
+# suffix left past real data). The hazard itself is pinned strict-xfail by
+# tests/test_conformance.py::test_nan_padding_hazard; ROADMAP tracks the
+# NaN-total-order comparator fix.
+_NAN_UNSAFE_ENGINES = ("bitonic", "blocksort")
+
+
+def _supports_sort(engine: str, mode: ExecutionMode, gen: str):
+    if gen == "nan" and engine in _NAN_UNSAFE_ENGINES:
+        return (f"padded {engine} loses elements under NaN (stranded "
+                "padding sentinels; quarantine NaNs first — hazard pinned "
+                "by test_nan_padding_hazard)")
+    return None
+
+
+def _sort_dtypes(gen: str) -> tuple:
+    return {"random": ("int32", "float32"),
+            "dup_heavy": ("int32", "float32"),
+            "sentinel": ("int32", "uint32", "float32"),
+            "nan": ("float32",)}.get(gen, ("int32",))
+
+
+def _build_sort(gen: str, dtype: str) -> Case:
+    rng = np.random.default_rng(_seed("sort", gen, dtype))
+    x = fill_elements(gen, rng, default_n(gen), dtype)
+    return Case("sort", gen, dtype, (x,))
+
+
+def _run_sort(case: Case, engine: str, mode: ExecutionMode) -> tuple:
+    fn = _maybe_jit(("sort", engine, mode.name),
+                    lambda x: ops.sort(x, algorithm=engine,
+                                       block_size=_BLOCK if engine == "blocksort" else None,
+                                       interpret=mode.interpret), mode.jit)
+    return (fn(jnp.asarray(case.arrays[0])),)
+
+
+def _oracle_sort(case: Case) -> tuple:
+    return (np.sort(case.arrays[0]),) if case.check == "exact" \
+        else (case.arrays[0],)
+
+
+def _build_sort_kv(gen: str, dtype: str) -> Case:
+    rng = np.random.default_rng(_seed("sort_kv", gen, dtype))
+    n = default_n(gen)
+    k = fill_elements(gen, rng, n, dtype)
+    v = rng.permutation(n).astype(np.int32)
+    return Case("sort_kv", gen, dtype, (k, v))
+
+
+def _run_sort_kv(case: Case, engine: str, mode: ExecutionMode) -> tuple:
+    fn = _maybe_jit(("sort_kv", engine, mode.name),
+                    lambda k, v: ops.sort_kv(k, v, algorithm=engine,
+                                             block_size=_BLOCK if engine == "blocksort" else None,
+                                             interpret=mode.interpret),
+                    mode.jit)
+    return fn(jnp.asarray(case.arrays[0]), jnp.asarray(case.arrays[1]))
+
+
+def _oracle_sort_kv(case: Case) -> tuple:
+    k, v = case.arrays
+    if case.check != "exact":
+        return k, v
+    order = np.lexsort((v, k))  # vals are the engines' final tie-break lane
+    return k[order], v[order]
+
+
+# --- sort_lex ----------------------------------------------------------------
+
+# 3-lane tuple with per-lane bounds totalling 2+32+16 = 50 bits: inside the
+# 64-bit rank-key budget with fewer packed (2) than original (3) lanes, so
+# engine='packed' is genuinely honored (a full-width 3-lane uint32 tuple
+# would overflow the budget and silently fall back to 'lanes' — pinned by
+# test_conformance's routing test). Lane 1 stays full-width so the sentinel
+# generator still collides with 0xFFFFFFFF inside the packed path.
+_LEX_MAX_VALUES = (3, None, 0xFFFF)
+
+
+def _build_sort_lex(gen: str, dtype: str) -> Case:
+    rng = np.random.default_rng(_seed("sort_lex", gen, dtype))
+    n = default_n(gen)
+    # tiny lane-0 alphabet so the deeper lanes actually decide the order
+    lanes = (fill_elements("dup_heavy", rng, n, dtype),
+             fill_elements(gen, rng, n, dtype),
+             fill_elements(gen, rng, n, dtype) % np.uint32(0x10000))
+    return Case("sort_lex", gen, dtype, tuple(lanes))
+
+
+def _run_sort_lex(case: Case, engine: str, mode: ExecutionMode) -> tuple:
+    fn = _maybe_jit(("sort_lex", engine, mode.name),
+                    lambda *lanes: ops.sort_lex(list(lanes), engine=engine,
+                                                max_values=_LEX_MAX_VALUES,
+                                                interpret=mode.interpret),
+                    mode.jit)
+    return tuple(fn(*[jnp.asarray(l) for l in case.arrays]))
+
+
+def _lexsort_all(lanes):
+    order = np.lexsort(tuple(reversed([np.asarray(l) for l in lanes])))
+    return tuple(np.asarray(l)[order] for l in lanes)
+
+
+def _oracle_sort_lex(case: Case) -> tuple:
+    return _lexsort_all(case.arrays)
+
+
+# --- segmented_sort ----------------------------------------------------------
+
+def _build_segmented(gen: str, dtype: str) -> Case:
+    rng = np.random.default_rng(_seed("segmented", gen, dtype))
+    nb, cap, lanes = _SEG_SHAPE
+    if gen == "empty":
+        nb, cap = 0, 0
+    elif gen == "singleton":
+        nb, cap = 1, 1
+    elif gen == "tile_boundary":
+        nb, cap = 2, 129
+    keys = fill_elements("random" if gen in ("empty", "singleton",
+                                             "tile_boundary") else gen,
+                         rng, nb * cap * lanes, dtype).reshape(nb, cap, lanes)
+    if gen == "skewed":
+        counts = np.resize([0, cap, 1, cap - 1], nb).astype(np.int32)
+    else:
+        counts = rng.integers(0, cap + 1, nb).astype(np.int32)
+    return Case("segmented_sort", gen, dtype, (keys, counts))
+
+
+def _run_segmented(case: Case, engine: str, mode: ExecutionMode) -> tuple:
+    del engine  # single fused engine; width routes via choose_plan inside
+    fn = _maybe_jit(("segmented_sort", mode.name),
+                    lambda k, c: ops.segmented_sort(k, c,
+                                                    interpret=mode.interpret),
+                    mode.jit)
+    return (fn(jnp.asarray(case.arrays[0]), jnp.asarray(case.arrays[1])),)
+
+
+def _oracle_segmented(case: Case) -> tuple:
+    keys, counts = case.arrays
+    out = np.empty_like(keys)
+    sent = sentinel_for(keys.dtype)
+    for b in range(keys.shape[0]):
+        rows = keys[b].copy()
+        rows[counts[b]:] = sent  # the op masks slots >= count to sentinel
+        order = np.lexsort(tuple(reversed([rows[:, l]
+                                           for l in range(rows.shape[1])])))
+        out[b] = rows[order]
+    return (out,)
+
+
+# --- merge_sorted / merge_sorted_lex ----------------------------------------
+
+_MERGE_ENGINES = ("packed", "kernel", "lanes")
+
+
+def _merge_dtypes(gen: str) -> tuple:
+    return {"random": ("int32", "float32"),
+            "sentinel": ("int32", "uint32")}.get(gen, ("int32",))
+
+
+def _build_merge(gen: str, dtype: str) -> Case:
+    rng = np.random.default_rng(_seed("merge", gen, dtype))
+    na, nb = sorted_run_sizes(gen)
+    a = np.sort(fill_elements(gen, rng, na, dtype))
+    b = np.sort(fill_elements(gen, rng, nb, dtype))
+    return Case("merge_sorted", gen, dtype, (a, b))
+
+
+def _run_merge(case: Case, engine: str, mode: ExecutionMode) -> tuple:
+    fn = _maybe_jit(("merge_sorted", engine, mode.name),
+                    lambda a, b: ops.merge_sorted(a, b, engine=engine,
+                                                  interpret=mode.interpret),
+                    mode.jit)
+    return (fn(jnp.asarray(case.arrays[0]), jnp.asarray(case.arrays[1])),)
+
+
+def _oracle_merge(case: Case) -> tuple:
+    return (np.sort(np.concatenate(case.arrays)),)
+
+
+def _build_merge_lex(gen: str, dtype: str) -> Case:
+    rng = np.random.default_rng(_seed("merge_lex", gen, dtype))
+    na, nb = sorted_run_sizes(gen)
+
+    def run(n):
+        lanes = [fill_elements("dup_heavy", rng, n, dtype),
+                 fill_elements(gen, rng, n, dtype),
+                 np.arange(n, dtype=np.int32)]  # payload = final tie-break
+        return _lexsort_all(lanes)  # runs must be sorted by the full tuple
+
+    return Case("merge_sorted_lex", gen, dtype, (run(na), run(nb)))
+
+
+def _run_merge_lex(case: Case, engine: str, mode: ExecutionMode) -> tuple:
+    a_lanes, b_lanes = case.arrays
+    n_arr = len(a_lanes)
+    fn = _maybe_jit(("merge_sorted_lex", engine, mode.name),
+                    lambda *arrs: tuple(ops.merge_sorted_lex(
+                        arrs[:n_arr], arrs[n_arr:], engine=engine,
+                        interpret=mode.interpret)), mode.jit)
+    return tuple(fn(*[jnp.asarray(x) for x in a_lanes + b_lanes]))
+
+
+def _oracle_merge_lex(case: Case) -> tuple:
+    a_lanes, b_lanes = case.arrays
+    return _lexsort_all([np.concatenate([a, b])
+                         for a, b in zip(a_lanes, b_lanes)])
+
+
+# --- distribute / bucketize --------------------------------------------------
+
+def _build_words(op: str, gen: str, dtype: str) -> Case:
+    rng = np.random.default_rng(_seed(op, gen, dtype))
+    words = make_words(gen, rng, max_len=_WORD_WIDTH)
+    keys = pack_words(words, width=_WORD_WIDTH)
+    lengths = np.array([byte_length(w) for w in words], np.int32)
+    num_buckets = 4 * keys.shape[1] + 1
+    # the stable-rank oracle: arrival order within each length bucket
+    rank = np.zeros(len(words), np.int32)
+    seen: dict = {}
+    for i, l in enumerate(lengths):
+        rank[i] = seen.get(int(l), 0)
+        seen[int(l)] = rank[i] + 1
+    counts = np.bincount(lengths, minlength=num_buckets).astype(np.int32) \
+        if len(words) else np.zeros(num_buckets, np.int32)
+    return Case(op, gen, dtype, (keys,),
+                meta={"lengths": lengths, "rank": rank, "counts": counts,
+                      "num_buckets": num_buckets})
+
+
+def _run_distribute(case: Case, engine: str, mode: ExecutionMode) -> tuple:
+    del engine
+    fn = _maybe_jit(("distribute", mode.name),
+                    lambda k: ops.distribute(k, interpret=mode.interpret),
+                    mode.jit)
+    return tuple(fn(jnp.asarray(case.arrays[0])))
+
+
+def _oracle_distribute(case: Case) -> tuple:
+    return (case.meta["lengths"], case.meta["rank"], case.meta["counts"])
+
+
+def _expected_buckets(case: Case, capacity: int) -> np.ndarray:
+    """The bucket tensor at an arbitrary capacity (the op autotunes its
+    own): word i lands at [dest, rank] when rank < capacity, sentinel
+    elsewhere — the documented clip semantics of ``scatter_to_buckets``."""
+    keys = case.arrays[0]
+    nb = case.meta["num_buckets"]
+    out = np.full((nb, capacity, keys.shape[1]), np.uint32(0xFFFFFFFF),
+                  np.uint32)
+    for i in range(keys.shape[0]):
+        r = case.meta["rank"][i]
+        if r < capacity:
+            out[case.meta["lengths"][i], r] = keys[i]
+    return out
+
+
+def _run_bucketize(case: Case, engine: str, mode: ExecutionMode) -> tuple:
+    keys = jnp.asarray(case.arrays[0])
+    nb = case.meta["num_buckets"]
+    counts = case.meta["counts"]
+    cap = int(counts.max()) if counts.size and counts.max() else 0
+    if not mode.jit:
+        res = ops.bucketize(keys,
+                            capacity=None if engine == "autotune" else cap,
+                            interpret=mode.interpret)
+        assert res.dropped == 0
+        return res.buckets, res.counts
+    # compiled mode: the traceable tier — distribute + one static-capacity
+    # scatter in a single program (exactly what core.bucketing.sorted_packed
+    # fuses). autotune's compiled tier is the optimistic first-shot
+    # capacity; its host-synced exact-count retry is eager-only by design.
+    if engine == "autotune":
+        cap = ops._optimistic_capacity(int(keys.shape[0]), nb) \
+            if keys.shape[0] else 0
+
+    def program(k):
+        dest, rank, cnt = ops.distribute(k, interpret=mode.interpret)
+        return ops.scatter_to_buckets(k, dest, rank, num_buckets=nb,
+                                      capacity=cap), cnt
+
+    fn = _maybe_jit(("bucketize", engine, mode.name, cap), program, True)
+    return tuple(fn(keys))
+
+
+def _check_bucketize(case: Case, outputs: tuple):
+    buckets, counts = _np(outputs[:2])
+    capacity = buckets.shape[1]
+    np.testing.assert_array_equal(buckets,
+                                  _expected_buckets(case, capacity))
+    np.testing.assert_array_equal(counts, case.meta["counts"])
+
+
+# --- registry ----------------------------------------------------------------
+
+def _const_dtypes(*dts):
+    return lambda gen: dts
+
+
+_NO_NAN = tuple(g for g in ("random", "dup_heavy", "sentinel", "skewed",
+                            "empty", "singleton", "tile_boundary"))
+_WORD_GENS = _NO_NAN  # word cases: nan is meaningless for packed bytes
+
+CONTRACTS: dict = {}
+
+
+def _register(c: OpContract):
+    CONTRACTS[c.name] = c
+
+
+_register(OpContract(
+    name="sort", engines=_SORT_ENGINES,
+    generators=("random", "dup_heavy", "sentinel", "nan", "skewed",
+                "empty", "singleton", "tile_boundary"),
+    dtypes_for=_sort_dtypes, build=_build_sort, run=_run_sort,
+    oracle=_oracle_sort, supports=_supports_sort))
+
+_register(OpContract(
+    name="sort_kv", engines=_SORT_ENGINES,
+    generators=("random", "dup_heavy", "sentinel", "nan", "singleton"),
+    dtypes_for=lambda gen: ("float32",) if gen == "nan" else ("int32",),
+    build=_build_sort_kv, run=_run_sort_kv, oracle=_oracle_sort_kv,
+    supports=_supports_sort))
+
+_register(OpContract(
+    name="sort_lex", engines=("lanes", "packed"),
+    generators=_NO_NAN,
+    dtypes_for=_const_dtypes("uint32"),
+    build=_build_sort_lex, run=_run_sort_lex, oracle=_oracle_sort_lex))
+
+_register(OpContract(
+    name="segmented_sort", engines=("fused",),
+    generators=_NO_NAN,
+    dtypes_for=_const_dtypes("uint32"),
+    build=_build_segmented, run=_run_segmented, oracle=_oracle_segmented))
+
+_register(OpContract(
+    name="merge_sorted", engines=_MERGE_ENGINES,
+    generators=_NO_NAN,
+    dtypes_for=_merge_dtypes, build=_build_merge, run=_run_merge,
+    oracle=_oracle_merge))
+
+_register(OpContract(
+    name="merge_sorted_lex", engines=_MERGE_ENGINES,
+    generators=_NO_NAN,
+    dtypes_for=_const_dtypes("uint32"),
+    build=_build_merge_lex, run=_run_merge_lex, oracle=_oracle_merge_lex))
+
+_register(OpContract(
+    name="distribute", engines=("kernel",),
+    generators=_WORD_GENS,
+    dtypes_for=_const_dtypes("uint32"),
+    build=functools.partial(_build_words, "distribute"),
+    run=_run_distribute, oracle=_oracle_distribute))
+
+_register(OpContract(
+    name="bucketize", engines=("autotune", "explicit"),
+    generators=_WORD_GENS,
+    dtypes_for=_const_dtypes("uint32"),
+    build=functools.partial(_build_words, "bucketize"),
+    run=_run_bucketize, oracle=lambda case: (),
+    check=_check_bucketize))
+
+
+def iter_matrix(modes) -> list:
+    """Expand the registry into (op, engine, mode, generator, dtype) cells —
+    the parametrization of ``tests/test_conformance.py``. Applies the
+    per-generator dtype restriction and dtype applicability; per-(engine,
+    mode) support is resolved at run time (skip-with-reason, never silent).
+    """
+    cells = []
+    for contract in CONTRACTS.values():
+        for engine in contract.engines:
+            for mode in modes:
+                for gen in contract.generators:
+                    for dtype in contract.dtypes_for(gen):
+                        if applicable(gen, dtype):
+                            cells.append((contract.name, engine, mode,
+                                          gen, dtype))
+    return cells

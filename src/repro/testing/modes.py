@@ -1,0 +1,81 @@
+"""The execution-mode axis of the conformance kit.
+
+The source paper's strongest related work (arXiv 2109.01719) measures one
+algorithm under four *modes of execution*; this module is our analogue for
+the sort engine: every op contract runs under every mode available on the
+host and the results must be bit-identical across them. A mode fixes two
+independently meaningful knobs:
+
+  * ``interpret`` — the Pallas lowering: ``True`` runs kernel bodies
+    through the Pallas interpreter (unrolled into the XLA program — the
+    only option on CPU), ``False`` lowers natively (Mosaic on TPU, Triton
+    on GPU);
+  * ``jit`` — dispatch granularity: ``False`` calls the op front-end
+    eagerly (each jnp op dispatched separately around the kernel launches),
+    ``True`` traces the whole op call into **one** compiled XLA program —
+    the production configuration (``core.bucketing.sorted_packed`` is one
+    such fused program), where XLA fusion rewrites the surrounding ops and
+    trace-time Python branching in the front-ends must hold.
+
+On CPU that yields ``interpret-cpu`` (eager) and ``compiled-cpu`` (one XLA
+program; Pallas bodies still interpreter-unrolled — recorded honestly in
+provenance as ``pallas='interpret'``). On TPU/GPU the compiled mode lowers
+the kernels natively. ``available_modes()`` probes the running backend, so
+the same test matrix exercises whichever pairs the host offers — at least
+two everywhere.
+
+Per-run provenance (``provenance(mode)``) extends
+``kernels.ops.execution_provenance`` with the mode label, so conformance
+results and benchmark records carry the same backend/mode/jax-version
+fields and are only ever compared like-with-like (``benchmarks/gate.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from ..kernels.ops import execution_provenance
+
+__all__ = ["ExecutionMode", "available_modes", "provenance"]
+
+
+@dataclass(frozen=True)
+class ExecutionMode:
+    """One point on the execution-mode axis.
+
+    ``name`` — the stable label stamped into provenance;
+    ``backend`` — the jax backend the mode requires;
+    ``interpret`` — the Pallas ``interpret`` flag passed through the ops;
+    ``jit`` — whether the contract wraps the whole op call in ``jax.jit``.
+    """
+
+    name: str
+    backend: str
+    interpret: bool
+    jit: bool
+
+
+def available_modes() -> tuple[ExecutionMode, ...]:
+    """The execution modes this host can actually run, most-debuggable
+    first. Always at least two: the eager interpreter mode and the
+    single-program compiled mode for the running backend."""
+    backend = jax.default_backend()
+    modes = [ExecutionMode(f"interpret-{backend}", backend,
+                           interpret=True, jit=False)]
+    if backend in ("tpu", "gpu"):
+        modes.append(ExecutionMode(f"compiled-{backend}", backend,
+                                   interpret=False, jit=True))
+    else:
+        # CPU cannot lower Pallas natively ("Only interpret mode is
+        # supported on CPU backend"), so compiled-cpu means: one jitted XLA
+        # program with the kernel bodies interpreter-unrolled inside it.
+        modes.append(ExecutionMode("compiled-cpu", backend,
+                                   interpret=True, jit=True))
+    return tuple(modes)
+
+
+def provenance(mode: ExecutionMode) -> dict:
+    """Backend/mode/jax-version provenance for one conformance run."""
+    return execution_provenance(interpret=mode.interpret, mode=mode.name)

@@ -4,3 +4,21 @@ import sys
 # Tests run on 1 CPU device (the dry-run alone sees 512 placeholder devices).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Hypothesis profiles (no-op when hypothesis is absent; the sweeps then
+# degrade to skips via tests/_hypothesis_compat):
+#   * ci  — deadline disabled (interpret-mode first calls unroll whole swap
+#           networks, so a per-example deadline only measures compile luck)
+#           and fixed derandomization so CI failures reproduce locally;
+#   * dev — verbose statistics for local sweep triage.
+# Select with HYPOTHESIS_PROFILE=dev (default: ci).
+try:
+    from hypothesis import Verbosity, settings as _hsettings
+
+    _hsettings.register_profile("ci", deadline=None, derandomize=True,
+                                print_blob=True)
+    _hsettings.register_profile("dev", deadline=None,
+                                verbosity=Verbosity.verbose)
+    _hsettings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:
+    pass

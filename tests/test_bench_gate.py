@@ -1,0 +1,138 @@
+"""benchmarks/gate.py: the perf regression gate over BENCH_kernels.json.
+
+Synthetic trajectories pin the failure modes (regression beyond threshold,
+best-prior baseline selection, allowlist pass-through, provenance
+compatibility); the real committed trajectory must pass the gate with the
+committed allowlist — the exact invocation CI runs.
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common
+from benchmarks.gate import check_latest, load_allowlist, main
+
+_REPO = os.path.join(os.path.dirname(__file__), "..")
+_ALLOW = {"default_threshold": 3.5,
+          "allow": [{"pattern": "distributed/*", "reason": "noisy"}]}
+
+
+def _entry(records, failures=(), prov=None):
+    return {"timestamp": "t", "modules": ["m"], "failures": list(failures),
+            "records": [{"name": n, "us_per_call": us, "derived": "",
+                         **({"provenance": prov} if prov else {})}
+                        for n, us in records]}
+
+
+def test_gate_fails_on_synthetic_regression():
+    hist = [_entry([("kernels/x", 100.0)]), _entry([("kernels/x", 1000.0)])]
+    report = check_latest(hist, _ALLOW)
+    assert [r["name"] for r in report["regressions"]] == ["kernels/x"]
+    assert report["regressions"][0]["ratio"] == 10.0
+    assert report["regressions"][0]["baseline_us"] == 100.0
+
+
+def test_gate_passes_within_threshold():
+    hist = [_entry([("kernels/x", 100.0)]), _entry([("kernels/x", 120.0)])]
+    report = check_latest(hist, _ALLOW)
+    assert not report["regressions"] and report["checked"] == 1
+
+
+def test_gate_baselines_against_best_prior():
+    """The baseline is the best prior value, not the most recent: a slow
+    run must not ratchet the bar down for the next one."""
+    hist = [_entry([("kernels/x", 100.0)]), _entry([("kernels/x", 500.0)]),
+            _entry([("kernels/x", 400.0)])]
+    report = check_latest(hist, _ALLOW)
+    assert report["regressions"][0]["baseline_us"] == 100.0
+    assert report["regressions"][0]["ratio"] == 4.0
+
+
+def test_gate_allowlist_reports_but_passes():
+    hist = [_entry([("distributed/x", 100.0)]),
+            _entry([("distributed/x", 10000.0)])]
+    report = check_latest(hist, _ALLOW)
+    assert not report["regressions"]
+    assert report["allowed"][0]["reason"] == "noisy"
+
+
+def test_gate_provenance_mismatch_seeds_new_baseline():
+    """A stamped baseline from a different backend never gates this run —
+    the record counts as new instead of comparing apples to oranges."""
+    tpu = {"backend": "tpu", "device_kind": "v5e", "pallas": "compiled"}
+    cpu = {"backend": "cpu", "device_kind": "cpu", "pallas": "interpret"}
+    hist = [_entry([("kernels/x", 1.0)], prov=tpu),
+            _entry([("kernels/x", 1000.0)], prov=cpu)]
+    report = check_latest(hist, _ALLOW)
+    assert not report["regressions"] and report["new"] == ["kernels/x"]
+
+
+def test_gate_unstamped_legacy_baseline_still_gates():
+    cpu = {"backend": "cpu", "device_kind": "cpu", "pallas": "interpret"}
+    hist = [_entry([("kernels/x", 100.0)]),  # pre-stamp history
+            _entry([("kernels/x", 1000.0)], prov=cpu)]
+    report = check_latest(hist, _ALLOW)
+    assert [r["name"] for r in report["regressions"]] == ["kernels/x"]
+
+
+def test_gate_module_failures_fail_the_gate():
+    hist = [_entry([("kernels/x", 100.0)], failures=["bench_kernels"])]
+    assert check_latest(hist, _ALLOW)["failures"] == ["bench_kernels"]
+
+
+def test_gate_empty_trajectory_raises():
+    with pytest.raises(ValueError):
+        check_latest([], _ALLOW)
+
+
+def test_gate_cli_synthetic_regression(tmp_path):
+    traj = tmp_path / "traj.json"
+    traj.write_text(json.dumps([_entry([("kernels/x", 100.0)]),
+                                _entry([("kernels/x", 1000.0)])]))
+    allow = tmp_path / "allow.json"
+    allow.write_text(json.dumps(_ALLOW))
+    assert main(["--trajectory", str(traj), "--allowlist", str(allow)]) == 1
+    traj.write_text(json.dumps([_entry([("kernels/x", 100.0)]),
+                                _entry([("kernels/x", 110.0)])]))
+    assert main(["--trajectory", str(traj), "--allowlist", str(allow)]) == 0
+    assert main(["--trajectory", str(tmp_path / "missing.json"),
+                 "--allowlist", str(allow)]) == 2
+
+
+def test_gate_passes_on_real_trajectory():
+    """The committed trajectory + committed allowlist must be green — the
+    exact check CI's bench-gate job runs on every PR."""
+    assert main(["--trajectory", os.path.join(_REPO, "BENCH_kernels.json")]) == 0
+
+
+def test_committed_allowlist_is_valid():
+    allow = load_allowlist()
+    assert allow["default_threshold"] > 1
+    assert any(e["pattern"] == "distributed/*" for e in allow["allow"])
+
+
+def test_emit_stamps_provenance(capsys):
+    """Every new trajectory record carries the execution-provenance stamp
+    the gate keys compatibility on."""
+    import jax
+    common.emit("gate_test/provenance_probe", 1.0)
+    rec = common.RECORDS.pop()
+    capsys.readouterr()
+    prov = rec["provenance"]
+    assert prov["backend"] == jax.default_backend()
+    assert prov["jax"] == jax.__version__
+    assert prov["pallas"] in ("interpret", "compiled")
+    assert prov["mode"].endswith(prov["backend"])
+    assert "device_kind" in prov
+
+
+def test_bench_rng_is_deterministic():
+    a = common.rng("site", 1).integers(0, 1 << 30, 8)
+    b = common.rng("site", 1).integers(0, 1 << 30, 8)
+    c = common.rng("site", 2).integers(0, 1 << 30, 8)
+    assert (a == b).all() and not (a == c).all()

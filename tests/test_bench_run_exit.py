@@ -1,0 +1,36 @@
+"""benchmarks/run.py must exit nonzero when any module fails.
+
+A bench sweep that prints a traceback but returns 0 lets regressions ship
+unnoticed; this pins the exit status end-to-end in a subprocess, using the
+BENCH_INJECT_FAILURE knob so no real (slow) benchmark has to run. The
+scratch --trajectory keeps the committed BENCH_kernels.json out of reach.
+"""
+
+import os
+import subprocess
+import sys
+
+_REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run(extra_env, tmp_path, only="bench_kernels"):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(_REPO, "src"),
+               JAX_PLATFORMS="cpu", **extra_env)
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", only,
+         "--trajectory", str(tmp_path / "traj.json")],
+        cwd=_REPO, env=env, capture_output=True, text=True, timeout=300)
+
+
+def test_injected_module_failure_exits_nonzero(tmp_path):
+    proc = _run({"BENCH_INJECT_FAILURE": "bench_kernels"}, tmp_path)
+    assert proc.returncode != 0, proc.stdout + proc.stderr
+    assert "injected failure in bench_kernels" in proc.stderr
+    assert "benchmark failures: ['bench_kernels']" in proc.stderr
+
+
+def test_no_modules_selected_exits_zero(tmp_path):
+    proc = _run({}, tmp_path, only="no_such_module")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert not (tmp_path / "traj.json").exists()  # nothing ran, no entry

@@ -6,8 +6,12 @@ variadic ``sort_lex``. Oracles: ``jnp.sort`` for single keys and
 ``jax.lax.sort`` (variadic, ``num_keys=L``) for lexicographic tuples.
 
 Two tiers:
-  * a deterministic differential core (always runs in tier-1) covering
-    random shapes, duplicate-heavy draws, and sentinel-colliding inputs;
+  * a small deterministic core (tier-1): the comparator-algorithm x
+    lane-count lex differential over 2-D rows — the one axis
+    ``tests/test_conformance.py`` does not parametrize (its sort_lex
+    engines are the lanes/packed *routing* tiers on 1-D inputs). The rest
+    of the former deterministic core (sort / sort_kv / 1-D lex edges)
+    moved into the conformance matrix, the single tier-1 contract surface;
   * hypothesis sweeps marked ``slow`` — run with ``-m slow`` (CI's fuzz
     job); they degrade to skips when hypothesis is not installed, via the
     ``tests/_hypothesis_compat`` guards.
@@ -35,7 +39,6 @@ _BLOCK = {"oets": None, "bitonic": None, "blocksort": 128}
 # fixed draw palettes (see module docstring)
 COLS = [1, 2, 7, 33, 128, 129, 200, 260]
 ROWS = [1, 3, 8]
-DTYPES = [np.int32, np.uint32, np.float32]
 
 I32_MAX = np.iinfo(np.int32).max
 U32_MAX = np.iinfo(np.uint32).max
@@ -80,44 +83,7 @@ def _lex_oracle(lanes):
     return outs
 
 
-# --- deterministic differential core (tier-1) --------------------------------
-
-# Pinned widths for the deterministic core: every (engine, dtype) pair
-# compiles exactly one interpret-mode kernel and all four flavors reuse it
-# (jit caches are shape-keyed; interpret-mode compiles dominate wall clock).
-# cols=100 keeps the single-block networks inside one 128-lane tile — the
-# cheap-to-compile regime; wider networks are covered by the seed kernel
-# tests and the slow fuzz tier. blocksort gets its own width so rows really
-# span multiple blocks.
-_CORE_COLS = {"oets": 100, "bitonic": 100, "blocksort": 300}
-
-
-@pytest.mark.parametrize("flavor", ["random", "dups", "sentinel", "mixed"])
-@pytest.mark.parametrize("algo", ENGINES)
-def test_engine_vs_jnp_sort(algo, flavor):
-    rng = np.random.default_rng(_seed(algo, flavor))
-    for dtype in DTYPES:
-        x = jnp.asarray(_draw(rng, (3, _CORE_COLS[algo]), dtype, flavor))
-        out = sort(x, algorithm=algo, block_size=_BLOCK[algo])
-        np.testing.assert_array_equal(np.asarray(out),
-                                      np.asarray(jnp.sort(x, axis=-1)))
-
-
-@pytest.mark.parametrize("algo", ENGINES)
-def test_engine_kv_vs_variadic_oracle(algo):
-    """(key, val) through the engines == lax.sort on (key, val) as two keys:
-    the kernels tie-break on the payload, so the result is exact, even with
-    duplicate and sentinel-colliding keys."""
-    rng = np.random.default_rng(_seed(algo))
-    cols = _CORE_COLS[algo]
-    k = _draw(rng, (3, cols), np.int32, "mixed")
-    v = rng.integers(0, 10**6, (3, cols)).astype(np.int32)
-    ok, ov = sort_kv(jnp.asarray(k), jnp.asarray(v), algorithm=algo,
-                     block_size=_BLOCK[algo])
-    wk, wv = _lex_oracle([jnp.asarray(k), jnp.asarray(v)])
-    np.testing.assert_array_equal(np.asarray(ok), wk)
-    np.testing.assert_array_equal(np.asarray(ov), wv)
-
+# --- deterministic core (tier-1): comparator-algo x lanes over 2-D rows ------
 
 @pytest.mark.parametrize("n_lanes", [2, 3])
 @pytest.mark.parametrize("algo", ENGINES)
@@ -136,19 +102,6 @@ def test_sort_lex_vs_variadic_oracle(algo, n_lanes):
     want = _lex_oracle(lanes)
     for o, w in zip(out, want):
         np.testing.assert_array_equal(np.asarray(o), w)
-
-
-def test_sort_lex_1d_and_empty():
-    rng = np.random.default_rng(9)
-    lanes = [jnp.asarray(rng.integers(0, 3, 60, dtype=np.int64).astype(np.uint32))
-             for _ in range(2)]
-    out = sort_lex(lanes)
-    want = _lex_oracle([l[None, :] for l in lanes])
-    for o, w in zip(out, want):
-        np.testing.assert_array_equal(np.asarray(o), w[0])
-    e = jnp.zeros((0,), jnp.uint32)
-    oe = sort_lex([e, e])
-    assert oe[0].shape == (0,) and oe[1].shape == (0,)
 
 
 # --- hypothesis sweeps (slow; skipped when hypothesis is absent) -------------

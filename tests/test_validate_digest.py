@@ -1,0 +1,117 @@
+"""pipeline/validate.py digest edges.
+
+The multiset digest is the load-bearing half of the corruption gate; these
+pin its boundary behavior: the empty-run digest, single-element (capacity-1)
+runs where the sortedness compare never fires, the additive mod-2^64
+wraparound the merge reconciliation leans on, and — by inverting the
+splitmix64 finalizer — a crafted pair of rows whose summed digest equals
+the empty digest, proving the count check is load-bearing and not
+redundant next to the digest compare.
+"""
+
+import types
+
+import numpy as np
+import pytest
+
+from repro.pipeline.manifest import RunManifest
+from repro.pipeline.validate import (ValidationError, _mix, check_chunked,
+                                     check_multiset, check_run, keys_digest,
+                                     multiset_digest)
+
+_M64 = (1 << 64) - 1
+_FNV_PRIME = 0x100000001B3
+_FNV_OFFSET = 0xCBF29CE484222325
+
+
+def _manifest(keys, lengths, nb=2):
+    keys = np.asarray(keys, np.uint32)
+    lengths = np.asarray(lengths, np.int32)
+    return RunManifest(
+        chunk_id=0, count=int(lengths.shape[0]), lanes=keys.shape[1],
+        length_histogram=tuple(np.bincount(lengths, minlength=nb).tolist()),
+        min_key=None, max_key=None, digest=keys_digest(keys))
+
+
+def test_empty_run_digest_is_zero():
+    assert multiset_digest([]) == 0
+    assert multiset_digest([np.zeros(0, np.uint32)]) == 0
+    assert keys_digest(np.zeros((0, 3), np.uint32)) == 0
+    # an empty run reconciles against its manifest in full mode
+    keys = np.zeros((0, 2), np.uint32)
+    lengths = np.zeros(0, np.int32)
+    check_run(types.SimpleNamespace(keys=keys, lengths=lengths),
+              _manifest(keys, lengths), mode="full")
+
+
+def test_capacity_one_runs_reconcile_and_catch_corruption():
+    """Single-element (capacity-1) runs: the adjacent sortedness compare
+    never fires (n < 2), so the digest is the only content check left —
+    it must still catch a flipped element end to end."""
+    r1 = types.SimpleNamespace(keys=np.array([[5, 0]], np.uint32),
+                               lengths=np.array([1], np.int32))
+    r2 = types.SimpleNamespace(keys=np.array([[3, 7]], np.uint32),
+                               lengths=np.array([1], np.int32))
+    mans = [_manifest(r.keys, r.lengths) for r in (r1, r2)]
+    merged = types.SimpleNamespace(keys=np.array([[3, 7], [5, 0]], np.uint32),
+                                   lengths=np.array([1, 1], np.int32))
+    check_chunked([r1, r2], mans, merged, mode="full")
+    corrupted = types.SimpleNamespace(
+        keys=np.array([[3, 7], [5, 1]], np.uint32),  # one flipped bit-ish
+        lengths=merged.lengths)
+    with pytest.raises(ValidationError, match="digest"):
+        check_chunked([r1, r2], mans, corrupted, mode="full")
+
+
+def test_digest_is_additive_mod_2_64():
+    rng = np.random.default_rng(7)
+    a = [rng.integers(0, _M64, 500, dtype=np.uint64)]
+    b = [rng.integers(0, _M64, 300, dtype=np.uint64)]
+    both = [np.concatenate([a[0], b[0]])]
+    assert multiset_digest(both) == \
+        (multiset_digest(a) + multiset_digest(b)) % (1 << 64)
+
+
+# --- crafted collision: same digest, different count -------------------------
+
+def _inv_xshr(y: int, s: int) -> int:
+    x = y
+    for _ in range(0, 64, s):
+        x = y ^ (x >> s)
+    return x
+
+
+def _mix_inv(h: int) -> int:
+    """Inverse of validate._mix (the splitmix64 finalizer is a bijection)."""
+    h = _inv_xshr(h, 31)
+    h = (h * pow(0x94D049BB133111EB, -1, 1 << 64)) & _M64
+    h = _inv_xshr(h, 27)
+    h = (h * pow(0xBF58476D1CE4E5B9, -1, 1 << 64)) & _M64
+    h = _inv_xshr(h, 30)
+    return h
+
+
+def test_mix_inverse_round_trips():
+    rng = np.random.default_rng(11)
+    vals = rng.integers(0, _M64, 64, dtype=np.uint64)
+    mixed = _mix(vals)
+    back = np.array([_mix_inv(int(m)) for m in mixed], np.uint64)
+    np.testing.assert_array_equal(back, vals)
+
+
+def test_crafted_pair_collides_with_empty_digest():
+    """Two rows whose per-row digests sum to exactly 2^64: the pair's
+    digest equals the empty multiset's (0), with the wraparound hitting the
+    modulus on the nose. The digest alone therefore cannot distinguish
+    {a, b} from {} — check_multiset must catch it via the element *count*,
+    which is why the count check precedes the digest compare."""
+    chain0 = (_FNV_OFFSET * _FNV_PRIME) & _M64  # one-lane FNV chain prefix
+    v_a = 0xDEADBEEFCAFEF00D
+    d_a = multiset_digest([np.array([v_a], np.uint64)])
+    h_b = _mix_inv(((1 << 64) - d_a) & _M64)
+    v_b = h_b ^ chain0
+    pair = [np.array([v_a, v_b], np.uint64)]
+    assert multiset_digest(pair) == multiset_digest([]) == 0
+    assert (d_a + multiset_digest([np.array([v_b], np.uint64)])) == (1 << 64)
+    with pytest.raises(ValidationError, match="count changed"):
+        check_multiset([np.zeros(0, np.uint64)], pair)
