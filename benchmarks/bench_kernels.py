@@ -10,6 +10,8 @@ acceptance tracks. TPU cost is derived in the roofline."""
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -101,10 +103,70 @@ def lex_lanes_sweep():
              f"engine={engine};vs_xla={t_xla / t_lex:.2f}x")
 
 
+def float_lane_engines():
+    """Packed vs lane-wise float sort_lex: a (float32, int16, int16) tuple
+    fits the 64-bit rank-key budget in 2 packed lanes, so the packed engine
+    ranks on concatenated order bits and gathers the originals through the
+    permutation, while 'lanes' pays the per-lane compare chain. The entry
+    the PR-8 routing change is gated on: float lanes may now route packed."""
+    rng = bench_rng("bench_kernels", 3)
+    rows, cols = 8, 128
+    lanes = [jnp.asarray(rng.normal(scale=10, size=(rows, cols))
+                         .astype(np.float32)),
+             jnp.asarray(rng.integers(-2**15, 2**15, (rows, cols))
+                         .astype(np.int16)),
+             jnp.asarray(rng.integers(-2**15, 2**15, (rows, cols))
+                         .astype(np.int16))]
+    times = {engine: timeit(lambda *ls, e=engine: sort_lex(list(ls), engine=e),
+                            *lanes, iters=3)
+             for engine in ("packed", "lanes")}
+    for engine in ("packed", "lanes"):
+        other = "lanes" if engine == "packed" else "packed"
+        emit(f"kernels/sort_lex_float/{engine}/{rows}x{cols}",
+             times[engine] * 1e6,
+             f"f32+2xi16;vs_{other}={times[other] / times[engine]:.2f}x")
+
+
+def float_nan_smoke():
+    """Tiny NaN-mix sort smoke for the CI bench gate: times one 8x128
+    float32 sort whose rows carry NaNs/±inf/±0.0, and asserts the
+    jnp.sort-equivalent contract (bit multiset conserved, NaNs at the tail)
+    before emitting — a perf record that doubles as a liveness check of
+    the total-order key plane."""
+    rng = bench_rng("bench_kernels", 4)
+    rows, cols = 8, 128
+    x = rng.normal(scale=10, size=(rows, cols)).astype(np.float32)
+    x[rng.random((rows, cols)) < 0.15] = np.nan
+    x[rng.random((rows, cols)) < 0.05] = np.inf
+    x[rng.random((rows, cols)) < 0.05] = np.float32(-0.0)
+    xj = jnp.asarray(x)
+    t = timeit(lambda v: sort(v), xj, iters=3)
+    out = np.asarray(sort(xj))
+    for r in range(rows):
+        assert (sorted(out[r].view(np.uint32).tolist())
+                == sorted(x[r].view(np.uint32).tolist())), "bit multiset lost"
+        k = int(np.isnan(x[r]).sum())
+        assert np.isnan(out[r, cols - k:]).all(), "NaNs not at the tail"
+        pre = out[r, :cols - k]
+        # pairwise >=, not np.diff: inf - inf is NaN, not zero
+        assert np.all(pre[1:] >= pre[:-1]), "prefix unsorted"
+    emit(f"kernels/sort_float_nan/{rows}x{cols}", t * 1e6,
+         "nan_mix=15%;contract=jnp.sort-equivalent")
+
+
 def main():
+    # BENCH_KERNELS_SMOKE=1: only the tiny float-lane entries — the CI
+    # bench-gate job's budget (the full sweeps take minutes in interpret
+    # mode; trend tracking for them runs out of band)
+    if os.environ.get("BENCH_KERNELS_SMOKE"):
+        float_lane_engines()
+        float_nan_smoke()
+        return
     traced_networks()
     blocksort_sweep()
     lex_lanes_sweep()
+    float_lane_engines()
+    float_nan_smoke()
 
 
 if __name__ == "__main__":

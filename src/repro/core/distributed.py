@@ -34,7 +34,7 @@ Exact-count exchange protocol (no silent data loss): alongside the data
 count vectors (one tiny (P, P) matrix, replicated everywhere), so receivers
 know exactly how many real elements arrived from each source — validity is
 never inferred from sentinel comparisons (real
-``iinfo.max`` ints and ``+inf`` floats count correctly), capacity overflow
+``iinfo.max`` ints and sentinel-bit floats count correctly), capacity overflow
 is reported in an explicit flag instead of silently dropping, and the
 host-facing wrappers always size capacity at the per-source worst case B so
 nothing can overflow. Non-divisible inputs are sentinel-padded to the next
@@ -414,7 +414,8 @@ def sample_sort(block, axis_name: str, capacity: int | None = None,
     """Key-only sample sort (the 1-tuple view). Returns ``(values, count)``
     per device: ``values`` is (P*capacity,) with the real elements sorted in
     the prefix ``[0, count)``; ``count`` is exact even when real elements
-    equal the padding sentinel (``iinfo.max`` / ``+inf``)."""
+    equal the padding sentinel (``iinfo.max`` / the all-ones-bits NaN —
+    ``kernels.lex.sentinel_for``)."""
     res = sample_sort_lex([block], axis_name, capacity=capacity,
                           oversample=oversample, local_sort=local_sort)
     return res.lanes[0], res.count

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..kernels.lex import order_view, sentinel_for
+
 __all__ = [
     "lex_gt",
     "oets_sort",
@@ -29,7 +31,9 @@ __all__ = [
 
 
 def lex_gt(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Lane-lexicographic ``a > b``.
+    """Lane-lexicographic ``a > b`` under the canonical total order of
+    ``kernels/lex.py`` (float lanes compare by order bits: NaN above
+    ``+inf``, ``-0.0 == +0.0``).
 
     ``a``/``b``: (..., L) multi-lane keys or (...,) scalars. Returns bool (...).
     """
@@ -41,7 +45,7 @@ def lex_gt(a: jax.Array, b: jax.Array) -> jax.Array:
             gt = gt | (eq & (al > bl))
             eq = eq & (al == bl)
         return gt
-    return a > b
+    return order_view(a) > order_view(b)
 
 
 def _is_multilane(x: jax.Array) -> bool:
@@ -49,12 +53,8 @@ def _is_multilane(x: jax.Array) -> bool:
     return x.ndim >= 2 and jnp.issubdtype(x.dtype, jnp.unsignedinteger)
 
 
-def _sentinel(dtype) -> jax.Array:
-    if jnp.issubdtype(dtype, jnp.unsignedinteger):
-        return jnp.array(jnp.iinfo(dtype).max, dtype=dtype)
-    if jnp.issubdtype(dtype, jnp.integer):
-        return jnp.array(jnp.iinfo(dtype).max, dtype=dtype)
-    return jnp.array(jnp.inf, dtype=dtype)
+# the shared padding contract lives with the comparator (kernels/lex.py)
+_sentinel = sentinel_for
 
 
 def _compare_exchange(lo, hi, vlo=None, vhi=None):

@@ -10,10 +10,13 @@ This module collapses a tuple ``(length, lane0, lane1, ...)`` into at most
 two uint32 *rank-key* lanes whose unsigned order equals the tuple's
 ``lex_gt_lanes`` order, so every merge rank becomes a searchsorted:
 
-  * every lane first embeds into uint32 by an order-preserving *bias*
-    (``bias_to_u32``): unsigned ints pass through, signed ints shift by
-    2^(bits-1), float32 takes the IEEE total-order flip (with ``-0.0``
-    normalised to ``+0.0`` so packed equality matches ``==``);
+  * every lane first embeds into uint32 by the canonical per-lane key
+    transform ``lex.to_order_bits`` (``bias_to_u32`` is its re-export):
+    unsigned ints pass through, signed ints shift by 2^(bits-1), float32
+    takes the IEEE total-order flip with ``-0.0`` normalised to ``+0.0``
+    and every NaN canonicalised above ``+inf`` — so packed unsigned order
+    *is* ``lex_gt_lanes`` order, the packed plane being the
+    concatenated-bits special case of the one comparator representation;
   * biased lanes then concatenate big-endian into a 64-bit budget rendered
     as a ``(hi, lo)`` uint32 pair — or a single uint32 when the total bit
     width fits 32, which unlocks ``jnp.searchsorted`` natively. Tight widths
@@ -34,11 +37,12 @@ kernel's diagonal partition (``kernels/runmerge_kernel.py``).
 ``kernels/lex.py``'s lane-wise ``lex_rank_count``/``lex_merge_take`` remain
 the differential oracle these fast paths are tested against.
 
-Float caveats: the bias gives NaN a deterministic slot above ``+inf``
-(comparator networks instead leave NaNs in place — callers quarantine NaNs
-per the ``ops`` contract), and ``unpack_rank_keys`` returns ``+0.0`` for a
-packed ``-0.0``; the packed *sort* path in ``ops.sort_lex`` therefore
-routes float lanes through the lane-wise engines.
+Float caveats: the NaN canonicalisation collapses distinct NaN payloads
+onto one order slot, and ``unpack_rank_keys`` returns ``+0.0`` for a packed
+``-0.0`` and the canonical quiet NaN for the collapsed NaN slot; the packed
+*sort* path in ``ops.sort_lex`` therefore conserves float bits by sorting
+``(packed keys, iota)`` and gathering the original lanes through the
+permutation instead of unpacking.
 """
 
 from __future__ import annotations
@@ -46,9 +50,8 @@ from __future__ import annotations
 from typing import NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
-from jax import lax
 
-from .lex import lex_gt_lanes
+from .lex import from_order_bits, lex_gt_lanes, to_order_bits
 
 __all__ = [
     "PackPlan", "PackedKeys", "plan_pack", "bias_to_u32",
@@ -60,7 +63,6 @@ __all__ = [
 # two uint32 rank-key lanes — the budget the ISSUE's "u64 shortlex key" fits
 # in without enabling x64 (jax keeps uint64 disabled by default)
 _BUDGET_BITS = 64
-_TOP = jnp.uint32(0x80000000)
 
 
 class PackPlan(NamedTuple):
@@ -140,47 +142,12 @@ def plan_pack(dtypes, max_values=None) -> PackPlan:
                     covered=covered, n_packed=1 if total <= 32 else 2)
 
 
-def bias_to_u32(x, max_value: Optional[int] = None):
-    """Order-preserving uint32 embedding of one lane.
-
-    ``max_value`` asserts a ``[0, max_value]`` range (values cast directly);
-    otherwise signed ints shift by 2^(bits-1), unsigned ints pass through,
-    and float32 maps via the IEEE total-order flip with ``-0.0`` normalised
-    to ``+0.0`` so biased equality coincides with ``==`` (NaN lands above
-    ``+inf`` — see the module docstring)."""
-    dt = jnp.dtype(x.dtype)
-    if max_value is not None:
-        if not jnp.issubdtype(dt, jnp.integer):
-            raise TypeError("max_values only applies to integer lanes")
-        return x.astype(jnp.uint32)
-    if dt == jnp.dtype(jnp.float32):
-        xn = jnp.where(x == 0, jnp.zeros_like(x), x)
-        b = lax.bitcast_convert_type(xn, jnp.uint32)
-        return jnp.where((b & _TOP) != 0, ~b, b | _TOP)
-    if jnp.issubdtype(dt, jnp.unsignedinteger):
-        return x.astype(jnp.uint32)
-    if jnp.issubdtype(dt, jnp.signedinteger):
-        if dt.itemsize == 4:
-            return lax.bitcast_convert_type(x, jnp.uint32) ^ _TOP
-        # int8/int16: shift into [0, 2^bits) so the value fits `bits` bits
-        half = 1 << (dt.itemsize * 8 - 1)
-        return (x.astype(jnp.int32) + half).astype(jnp.uint32)
-    raise TypeError(f"cannot bias lanes of dtype {dt}")
-
-
-def _unbias(v, dtype, max_value: Optional[int]):
-    dt = jnp.dtype(dtype)
-    if max_value is not None:
-        return v.astype(dt)
-    if dt == jnp.dtype(jnp.float32):
-        b = jnp.where((v & _TOP) != 0, v ^ _TOP, ~v)
-        return lax.bitcast_convert_type(b, jnp.float32)
-    if jnp.issubdtype(dt, jnp.unsignedinteger):
-        return v.astype(dt)
-    if dt.itemsize == 4:
-        return lax.bitcast_convert_type(v ^ _TOP, jnp.int32)
-    half = 1 << (dt.itemsize * 8 - 1)
-    return (v.astype(jnp.int32) - half).astype(dt)
+# The bias IS the canonical key transform — it was hoisted into
+# ``kernels/lex.py`` so every comparator tier (lane-wise, packed, Pallas,
+# mesh) shares one definition of order bits. The names stay exported here
+# because packing literature and this module's callers say "bias".
+bias_to_u32 = to_order_bits
+_unbias = from_order_bits
 
 
 def _shl64_or(hi, lo, w: int, v):

@@ -14,8 +14,10 @@ Entry points:
     (``core/packing.py``). Same engine tiers as ``sort``, plus an
     ``engine='auto'|'lanes'|'packed'`` routing knob: 'packed' collapses the
     tuple into 1-2 uint32 rank-key lanes (``kernels/keypack.py``), sorts
-    those, and unpacks — chosen automatically when the integer tuple fits
-    the 2-lane budget with fewer packed than original lanes.
+    those, and unpacks (integer tuples) or gathers the original lanes
+    through the sorted permutation (float tuples, conserving every bit) —
+    chosen automatically when the tuple fits the 2-lane budget with fewer
+    packed than original lanes.
   * ``merge_sorted(a, b)`` / ``merge_sorted_lex(a_lanes, b_lanes)`` — the
     run-merge front-end shared by every granularity (pipeline run
     tournament, distributed 'take' merge and final combine): 'packed'
@@ -45,27 +47,30 @@ device-local sort on TPU.
 
 These wrappers handle everything the raw kernels require of their caller:
 lane padding (cols -> multiple of 128 for OETS, next pow2 >= 128 for
-bitonic) with per-dtype +inf/max sentinels so padding sinks to the row tail,
-sublane padding (rows -> multiple of the 8-row block), and automatic
+bitonic) with per-dtype lex-maximal sentinels so padding sinks to the row
+tail, sublane padding (rows -> multiple of the 8-row block), and automatic
 ``interpret=True`` on CPU (this container), compiled on TPU.
 
-Sentinel / dtype contract: padding uses the dtype's maximum (``iinfo.max``
-for ints — including signed, where it is the positive max, never -1 — and
-``+inf`` for floats). Real elements *equal* to the sentinel still sort
-correctly: key-only outputs are sliced back to the real width, and kv/lex
-payload lanes participate in the compare as final tie-breaks, keeping the
-all-sentinel padding tuple strictly maximal. float32 NaN: callers MUST
-quarantine NaNs first. NaN compares false against everything, so elements
-on opposite sides of a NaN stay unsorted relative to each other (unlike
-``jnp.sort``, which sinks NaNs to the tail) — and worse, on the *padded*
-engines (bitonic; blocksort's per-block bitonic) a NaN can strand a padding
-sentinel inside the sliced-back region while a real element is left in the
-padding tail: the output is then not even a permutation of the input
-(``+inf`` values appear, real values vanish). Only ``oets`` preserves the
-element multiset under NaN, because adjacent exchanges never move the inert
-padding suffix left past real data. ``tests/test_ops_dtypes.py`` pins the
-oets permutation contract; ``tests/test_conformance.py`` pins the padded
-data-loss hazard strict-xfail (ROADMAP: NaN-total-order comparator).
+Sentinel / dtype contract: padding uses the dtype's lex-maximal value under
+the canonical total order of ``kernels/lex.py`` (``iinfo.max`` for ints —
+including signed, where it is the positive max, never -1 — and for floats
+the all-ones-bits NaN, which the order places strictly above every other
+value). Real elements *equal* to the sentinel still sort correctly:
+key-only outputs are sliced back to the real width, and kv/lex payload
+lanes participate in the compare as final tie-breaks, keeping the
+all-sentinel padding tuple strictly maximal.
+
+float32 NaN contract (``jnp.sort``-equivalent): every engine at every tier
+compares the canonical order bits of ``kernels/lex.to_order_bits``, so NaNs
+— all bit patterns, either sign — sort strictly above ``+inf`` and sink to
+the tail, ``-0.0`` and ``+0.0`` compare equal (either may precede the
+other), and the output is always a bit-level permutation of the input:
+engines compare order bits but swap the raw values, so NaN payload bits and
+``-0.0`` signs are conserved, never canonicalised. Distinct NaN bit
+patterns compare equal, so their relative order is unspecified — exactly
+``jnp.sort``'s observable contract. ``tests/test_ops_dtypes.py`` and the
+``nan`` generator of the conformance matrix (``tests/test_conformance.py``)
+pin this on every (op, engine, mode) cell.
 """
 
 from __future__ import annotations
@@ -223,18 +228,18 @@ def choose_lex_engine(dtypes, max_values=None, engine: str = "auto") -> str:
     packing is lossless *and* shrinks the comparator's lane count: every
     swap network phase moves and compares each lane, so fewer lanes is
     strictly less work, while a lossy packing would have to carry the
-    original lanes as tie-breaks and lose. Float lanes stay lane-wise (the
-    packed path re-materialises keys by unpacking, which cannot restore a
-    ``-0.0`` and would pin NaNs — see ``kernels/keypack.py``). Explicit
-    ``engine`` overrides, but never unsoundly: a 'packed' request that the
-    plan cannot honour exactly falls back to 'lanes'."""
+    original lanes as tie-breaks and lose. Float32 lanes route like any
+    other: their order bits are the canonical comparator representation
+    (``kernels/lex.to_order_bits``), and :func:`sort_lex` conserves their
+    bits by gathering the originals through the packed permutation instead
+    of unpacking. Explicit ``engine`` overrides, but never unsoundly: a
+    'packed' request that the plan cannot honour exactly falls back to
+    'lanes'."""
     if engine not in ("auto", "lanes", "packed"):
         raise ValueError(f"unknown engine {engine!r}")
     if engine == "lanes":
         return "lanes"
     dtypes = tuple(jnp.dtype(d) for d in dtypes)
-    if any(not jnp.issubdtype(d, jnp.integer) for d in dtypes):
-        return "lanes"
     try:
         plan = plan_pack(dtypes, max_values)
     except TypeError:
@@ -262,10 +267,12 @@ def sort_lex(keys_lanes, vals=None, algorithm: str = "auto",
 
     ``engine``: 'lanes' (every key lane is its own comparator lane),
     'packed' (collapse the tuple into 1-2 uint32 rank-key lanes via
-    ``kernels/keypack.py``, sort those, unpack — honoured only when the
-    packing is lossless for integer lanes, else falls back to 'lanes'), or
-    'auto' (:func:`choose_lex_engine`). ``max_values``: optional per-lane
-    upper bounds (hashable tuple) that tighten the packed widths.
+    ``kernels/keypack.py``, sort those, and unpack — or, when a float lane
+    is present, sort ``(rank keys, iota)`` and gather the original lanes
+    through the permutation, conserving every float bit; honoured only when
+    the packing is lossless, else falls back to 'lanes'), or 'auto'
+    (:func:`choose_lex_engine`). ``max_values``: optional per-lane upper
+    bounds (hashable tuple) that tighten the packed widths.
     """
     lanes = list(keys_lanes)
     if not lanes:
@@ -276,6 +283,26 @@ def sort_lex(keys_lanes, vals=None, algorithm: str = "auto",
     eng = choose_lex_engine([a.dtype for a in lanes], max_values, engine)
     if eng == "packed":
         packed = pack_rank_keys(lanes, max_values)
+        if any(jnp.issubdtype(a.dtype, jnp.floating) for a in lanes):
+            # The float order-bit transform is compare-only (NaN patterns
+            # collapse, -0.0 normalises), so unpacking cannot restore the
+            # input bits. Sort (rank keys, iota) instead and gather every
+            # original lane — and vals — through the permutation: stable,
+            # bit-conserving, and the iota tie-break keeps real rows that
+            # equal the packed padding prefix left of the padding tail.
+            x0 = lanes[0]
+            iota = jax.lax.broadcasted_iota(jnp.int32, x0.shape, x0.ndim - 1)
+            sorted_packed = sort_lex(tuple(packed.lanes) + (iota,),
+                                     algorithm=algorithm,
+                                     block_size=block_size,
+                                     interpret=interpret, engine="lanes")
+            perm = sorted_packed[-1]
+            if x0.ndim == 1:
+                gather = lambda a: a[perm]
+            else:
+                gather = lambda a: jnp.take_along_axis(a, perm, axis=-1)
+            out = tuple(gather(a) for a in lanes)
+            return out if vals is None else (out, gather(vals))
         out_packed = sort_lex(packed.lanes, vals=vals, algorithm=algorithm,
                               block_size=block_size, interpret=interpret,
                               engine="lanes")

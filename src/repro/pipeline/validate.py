@@ -17,7 +17,15 @@ each checkable far cheaper than a full oracle re-sort:
     against its inputs with no re-scan of them. (Probabilistic with
     collision odds ~2^-64 per check; a permutation plus sortedness implies
     a correct sort.) The per-length histogram rides along as a second,
-    structure-aware conservation check.
+    structure-aware conservation check. Float lanes digest through the
+    canonical order-bits view (:func:`order_bits_view`, the numpy mirror of
+    ``kernels.lex.to_order_bits``) so engines that compare canonically —
+    ``-0.0 == +0.0``, NaN payloads interchangeable — reconcile against
+    raw-bit oracles on comparator equality, not bit identity.
+
+Both the sortedness compare and the digest run on the same order-bits view,
+so "sorted" and "same multiset" here mean exactly what the engines'
+comparator (``kernels/lex.py``) means.
 
 ``validate='off'|'cheap'|'full'`` on ``pipeline.ingest.chunked_sort_*`` and
 ``core.distributed.distributed_sort_lex`` maps to: nothing / sortedness +
@@ -30,9 +38,9 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["ValidationError", "multiset_digest", "keys_digest",
-           "length_histogram_of", "check_lanes_sorted", "check_multiset",
-           "check_run", "check_chunked"]
+__all__ = ["ValidationError", "order_bits_view", "multiset_digest",
+           "keys_digest", "length_histogram_of", "check_lanes_sorted",
+           "check_multiset", "check_run", "check_chunked"]
 
 _U64 = np.uint64
 _FNV_PRIME = _U64(0x100000001B3)
@@ -46,11 +54,33 @@ class ValidationError(RuntimeError):
     duplication detected by the validation gate)."""
 
 
+def order_bits_view(lane) -> np.ndarray:
+    """Numpy mirror of ``kernels.lex.to_order_bits`` for float32 lanes —
+    uint32 order bits whose unsigned order is the canonical total order
+    (``-0.0`` normalised to ``+0.0``, every NaN above ``+inf``, the
+    all-ones pattern strictly maximal). Non-float32 lanes pass through
+    unchanged (integers are already totally ordered raw). A differential
+    test pins this equal to the jax transform bit for bit on every value
+    class except denormals, where XLA flushes to zero in compares and this
+    mirror follows IEEE instead."""
+    a = np.asarray(lane)
+    if a.dtype != np.dtype(np.float32):
+        return a
+    top = np.uint32(0x80000000)
+    b = np.ascontiguousarray(a).view(np.uint32)
+    bn = np.where(a == 0, np.uint32(0), b)  # -0.0 -> +0.0 (NaN compares false)
+    flipped = np.where((bn & top) != 0, ~bn, bn | top)
+    nan_slot = np.where(b == np.uint32(0xFFFFFFFF),
+                        np.uint32(0xFFFFFFFF), np.uint32(0xFFFFFFFE))
+    return np.where(np.isnan(a), nan_slot, flipped)
+
+
 def _as_u64(lane) -> np.ndarray:
-    """Bit-pattern view of a 1-D lane as uint64 (reinterpret, never convert:
-    float lanes digest by their IEEE bits so -0.0 and 0.0 stay distinct
-    multiset members, matching bit-identity semantics)."""
-    a = np.ascontiguousarray(np.asarray(lane))
+    """Canonical-bit view of a 1-D lane as uint64: float32 lanes first map
+    through :func:`order_bits_view` (so the digest equates exactly what the
+    comparator equates — ``-0.0``/``+0.0``, NaN payloads), integer lanes
+    reinterpret raw."""
+    a = np.ascontiguousarray(order_bits_view(lane))
     if a.dtype.itemsize == 8:
         return a.view(_U64)
     if a.dtype.itemsize == 4:
@@ -99,14 +129,17 @@ def length_histogram_of(lengths, num_buckets: int) -> np.ndarray:
 
 def check_lanes_sorted(lanes, what: str = "output"):
     """Raise unless the row tuples of the parallel 1-D ``lanes`` are lex
-    non-decreasing (lane 0 most significant)."""
+    non-decreasing (lane 0 most significant) under the canonical total
+    order: float lanes compare by :func:`order_bits_view`, so a NaN out of
+    tail position *fails* (a raw compare would silently pass — NaN decides
+    neither ``<`` nor ``>``). Error messages report the raw values."""
     lanes = [np.asarray(l) for l in lanes]
     n = lanes[0].shape[0]
     if n < 2:
         return
     decided_lt = np.zeros(n - 1, bool)
     decided_gt = np.zeros(n - 1, bool)
-    for lane in lanes:
+    for lane in map(order_bits_view, lanes):
         a, b = lane[:-1], lane[1:]
         undecided = ~(decided_lt | decided_gt)
         decided_gt |= undecided & (a > b)

@@ -16,9 +16,12 @@ merge_sorted_lex / bucketize / distribute`` — declaring:
     structural edges don't multiply the interpret-mode compile budget;
   * ``build`` / ``oracle`` / ``check`` — deterministic case construction
     (CRC-seeded, stable across processes), the NumPy reference, and the
-    conformance predicate: bit-identical by default, bit-level multiset
-    for the NaN permutation contract, capacity-parametric for bucketize
-    (the op picks its own autotuned capacity);
+    conformance predicate: bit-identical by default; for the NaN cases the
+    ``jnp.sort``-equivalent total-order contract — bit-level multiset
+    conserved AND non-decreasing under the canonical order bits of
+    ``kernels/lex.py`` (checked via ``pipeline.validate``'s numpy mirror,
+    pinning the two layers to one definition of sorted); capacity-
+    parametric for bucketize (the op picks its own autotuned capacity);
   * ``run`` — executes the op under an :class:`~repro.testing.modes.
     ExecutionMode`: the mode's Pallas ``interpret`` flag threads through,
     and ``jit`` modes trace the whole call into one cached compiled
@@ -52,6 +55,8 @@ import numpy as np
 from ..core.packing import byte_length, pack_words
 from ..kernels import ops
 from ..kernels.lex import sentinel_for
+from ..pipeline.validate import (ValidationError, check_lanes_sorted,
+                                 order_bits_view)
 from .generators import (applicable, check_mode, default_n, fill_elements,
                          make_words, sorted_run_sizes)
 from .modes import ExecutionMode, provenance
@@ -137,8 +142,9 @@ def _bits(a: np.ndarray) -> np.ndarray:
 
 
 def _assert_permutation(got, want):
-    """The NaN contract: outputs are a bit-level row-multiset permutation of
-    the inputs (lanes compared as parallel tuples)."""
+    """Outputs are a bit-level row-multiset permutation of the inputs
+    (lanes compared as parallel tuples) — NaN payload bits and ``-0.0``
+    signs must survive exactly."""
     g = np.stack([_bits(np.ascontiguousarray(a)) for a in got])
     w = np.stack([_bits(np.ascontiguousarray(a)) for a in want])
     if g.shape != w.shape:
@@ -149,17 +155,32 @@ def _assert_permutation(got, want):
     np.testing.assert_array_equal(g, w)
 
 
+def _assert_total_order(got, want):
+    """The ``jnp.sort``-equivalent NaN contract: outputs are a bit-level
+    row-multiset permutation of the oracle reference AND lex non-decreasing
+    under the canonical order bits (distinct NaN payloads tie, so only the
+    multiset pins their bits). Sortedness runs through
+    ``pipeline.validate.check_lanes_sorted`` — the production gate and the
+    conformance matrix share one definition of "sorted"."""
+    _assert_permutation(got, want)
+    try:
+        check_lanes_sorted(list(got), what="conformance output")
+    except ValidationError as e:
+        raise AssertionError(str(e)) from None
+
+
 def assert_conforms(contract: OpContract, case: Case, outputs: tuple):
-    """The conformance predicate: contract-custom check, bit-level
-    permutation (NaN cases), or exact equality against the NumPy oracle."""
+    """The conformance predicate: contract-custom check, total-order (NaN
+    cases: multiset + canonical-order sortedness), or exact equality
+    against the NumPy oracle."""
     if contract.check is not None:
         contract.check(case, outputs)
         return
     got = _np(outputs)
     want = _np(contract.oracle(case))
     assert len(got) == len(want)
-    if case.check == "permutation":
-        _assert_permutation(got, want)
+    if case.check == "total_order":
+        _assert_total_order(got, want)
         return
     for g, w in zip(got, want):
         assert g.dtype == w.dtype, f"dtype changed: {g.dtype} != {w.dtype}"
@@ -177,23 +198,12 @@ def run_case(contract: OpContract, case: Case, engine: str,
 
 _SORT_ENGINES = ("oets", "bitonic", "blocksort")
 
-# Padded comparator networks are NOT NaN-safe — discovered by this matrix:
-# a NaN compares false both ways, so a padding sentinel (+inf) can be left
-# stranded inside the sliced-back region while a real element stays in the
-# padding tail — silent data loss, not even a permutation. Only oets honors
-# the permutation contract (adjacent exchanges never move the inert padding
-# suffix left past real data). The hazard itself is pinned strict-xfail by
-# tests/test_conformance.py::test_nan_padding_hazard; ROADMAP tracks the
-# NaN-total-order comparator fix.
-_NAN_UNSAFE_ENGINES = ("bitonic", "blocksort")
-
-
-def _supports_sort(engine: str, mode: ExecutionMode, gen: str):
-    if gen == "nan" and engine in _NAN_UNSAFE_ENGINES:
-        return (f"padded {engine} loses elements under NaN (stranded "
-                "padding sentinels; quarantine NaNs first — hazard pinned "
-                "by test_nan_padding_hazard)")
-    return None
+# Every engine runs the nan generator now. Padded comparator networks used
+# to lose elements under NaN (a NaN compares false both ways, so a padding
+# sentinel could strand inside the sliced-back region — silent data loss);
+# the canonical order bits of ``kernels/lex.py`` place every NaN *below*
+# the all-ones padding sentinel, so the hazard is structurally gone.
+# tests/test_conformance.py::test_nan_padding_hazard pins the regression.
 
 
 def _sort_dtypes(gen: str) -> tuple:
@@ -278,7 +288,11 @@ def _run_sort_lex(case: Case, engine: str, mode: ExecutionMode) -> tuple:
 
 
 def _lexsort_all(lanes):
-    order = np.lexsort(tuple(reversed([np.asarray(l) for l in lanes])))
+    # lexsort over the canonical order-bit views (identity for integer
+    # lanes), so float lanes sort NaN-correctly — np.lexsort on raw floats
+    # would scatter NaN rows arbitrarily
+    order = np.lexsort(tuple(reversed([order_bits_view(np.asarray(l))
+                                       for l in lanes])))
     return tuple(np.asarray(l)[order] for l in lanes)
 
 
@@ -336,14 +350,24 @@ _MERGE_ENGINES = ("packed", "kernel", "lanes")
 
 def _merge_dtypes(gen: str) -> tuple:
     return {"random": ("int32", "float32"),
-            "sentinel": ("int32", "uint32")}.get(gen, ("int32",))
+            "sentinel": ("int32", "uint32"),
+            "nan": ("float32",)}.get(gen, ("int32",))
+
+
+def _ob_sort(x: np.ndarray) -> np.ndarray:
+    """Stable sort under the canonical order bits — the only host-side sort
+    that builds a *valid* merge input run out of NaN data (np.sort leaves
+    the NaN tail in arbitrary payload order, which breaks the order-bit
+    sortedness precondition when the all-ones sentinel pattern is among
+    the payloads)."""
+    return x[np.argsort(order_bits_view(x), kind="stable")]
 
 
 def _build_merge(gen: str, dtype: str) -> Case:
     rng = np.random.default_rng(_seed("merge", gen, dtype))
     na, nb = sorted_run_sizes(gen)
-    a = np.sort(fill_elements(gen, rng, na, dtype))
-    b = np.sort(fill_elements(gen, rng, nb, dtype))
+    a = _ob_sort(fill_elements(gen, rng, na, dtype))
+    b = _ob_sort(fill_elements(gen, rng, nb, dtype))
     return Case("merge_sorted", gen, dtype, (a, b))
 
 
@@ -356,7 +380,10 @@ def _run_merge(case: Case, engine: str, mode: ExecutionMode) -> tuple:
 
 
 def _oracle_merge(case: Case) -> tuple:
-    return (np.sort(np.concatenate(case.arrays)),)
+    # _ob_sort, not np.sort: numpy's vectorised float sort canonicalises
+    # NaN payloads and -0.0 signs (observed on numpy 2.0), which would
+    # corrupt the very bit multiset the NaN contract checks
+    return (_ob_sort(np.concatenate(case.arrays)),)
 
 
 def _build_merge_lex(gen: str, dtype: str) -> Case:
@@ -494,14 +521,13 @@ _register(OpContract(
     generators=("random", "dup_heavy", "sentinel", "nan", "skewed",
                 "empty", "singleton", "tile_boundary"),
     dtypes_for=_sort_dtypes, build=_build_sort, run=_run_sort,
-    oracle=_oracle_sort, supports=_supports_sort))
+    oracle=_oracle_sort))
 
 _register(OpContract(
     name="sort_kv", engines=_SORT_ENGINES,
     generators=("random", "dup_heavy", "sentinel", "nan", "singleton"),
     dtypes_for=lambda gen: ("float32",) if gen == "nan" else ("int32",),
-    build=_build_sort_kv, run=_run_sort_kv, oracle=_oracle_sort_kv,
-    supports=_supports_sort))
+    build=_build_sort_kv, run=_run_sort_kv, oracle=_oracle_sort_kv))
 
 _register(OpContract(
     name="sort_lex", engines=("lanes", "packed"),
@@ -517,14 +543,16 @@ _register(OpContract(
 
 _register(OpContract(
     name="merge_sorted", engines=_MERGE_ENGINES,
-    generators=_NO_NAN,
+    generators=("random", "dup_heavy", "sentinel", "nan", "skewed",
+                "empty", "singleton", "tile_boundary"),
     dtypes_for=_merge_dtypes, build=_build_merge, run=_run_merge,
     oracle=_oracle_merge))
 
 _register(OpContract(
     name="merge_sorted_lex", engines=_MERGE_ENGINES,
-    generators=_NO_NAN,
-    dtypes_for=_const_dtypes("uint32"),
+    generators=("random", "dup_heavy", "sentinel", "nan", "skewed",
+                "empty", "singleton", "tile_boundary"),
+    dtypes_for=lambda gen: ("float32",) if gen == "nan" else ("uint32",),
     build=_build_merge_lex, run=_run_merge_lex, oracle=_oracle_merge_lex))
 
 _register(OpContract(

@@ -13,15 +13,18 @@ broken) an engine in this repo's history:
                         (``iinfo.max`` / ``+inf``, plus ``iinfo.min`` /
                         ``-inf``): the exact class behind PR 3's
                         silent-data-loss fix;
-  * ``nan``           — float32 NaN payloads. The contract is *permutation
-                        only* (see ``kernels/ops.py``), checked as a
-                        bit-level multiset, not sorted order — and it holds
-                        only for ``oets``: building this matrix discovered
-                        that the padded engines (bitonic, blocksort) strand
-                        padding ``+inf`` inside the output and lose real
-                        elements when NaNs block comparator movement, so
-                        those cells skip-with-reason and the hazard is
-                        pinned strict-xfail in ``tests/test_conformance``;
+  * ``nan``           — float32 NaN payloads with distinct bit patterns
+                        (quiet/signalling, either sign, the all-ones
+                        sentinel pattern) plus ``-0.0``/``+0.0`` mixes.
+                        The contract is ``jnp.sort``-equivalent total order
+                        (see ``kernels/ops.py``): NaNs sink to the tail,
+                        the bit-level multiset is conserved exactly, and
+                        the output is non-decreasing under the canonical
+                        order bits — checked on *every* engine. (Building
+                        the first matrix discovered the padded engines
+                        losing elements under NaN; the total-order key
+                        plane of ``kernels/lex.py`` fixed it, and
+                        ``tests/test_conformance`` pins the regression);
   * ``skewed``        — heavy-tailed values / one dominant word length (the
                         capacity-pressure case of the bucket pipeline);
   * ``empty``         — n = 0 (no kernel launch; shape plumbing only);
@@ -62,9 +65,11 @@ def default_n(gen: str) -> int:
 
 
 def check_mode(gen: str) -> str:
-    """'exact' (bit-identical to the oracle) or 'permutation' (same
-    bit-level multiset; order unspecified — the NaN contract)."""
-    return "permutation" if gen == "nan" else "exact"
+    """'exact' (bit-identical to the oracle) or 'total_order' (bit-level
+    multiset conserved AND non-decreasing under the canonical order bits —
+    the ``jnp.sort``-equivalent NaN contract, where distinct NaN payloads
+    tie so their relative order is unspecified)."""
+    return "total_order" if gen == "nan" else "exact"
 
 
 def applicable(gen: str, dtype) -> bool:
@@ -91,6 +96,16 @@ def fill_elements(gen: str, rng: np.random.Generator, n: int,
             x[rng.random(n) < 0.10] = -np.inf
         elif gen == "nan":
             x[rng.random(n) < 0.15] = np.nan
+            # ±0.0 mixes: comparator-equal values with distinct bits
+            x[rng.random(n) < 0.10] = dtype.type(-0.0)
+            x[rng.random(n) < 0.10] = dtype.type(0.0)
+            if dtype.itemsize == 4:
+                # distinct NaN bit patterns: quiet/signalling, either sign,
+                # and the all-ones padding-sentinel pattern itself
+                pats = np.array([0x7FC00001, 0xFFC00000, 0x7F800001,
+                                 0xFFFFFFFF], np.uint32).view(np.float32)
+                mask = rng.random(n) < 0.10
+                x[mask] = pats[rng.integers(0, len(pats), int(mask.sum()))]
         elif gen == "skewed":
             x = np.where(rng.random(n) < 0.9, dtype.type(0.5),
                          (rng.normal(size=n) * 1e6).astype(dtype))

@@ -4,15 +4,17 @@ surface for the sort engine.
 Every registered (op, engine) of ``repro.testing.CONTRACTS`` runs under
 every execution mode the host offers (``repro.testing.modes``), over the
 canonical adversarial generator set (``repro.testing.generators``), and
-must be bit-identical to its NumPy oracle (bit-level multiset for the NaN
-permutation contract; capacity-parametric for bucketize). This replaces the
+must be bit-identical to its NumPy oracle (total-order for the NaN cells:
+bit-level multiset conserved AND sorted under the canonical order bits of
+``kernels/lex.py``; capacity-parametric for bucketize). This replaces the
 scattered one-off differentials that previously pinned each op in its own
 file — the deterministic core of ``test_differential.py`` now lives here.
 
 Unsupported combinations surface as skips with the contract's reason,
-never as silent re-runs; the two pin tests at the bottom keep the matrix
-honest (the packed rank-key routing really is exercised, and the known
-NaN padding hazard really is still a bug).
+never as silent re-runs; the pin tests at the bottom keep the matrix
+honest (the packed rank-key routing really is exercised, the NaN padding
+hazard stays fixed on every engine, and the matrix never shrinks back
+below the point where the NaN cells joined it).
 """
 
 import jax
@@ -97,14 +99,22 @@ def test_packed_lex_routing_is_honored():
 
 
 @pytest.mark.parametrize("engine", ["bitonic", "blocksort"])
-@pytest.mark.xfail(strict=True, reason=(
-    "known hazard, discovered by this matrix: padded comparator engines "
-    "strand padding +inf inside the output and lose real elements when "
-    "NaNs block comparator movement (kernels/ops.py NaN contract; ROADMAP: "
-    "NaN-total-order comparator). Fixing the engines flips this xfail "
-    "loudly — then remove it together with the _supports_sort skip."))
 def test_nan_padding_hazard(engine):
+    """Regression pin for the padded-engine NaN hazard (once a strict
+    xfail): a NaN used to compare false both ways against the +inf padding
+    sentinel, stranding padding inside the sliced-back region — silent
+    data loss. The canonical order bits of ``kernels/lex.py`` place every
+    NaN *below* the all-ones sentinel, so padded comparator engines now
+    meet the full total-order contract on NaN data."""
     contract = CONTRACTS["sort"]
     case = contract.build("nan", "float32")
     outputs = contract.run(case, engine, MODES[0])
-    assert_conforms(contract, case, outputs)  # bit-multiset: fails today
+    assert_conforms(contract, case, outputs)
+
+
+def test_matrix_never_shrinks():
+    """The NaN total-order work *grew* the matrix (merge ops gained the nan
+    generator; zero skip cells remain): 282 was the cell count before, and
+    any slide back under it means coverage was silently dropped."""
+    assert len(CELLS) > 282
+    assert sum(1 for c in CELLS if c[3] == "nan") >= 24

@@ -252,10 +252,61 @@ def test_sort_lex_packed_engine_overflow_falls_back():
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
-def test_sort_lex_float_lanes_stay_lanewise():
+def test_sort_lex_float_lane_routing():
+    """Float lanes route through the packed engine now (the order-bit
+    transform is total, so packed keys rank floats exactly; the sort
+    gathers the original lanes through the permutation to conserve NaN
+    payload bits). Routing rules pinned: packed only ever runs where it
+    *shrinks* the compare list, and an explicit request is honored."""
     from repro.kernels import choose_lex_engine
+    # 2 full-width lanes pack to 2 lanes — no shrink, auto stays lanes
     assert choose_lex_engine([jnp.float32, jnp.uint32]) == "lanes"
-    assert choose_lex_engine([jnp.float32], engine="packed") == "lanes"
+    # ... but an explicit packed request on a float tuple is honored
+    assert choose_lex_engine([jnp.float32], engine="packed") == "packed"
+    # 64 bits across 3 lanes: packed shrinks the list, auto takes it
+    assert choose_lex_engine([jnp.float32, jnp.int16, jnp.int16]) == "packed"
+
+
+def test_sort_lex_packed_float_conserves_nan_bits():
+    """The packed float path must return the *original* lanes (gathered
+    through the packed permutation), never an unpack — distinct NaN
+    payloads and -0.0 signs survive bit-for-bit while the order is the
+    canonical total order (NaNs above +inf, sentinel pattern maximal)."""
+    pats = np.array([0x7FC00001, 0xFFC00000, 0x7F800001, 0xFFFFFFFF],
+                    np.uint32).view(np.float32)
+    x = np.concatenate([np.array([1.5, -2.0, np.inf, -np.inf, -0.0, 0.0],
+                                 np.float32), pats])
+    rng = np.random.default_rng(_seed("packed-float-nan"))
+    x = x[rng.permutation(x.size)]
+    (out,) = sort_lex((jnp.asarray(x),), engine="packed")
+    out = np.asarray(out)
+    assert (sorted(out.view(np.uint32).tolist())
+            == sorted(x.view(np.uint32).tolist()))
+    want = sorted(range(x.size),
+                  key=lambda i: int(np.asarray(kp.bias_to_u32(
+                      jnp.asarray(x[i:i + 1])))[0]))
+    np.testing.assert_array_equal(out.view(np.uint32),
+                                  x[want].view(np.uint32))
+
+
+def test_bias_nan_canonical_order():
+    """The NaN slots of the canonical transform: every NaN above +inf, the
+    all-ones (padding sentinel) pattern strictly above the rest, all other
+    payloads collapsed to one slot, and -0.0 == +0.0."""
+    vals = np.array([0x7F800000,    # +inf
+                     0x7FC00000,    # quiet NaN
+                     0x7F800001,    # signalling NaN
+                     0xFFC00000,    # negative quiet NaN
+                     0xFFFFFFFF],   # all-ones: the float padding sentinel
+                    np.uint32).view(np.float32)
+    b = np.asarray(kp.bias_to_u32(jnp.asarray(vals)))
+    assert (b[1:] > b[0]).all(), "every NaN must sit above +inf"
+    assert b[1] == b[2] == b[3], "non-sentinel NaN payloads share one slot"
+    assert b[4] == np.uint32(0xFFFFFFFF) and (b[4] > b[1:4]).all(), \
+        "the sentinel pattern owns the strict maximum"
+    zb = np.asarray(kp.bias_to_u32(jnp.asarray(
+        np.array([-0.0, 0.0], np.float32))))
+    assert zb[0] == zb[1], "-0.0 and +0.0 must share order bits"
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ from repro.kernels import (choose_merge_engine, merge_runs_lex_pallas,
                            merge_sorted, merge_sorted_lex)
 from repro.kernels.lex import lex_merge_take
 from repro.pipeline import merge_runs, merge_two
+from repro.pipeline.validate import order_bits_view
 
 ENGINES = ["packed", "kernel", "lanes"]
 
@@ -83,6 +84,51 @@ def test_merge_sorted_key_only(engine):
                        block_size=128)
     np.testing.assert_array_equal(np.asarray(got),
                                   np.sort(np.concatenate([a, b])))
+
+
+def _nan_run(rng, n):
+    """A float32 run with NaN payload variety (quiet/signalling, either
+    sign, the all-ones sentinel pattern), ±inf and ±0.0, sorted under the
+    canonical order bits — np.sort cannot build this (numpy's vectorised
+    float sort canonicalises NaN payloads, and the raw order leaves the
+    NaN tail unsorted in order-bit space)."""
+    x = rng.normal(scale=4.0, size=n).astype(np.float32)
+    x[rng.random(n) < 0.2] = np.nan
+    x[rng.random(n) < 0.1] = np.float32(-0.0)
+    x[rng.random(n) < 0.1] = np.inf
+    x[rng.random(n) < 0.05] = -np.inf
+    pats = np.array([0x7FC00001, 0xFFC00000, 0x7F800001, 0xFFFFFFFF],
+                    np.uint32).view(np.float32)
+    mask = rng.random(n) < 0.15
+    x[mask] = pats[rng.integers(0, len(pats), int(mask.sum()))]
+    return x[np.argsort(order_bits_view(x), kind="stable")]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_merge_sorted_lex_nan_differential(engine):
+    """NaN/±inf/±0.0 differential: every engine agrees bit-for-bit with the
+    lane-wise oracle, conserves the input bit multiset (NaN payloads and
+    zero signs survive), and emits output sorted under the canonical order
+    bits — the jnp.sort-equivalent contract of ops.py."""
+    rng = np.random.default_rng(_seed("nan-merge", engine))
+    for na, nb in [(96, 80), (5, 96)]:
+        ka, kb = _nan_run(rng, na), _nan_run(rng, nb)
+        A = [jnp.asarray(ka), jnp.asarray(np.arange(na, dtype=np.int32))]
+        B = [jnp.asarray(kb), jnp.asarray(np.arange(nb, dtype=np.int32))]
+        got = merge_sorted_lex(A, B, engine=engine, block_size=128)
+        want = lex_merge_take(A, B)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(
+                np.asarray(g).view(np.uint32), np.asarray(w).view(np.uint32))
+        out = np.asarray(got[0])
+        assert (sorted(out.view(np.uint32).tolist()) ==
+                sorted(np.concatenate([ka, kb]).view(np.uint32).tolist()))
+        ob = order_bits_view(out).astype(np.int64)
+        assert np.all(np.diff(ob) >= 0), "merge output violates order bits"
+        # single-lane front-end rides the same plane
+        out1 = np.asarray(merge_sorted(jnp.asarray(ka), jnp.asarray(kb),
+                                       engine=engine, block_size=128))
+        assert np.all(np.diff(order_bits_view(out1).astype(np.int64)) >= 0)
 
 
 def test_merge_sorted_validation():

@@ -3,7 +3,9 @@
 Pins the sentinel / dtype contract documented in ``ops.py``: signed ints use
 the *positive* max as the padding sentinel, unsigned values at UINT32_MAX
 collide with the sentinel yet still sort correctly, floats handle ±inf, and
-NaN behavior (permutation-only, no total order) is pinned explicitly.
+the float NaN contract is ``jnp.sort``-equivalent: NaNs sink to the tail
+under the canonical total order of ``kernels/lex.py`` while the bit-level
+multiset is conserved exactly.
 
 Widths stay inside the single-tile OETS tier — dtype handling is identical
 across engines (same padding helpers, same comparator), and the cross-engine
@@ -30,7 +32,11 @@ def test_sentinel_signed_dtypes():
     s16 = np.asarray(_sentinel(jnp.int16))
     assert s16 == np.iinfo(np.int16).max and s16 > 0
     assert np.asarray(_sentinel(jnp.uint32)) == U32_MAX
-    assert np.asarray(_sentinel(jnp.float32)) == np.inf
+    # float sentinel: the all-ones-bits NaN — strictly above every value
+    # (including every other NaN) under the canonical order bits, so
+    # padding can never strand inside a row holding real NaNs
+    sf = np.asarray(_sentinel(jnp.float32))
+    assert sf.view(np.uint32) == np.uint32(0xFFFFFFFF)
 
 
 def test_sort_int32_negative_values():
@@ -69,19 +75,27 @@ def test_sort_float32_infinities():
     np.testing.assert_array_equal(np.asarray(out), np.sort(x, axis=-1))
 
 
-def test_sort_float32_nan_is_permutation_only():
-    """Pinned NaN contract (see ops.py): comparator networks are swap-based,
-    so the output is always a permutation of the input, but NaN compares
-    false against everything and acts as a barrier — the result is NOT
-    guaranteed sorted (unlike jnp.sort, which sinks NaNs to the tail).
-    Callers must quarantine NaNs before sorting."""
+def test_sort_float32_nan_total_order():
+    """Pinned NaN contract (see ops.py): ``jnp.sort``-equivalent. Engines
+    compare the canonical order bits of ``kernels/lex.py`` (every NaN above
+    ``+inf``) but swap the raw values, so NaNs sink to the tail — payload
+    bits and ``-0.0`` signs intact — and the bit-level multiset is
+    conserved exactly."""
     rng = np.random.default_rng(3)
     x = rng.normal(size=(64,)).astype(np.float32)
     x[10] = np.nan
+    x[20] = np.uint32(0x7F800001).view(np.float32)   # signalling NaN
+    x[30] = np.uint32(0xFFC00000).view(np.float32)   # negative quiet NaN
+    x[40] = np.float32(-0.0)
     out = np.asarray(sort(jnp.asarray(x)))
-    # multiset preserved, NaN count included
-    np.testing.assert_array_equal(np.sort(out), np.sort(x))
-    assert np.isnan(out).sum() == 1
+    # bit-level multiset conserved: payloads and zero signs survive
+    assert (sorted(out.view(np.uint32).tolist())
+            == sorted(x.view(np.uint32).tolist()))
+    # NaNs at the tail, non-NaN prefix sorted — jnp.sort agreement
+    assert np.isnan(out[-3:]).all() and not np.isnan(out[:-3]).any()
+    assert np.all(np.diff(out[:-3]) >= 0)
+    np.testing.assert_array_equal(np.isnan(out), np.isnan(np.asarray(
+        jnp.sort(jnp.asarray(x)))))
 
 
 @pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.float32])

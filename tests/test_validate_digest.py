@@ -16,8 +16,9 @@ import pytest
 
 from repro.pipeline.manifest import RunManifest
 from repro.pipeline.validate import (ValidationError, _mix, check_chunked,
-                                     check_multiset, check_run, keys_digest,
-                                     multiset_digest)
+                                     check_lanes_sorted, check_multiset,
+                                     check_run, keys_digest, multiset_digest,
+                                     order_bits_view)
 
 _M64 = (1 << 64) - 1
 _FNV_PRIME = 0x100000001B3
@@ -115,3 +116,55 @@ def test_crafted_pair_collides_with_empty_digest():
     assert (d_a + multiset_digest([np.array([v_b], np.uint64)])) == (1 << 64)
     with pytest.raises(ValidationError, match="count changed"):
         check_multiset([np.zeros(0, np.uint64)], pair)
+
+
+def test_float_digest_negative_zero_round_trip():
+    """An engine may legally return +0.0 where -0.0 went in (the canonical
+    order equates them): the digest must reconcile that swap instead of
+    flagging corruption, because it hashes the order-bits view — while a
+    *value* change of the same magnitude still trips it."""
+    a = np.array([-0.0, 1.5, -2.25, 0.0, -0.0], np.float32)
+    swapped = a.copy()
+    swapped[[0, 4]] = np.float32(0.0)  # -0.0 -> +0.0, bitwise different
+    assert a.view(np.uint32).tolist() != swapped.view(np.uint32).tolist()
+    assert multiset_digest([a]) == multiset_digest([swapped])
+    check_multiset([a], [swapped])  # must not raise
+    altered = a.copy()
+    altered[1] = np.float32(1.5000001)
+    assert multiset_digest([a]) != multiset_digest([altered])
+
+
+def test_check_lanes_sorted_rejects_nan_out_of_tail():
+    """A raw float compare decides nothing against NaN, so a NaN stranded
+    mid-run would sail through a naive check — the order-bits view makes it
+    a hard failure, and a NaN-tailed run passes."""
+    check_lanes_sorted([np.array([-np.inf, -0.0, 0.0, 2.5, np.inf, np.nan,
+                                  np.nan], np.float32)])
+    with pytest.raises(ValidationError, match="not sorted"):
+        check_lanes_sorted([np.array([1.0, np.nan, 2.0], np.float32)])
+
+
+def test_order_bits_view_matches_jax_transform():
+    """Differential pin: the numpy mirror and ``kernels.lex.to_order_bits``
+    are the same function, bit for bit, over an adversarial float32 set
+    (±0.0, ±inf, every NaN payload class, the sentinel pattern). Denormals
+    are excluded by design: XLA flushes them to zero in compares (the jax
+    transform follows its backend; the numpy mirror follows IEEE), the one
+    documented divergence between the two runtimes."""
+    import jax.numpy as jnp
+
+    from repro.kernels.lex import to_order_bits
+
+    vals = np.array([0x00000000, 0x80000000,   # +/- 0.0
+                     0x3F800000, 0xBF800000,   # +/- 1.0
+                     0x7F7FFFFF, 0xFF7FFFFF,   # +/- max finite
+                     0x7F800000, 0xFF800000,   # +/- inf
+                     0x7FC00000, 0xFFC00000,   # quiet NaNs
+                     0x7F800001, 0xFF800001,   # signalling NaNs
+                     0xFFFFFFFF],              # the padding sentinel
+                    np.uint32).view(np.float32)
+    rng = np.random.default_rng(11)
+    vals = np.concatenate([vals, rng.normal(size=64).astype(np.float32)])
+    np.testing.assert_array_equal(
+        order_bits_view(vals),
+        np.asarray(to_order_bits(jnp.asarray(vals))))
