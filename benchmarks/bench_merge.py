@@ -1,7 +1,7 @@
 """Merge-tier benchmarks: packed rank-key run merges vs the lane-wise
 broadcast baseline, and the Pallas merge-path run kernel vs the jnp combine.
 
-Three sweeps, all appended to the BENCH_kernels.json trajectory by
+Four sweeps, all appended to the BENCH_kernels.json trajectory by
 benchmarks/run.py:
 
   * ``merge/lanes/*`` vs ``merge/packed/*`` — the acceptance axis: the
@@ -16,8 +16,17 @@ benchmarks/run.py:
     its wall clock is the interpreter's; the tracked signal is the
     packed-vs-lanes ratio trend, with the kernel row recorded for the TPU
     roofline.
+  * ``merge/tournament/*`` vs ``merge/kway/*`` — the PR 9 acceptance axis:
+    ``pipeline.merge.merge_runs`` with the legacy pairwise tournament
+    (ceil(log2 k) full passes) against the one-launch streaming k-way merge
+    (one pass for any k) at k in {4, 8, 16} over a fixed total n. The k >= 8
+    rows at the largest n are where the single-pass win must show.
 
 ``BENCH_MERGE_TINY=1`` (CI smoke) shrinks sizes to compile-bound minimums.
+``BENCH_MERGE_SMOKE=1`` runs ONLY the k-way sweep at tiny sizes and asserts
+every engine (kway, kway_kernel, tournament) bit-identical to the NumPy
+lexsort oracle before emitting — the CI correctness smoke for the
+streaming-merge rows.
 """
 
 from __future__ import annotations
@@ -31,14 +40,18 @@ import numpy as np
 
 from repro.kernels.lex import lex_merge_take
 from repro.kernels.ops import merge_sorted_lex
+from repro.pipeline.merge import merge_runs
 
 from .common import emit, rng as bench_rng, timeit
 
 _TINY = bool(int(os.environ.get("BENCH_MERGE_TINY", "0")))
+_SMOKE = bool(int(os.environ.get("BENCH_MERGE_SMOKE", "0")))
 
 _NS = [256] if _TINY else [1024, 4096]
 _LANES = [2, 4] if _TINY else [1, 2, 4, 5]
 _KERNEL_BLOCK = 128 if _TINY else 256
+_KWAY_KS = [4, 8] if (_TINY or _SMOKE) else [4, 8, 16]
+_KWAY_TOTAL = 256 if (_TINY or _SMOKE) else 4096
 
 
 @functools.partial(jax.jit, static_argnames=("n_arr",))
@@ -98,9 +111,39 @@ def kernel_vs_jnp_combine():
                  f"{t_packed / t_kernel:.2f}x")
 
 
+def kway_vs_tournament(check: bool = False):
+    rng = bench_rng("bench_merge", 2)
+    n_lanes = 3
+    for k in _KWAY_KS:
+        n = _KWAY_TOTAL // k
+        runs = [_sorted_run(rng, n, n_lanes, 2**32) for _ in range(k)]
+        if check:
+            flat = [np.concatenate([np.asarray(r[i]) for r in runs])
+                    for i in range(n_lanes)]
+            order = np.lexsort(tuple(reversed(flat)))
+            expect = [lane[order] for lane in flat]
+            for engine in ("kway", "kway_kernel", "tournament"):
+                got = merge_runs(runs, engine=engine, block_size=128)
+                for g, e in zip(got, expect):
+                    np.testing.assert_array_equal(np.asarray(g), e)
+        t_tour = timeit(lambda: merge_runs(runs, engine="tournament"),
+                        iters=3)
+        t_kway = timeit(lambda: merge_runs(runs, engine="kway"), iters=3)
+        emit(f"merge/tournament/k{k}/n{k * n}", t_tour * 1e6,
+             "pairwise tree, ceil(log2 k) full passes")
+        emit(f"merge/kway/k{k}/n{k * n}", t_kway * 1e6,
+             f"one-launch streaming;vs_tournament={t_tour / t_kway:.2f}x")
+
+
 def main():
+    if _SMOKE:
+        # correctness-first CI smoke: every engine against the NumPy
+        # oracle, then the (tiny, compile-bound) timing rows
+        kway_vs_tournament(check=True)
+        return
     packed_vs_lanes()
     kernel_vs_jnp_combine()
+    kway_vs_tournament()
 
 
 if __name__ == "__main__":

@@ -63,9 +63,11 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
-from ..kernels.keypack import merge_take_packed, packed_searchsorted
+from ..kernels.keypack import (lex_searchsorted, merge_take_packed,
+                               packed_searchsorted)
 from ..kernels.ops import _sentinel
 from ..parallel.compat import axis_size
 from .bitonic import bitonic_merge, bitonic_merge_lex
@@ -75,6 +77,7 @@ __all__ = [
     "odd_even_block_sort", "odd_even_block_sort_lex",
     "sample_sort", "sample_sort_lex", "sample_sort_exact", "SampleSortResult",
     "distributed_sort", "distributed_sort_kv", "distributed_sort_lex",
+    "distributed_chunked_sort_lex",
 ]
 
 log = logging.getLogger("repro.core")
@@ -618,3 +621,206 @@ def distributed_sort_kv(keys, vals, mesh, axis: str = "data",
                                      engine=engine, merge=merge,
                                      local_sort=local_sort)
     return lanes[0], ov
+
+
+# --------------------------------------------------------------------------
+# out-of-core: chunk-per-device ingest + run exchange + streaming combine
+# --------------------------------------------------------------------------
+
+def _chunk_devices(mesh, axis, devices):
+    if devices is not None:
+        return list(devices)
+    if mesh is not None:
+        # the mesh's devices in axis-major flat order (1-D meshes: the ring)
+        return list(np.asarray(mesh.devices).reshape(-1))
+    return list(jax.devices())
+
+
+def _run_splitters(cmp_runs, num: int, oversample: int):
+    """Global splitter tuples for a ``num``-way partition of k sorted runs:
+    evenly spaced per-run quantile samples of the compare lanes, pooled and
+    lex-sorted host-side (uint32 compare lanes — a few k*oversample rows),
+    then ``num - 1`` evenly spaced picks. The splitters only steer *balance*;
+    correctness never depends on them because the per-run boundaries are
+    exact searchsorted positions."""
+    samples = [[] for _ in cmp_runs[0]]
+    for cmp_r in cmp_runs:
+        n_r = int(cmp_r[0].shape[0])
+        if n_r == 0:
+            continue
+        pos = np.minimum(np.arange(oversample) * max(1, n_r // oversample),
+                         n_r - 1)
+        for i, lane in enumerate(cmp_r):
+            samples[i].append(np.asarray(lane)[pos])
+    pooled = [np.concatenate(s) for s in samples]
+    order = np.lexsort(tuple(reversed(pooled)))
+    pooled = [p[order] for p in pooled]
+    take = [(d + 1) * len(order) // num for d in range(num - 1)]
+    return [jnp.asarray(p[take]) for p in pooled]
+
+
+def distributed_chunked_sort_lex(keys, mesh=None, axis: str = "data",
+                                 devices=None, algorithm: str = "pallas",
+                                 capacity: int | None = None,
+                                 store=None, supervisor=None,
+                                 validate: str = "off",
+                                 on_overflow: str = "raise",
+                                 merge_engine: str = "auto",
+                                 oversample: int = 8):
+    """Out-of-core mesh sort of packed shortlex words — the MPI follow-up's
+    bucket->distribute->merge-across-ranks shape composed from the pipeline
+    and kernel tiers, host-orchestrated over explicit device placement (so
+    it runs identically on a TPU mesh and on fake CPU devices):
+
+      1. **chunk-per-device ingest**: row-shard ``keys`` into one chunk per
+         device, ``device_put`` each onto its device, and run the fused
+         per-chunk bucketize + segmented-sort (``pipeline.ingest``'s
+         ``_ingest_chunk`` — PR 6's ``RunStore`` resume, manifests, and
+         ``on_overflow`` forward untouched) to get local ``SortedRun``s.
+      2. **one exact-count sample-sort exchange of whole runs** (supervisor
+         stage ``'run_exchange'``): splitters come from pooled per-run
+         quantile samples; each run's destination boundaries are *exact*
+         ``lex_searchsorted`` positions over its packed compare lanes, so
+         destination d receives precisely its key range as k contiguous
+         sorted sub-runs — counts derive from the boundaries, never from
+         sentinel comparisons, and nothing can be silently lost.
+      3. **streaming combine** (stage ``'streaming_combine'`` inside
+         ``pipeline.merge.merge_runs``): each destination merges its k
+         sub-runs in ONE k-way pass (``kernels/kway_kernel.py``); the
+         concatenation of destinations in order is the global sort.
+
+    ``keys``: packed (n, lanes) uint32 words, host or device. Devices come
+    from ``devices`` (explicit list), else ``mesh``'s flat device order,
+    else all local devices. ``capacity`` bounds each destination's combine
+    input; ``on_overflow`` is then the degrade policy — 'raise'
+    (``CapacityOverflow`` with the required size), 'retry' (double until it
+    fits; always terminates at the worst-case destination count), or 'clip'
+    (each overflowing destination keeps its ``capacity`` smallest elements,
+    with a warning; conservation checks are skipped for the clipped
+    output). ``validate``: 'off' | 'cheap' | 'full' — the PR 6 gate
+    (``pipeline.validate.check_chunked``: per-run manifest reconciliation +
+    count/histogram/sortedness conservation, 'full' adds content digests)
+    applied across ingest, exchange, and combine end to end.
+
+    Returns the globally sorted :class:`~repro.pipeline.ingest.SortedRun`.
+    """
+    from ..pipeline.ingest import SortedRun, _ingest_chunk
+    from ..pipeline.merge import merge_runs
+    from ..pipeline.validate import check_chunked, check_lanes_sorted
+    from ..runtime.failure import CapacityOverflow
+    if on_overflow not in ("raise", "retry", "clip"):
+        raise ValueError(f"unknown on_overflow policy {on_overflow!r}")
+    if validate not in ("off", "cheap", "full"):
+        raise ValueError("validate must be one of ('off', 'cheap', 'full')")
+    devs = _chunk_devices(mesh, axis, devices)
+    num = len(devs)
+    if not isinstance(keys, jax.Array):
+        keys = np.asarray(keys, dtype=np.uint32)
+    n = int(keys.shape[0])
+    if n == 0:
+        return SortedRun(lengths=jnp.zeros((0,), jnp.int32),
+                         keys=jnp.zeros(keys.shape, jnp.uint32))
+    b = -(-n // num)
+
+    # 1. chunk-per-device ingest (resume/manifests/overflow via the
+    # pipeline's own chunk stage)
+    runs, manifests = [], []
+    for d, start in enumerate(range(0, n, b)):
+        chunk = jax.device_put(keys[start:start + b], devs[d])
+        run, man = _ingest_chunk(
+            chunk, d, algorithm=algorithm, capacity=int(chunk.shape[0]),
+            on_overflow=on_overflow, store=store, supervisor=supervisor,
+            need_manifest=validate != "off")
+        runs.append(run)
+        manifests.append(man)
+
+    lanes_rs = [r.lanes() for r in runs]
+    cmp_rs = [r.cmp_lanes() for r in runs]
+
+    # 2. exact-count exchange of whole sorted sub-runs
+    def exchange(oversample):
+        if num == 1 or len(runs) == 1:
+            bnds = [jnp.asarray([0, int(r[0].shape[0])] + [int(
+                r[0].shape[0])] * (num - 1), jnp.int32) for r in lanes_rs]
+        else:
+            splitters = _run_splitters(cmp_rs, num, oversample)
+            bnds = []
+            for cmp_r, r in zip(cmp_rs, lanes_rs):
+                pos = lex_searchsorted(cmp_r, splitters, side="right")
+                n_r = jnp.asarray([int(r[0].shape[0])], jnp.int32)
+                bnds.append(jnp.concatenate(
+                    [jnp.zeros((1,), jnp.int32),
+                     pos.astype(jnp.int32), n_r]))
+        bnds = [[int(x) for x in bnd] for bnd in bnds]
+        per_dest = []
+        for d in range(num):
+            dev = devs[d % len(devs)]
+            sub_lanes, sub_cmps = [], []
+            for bnd, lanes, cmps in zip(bnds, lanes_rs, cmp_rs):
+                lo, hi = bnd[d], bnd[d + 1]
+                if hi <= lo:
+                    continue
+                sub_lanes.append(tuple(jax.device_put(x[lo:hi], dev)
+                                       for x in lanes))
+                sub_cmps.append(tuple(jax.device_put(c[lo:hi], dev)
+                                      for c in cmps))
+            per_dest.append((sub_lanes, sub_cmps))
+        return per_dest
+
+    while True:
+        if supervisor is not None:
+            per_dest = supervisor.run_stage("run_exchange", exchange,
+                                            oversample)
+        else:
+            per_dest = exchange(oversample)
+        incoming = [sum(int(s[0].shape[0]) for s in sub) if sub else 0
+                    for sub, _ in per_dest]
+        worst = max(incoming) if incoming else 0
+        if capacity is None or worst <= capacity:
+            clipped = False
+            break
+        if on_overflow == "raise":
+            raise CapacityOverflow(
+                f"run exchange: destination needs {worst} > capacity "
+                f"{capacity}", capacity, required=worst)
+        if on_overflow == "clip":
+            clipped = True
+            break
+        # retry rebalances as well as grows: denser samples usually shrink
+        # the worst destination, and the capacity doubling guarantees the
+        # loop terminates even under unsplittable skew (duplicate keys)
+        new_cap = min(capacity * 2, n)
+        log.warning("run exchange overflow (worst destination %d): "
+                    "capacity %d -> %d, oversample %d -> %d (retry)",
+                    worst, capacity, new_cap, oversample, oversample * 2)
+        capacity = new_cap
+        oversample *= 2
+
+    # 3. one streaming k-way combine per destination, concatenated in order
+    merged_dests = []
+    for d, (sub_lanes, sub_cmps) in enumerate(per_dest):
+        if not sub_lanes:
+            continue
+        merged = merge_runs(sub_lanes, engine=merge_engine,
+                            cmp_runs=sub_cmps, supervisor=supervisor)
+        if clipped and incoming[d] > capacity:
+            log.warning("run exchange overflow: destination %d clipped "
+                        "%d element(s) past capacity %d", d,
+                        incoming[d] - capacity, capacity)
+            merged = tuple(x[:capacity] for x in merged)
+        merged_dests.append(merged)
+    arity = len(lanes_rs[0])
+    # destinations live on their own devices; the host-facing result gathers
+    # onto the default device (committed arrays never concatenate across)
+    home = jax.devices()[0]
+    out = tuple(jnp.concatenate([jax.device_put(m[i], home)
+                                 for m in merged_dests])
+                for i in range(arity))
+    result = SortedRun.from_lanes(out)
+
+    if validate != "off":
+        if clipped:
+            check_lanes_sorted(out, what="distributed_chunked output")
+        else:
+            check_chunked(runs, manifests, result, mode=validate)
+    return result

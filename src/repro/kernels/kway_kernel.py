@@ -1,0 +1,304 @@
+"""Pallas TPU kernel: ONE-launch streaming k-way merge of sorted runs.
+
+``pipeline/merge.py``'s tournament combines k runs in ceil(log2 k) pairwise
+rounds — every round is a full pass over all the data, so the combine costs
+~log2(k)x the HBM traffic of a single streaming pass (the multi-way merge
+payoff the parallel-sorting survey calls out, and the merge profile of the
+authors' MPI follow-up). This module collapses the combine to one launch:
+
+  1. **k-way diagonal split** (:func:`kway_ranks`, host jnp inside the same
+     jit): the merge-path ranks come from a *key tournament* — ceil(log2 k)
+     pairwise rank-merge rounds (``keypack.merge_take_packed``) over the
+     packed compare lanes plus a source-index lane, then one inverse-
+     permutation scatter. Only the 1-3 compare lanes ever move through the
+     rounds (the data lanes move exactly once, later), and the round count
+     keeps the search total at O(k) binary searches — the naive all-pairs
+     split is O(k^2) searches and collapses the XLA graph past k ~ 8. Ties
+     resolve by run index (lower run wins, the a-before-b protocol of
+     ``merge_take_packed`` applied along the tree), so the ranks are exactly
+     a permutation of ``[0, total)``. One ``searchsorted`` of
+     each run's ranks over the block boundaries turns them into per-block
+     segment cursors — and unlike ``runmerge_kernel.py``, those cursors ride
+     into the kernel as the scalar-prefetch operand of a
+     ``PrefetchScalarGridSpec``: the split is consumed *in-kernel* from SMEM,
+     there is no host-side gather/scatter of the data lanes at all.
+  2. **2-slot double-buffered segment DMA**: each grid step starts the async
+     copies for output block ``k+1`` into the alternate scratch slot before
+     waiting on block ``k``'s, so the k segment fetches for the next block
+     overlap the merge network of the current one and HBM latency hides
+     behind compute.
+  3. **Block-granularity loser tree**: the per-run cursor state lives in
+     SMEM (the prefetched starts matrix); selection runs as a pairwise
+     elimination tree over the k resident VMEM segments — each round merges
+     two block-sorted windows with ``merge_kernel._merge_network`` and
+     keeps the low ``block`` (the "winners"), so after ceil(log2 k) rounds
+     the surviving window IS the output block. Tails mask to the lex-maximal
+     sentinel tuple, which keeps every window sorted and makes fills
+     interchangeable with sentinel-valued real elements — the output is
+     bit-identical to the NumPy/tournament oracle.
+
+Variadic over lex lane tuples like every engine here (lane 0 most
+significant, trailing lanes payload tie-breaks). ``n_cmp`` ranks the split
+on pre-packed leading compare lanes only; callers must pass a compare
+prefix that is an order-preserving refinement of the full tuple (equal
+prefix => equal tuple), which the pipeline's exact packings guarantee.
+
+:func:`merge_runs_kway_take` is the jnp tier of the same contract: off-TPU
+there is no DMA pipeline to hide latency behind, so op count is what rules —
+ONE fused ``lax.sort`` over the canonical order bits of the 1-3 compare
+lanes (+ an iota lane whose stable order encodes the run-index tie protocol)
+yields the merge permutation in a single dispatch, then ONE gather per lane.
+The data lanes move exactly once, versus the tournament's log2(k) passes of
+~k separate jits over every lane. That is the engine
+``ops.merge_runs_lex`` routes to off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .keypack import merge_take_packed, packed_cmp_lanes
+from .lex import sentinel_for, to_order_bits
+from .merge_kernel import _merge_network
+
+__all__ = ["DEFAULT_KWAY_BLOCK", "kway_ranks", "merge_runs_kway_take",
+           "merge_runs_kway_pallas", "merge_kway_pallas"]
+
+# one output tile per grid step; 2 slots x k segments of every lane in VMEM
+DEFAULT_KWAY_BLOCK = 256
+
+
+def kway_ranks(cmp_runs):
+    """Merge-path rank of every element of every sorted run: a list of int32
+    arrays (one per run) that together form a permutation of ``[0, total)``.
+
+    ``cmp_runs[r]`` is run r's compare-lane tuple. Compare-equal elements
+    order by run index (then by in-run index), so the ranks collide nowhere.
+
+    Computed as a key tournament: each run carries its flat source index as
+    a payload lane, adjacent pairs rank-merge (``merge_take_packed``,
+    a-before-b — the lower run index is always the left operand, so the tie
+    protocol composes along the tree) until one key sequence remains, and
+    the final ranks are its inverse permutation. ceil(log2 k) rounds moving
+    only the compare lanes + one int32 lane — O(k) binary searches total,
+    where ranking every run against every other would pay O(k^2)."""
+    cmp_runs = [list(c) for c in cmp_runs]
+    ns = [c[0].shape[0] for c in cmp_runs]
+    bases, off = [], 0
+    for n_r in ns:
+        bases.append(off)
+        off += n_r
+    total = off
+    if len(cmp_runs) == 1:
+        return [jnp.arange(total, dtype=jnp.int32)]
+    nc = len(cmp_runs[0])
+    ext = [c + [base + jnp.arange(n_r, dtype=jnp.int32)]
+           for c, base, n_r in zip(cmp_runs, bases, ns)]
+    while len(ext) > 1:
+        nxt = [merge_take_packed(ext[j], ext[j + 1], n_cmp=nc)
+               for j in range(0, len(ext) - 1, 2)]
+        if len(ext) % 2:
+            nxt.append(ext[-1])
+        ext = nxt
+    src = ext[0][nc]
+    ranks_flat = jnp.zeros((total,), jnp.int32).at[src].set(
+        jnp.arange(total, dtype=jnp.int32), unique_indices=True)
+    return [ranks_flat[b:b + n_r] for b, n_r in zip(bases, ns)]
+
+
+def _cmp_runs(runs, n_cmp, max_values):
+    if n_cmp is None:
+        return [packed_cmp_lanes(list(r), max_values) for r in runs]
+    return [tuple(r[:n_cmp]) for r in runs]
+
+
+def merge_runs_kway_take(runs, n_cmp=None, max_values=None):
+    """jnp k-way merge: ONE fused key sort + ONE gather per lane (a single
+    data pass; the tournament re-gathers every lane log2(k) times).
+
+    The merge permutation comes from a stable ``lax.sort`` of the
+    concatenated compare lanes — each mapped through ``lex.to_order_bits``
+    so unsigned sort order IS the canonical lex order (floats included:
+    ``-0.0`` collapses onto ``+0.0`` and every NaN onto the canonical slot
+    above ``+inf``, exactly the comparator the oracle uses) — with an iota
+    lane riding along: stable ties keep concatenation order, which is run
+    index then in-run index, the k-way tie protocol. One fused sort op
+    beats any unrolled O(k) graph of binary-search rounds off-TPU, where
+    per-op dispatch dominates. Traceable; runs are sequences of equal-arity
+    lane tuples, any lengths."""
+    runs = [list(r) for r in runs]
+    cmp_runs = _cmp_runs(runs, n_cmp, max_values)
+    nc = len(cmp_runs[0])
+    total = sum(r[0].shape[0] for r in runs)
+    keys = tuple(to_order_bits(jnp.concatenate([c[i] for c in cmp_runs]))
+                 for i in range(nc))
+    src = jnp.arange(total, dtype=jnp.int32)
+    perm = lax.sort(keys + (src,), num_keys=nc, is_stable=True)[-1]
+    return tuple(jnp.concatenate([r[i] for r in runs])[perm]
+                 for i in range(len(runs[0])))
+
+
+def _kway_kernel(starts_ref, *refs, n_arr, n_runs, block):
+    in_refs = refs[:n_arr]
+    out_refs = refs[n_arr:2 * n_arr]
+    scr = refs[2 * n_arr:3 * n_arr]
+    sem = refs[3 * n_arr]
+    k = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    # starts_ref[r, j] is the ABSOLUTE offset of run r's segment for output
+    # block j inside the flat (run || sentinel-pad) concatenation, so the
+    # segment count is the plain difference and every read stays in bounds.
+    def stage(blk, slot):
+        for i in range(n_arr):
+            for r in range(n_runs):
+                pltpu.make_async_copy(
+                    in_refs[i].at[:, pl.ds(starts_ref[r, blk], block)],
+                    scr[i].at[pl.ds(slot * n_runs + r, 1), :],
+                    sem.at[slot, i, r]).start()
+
+    # 2-slot double buffer: block k+1's k segment DMAs start into the
+    # alternate slot before this block's are awaited, so the fetches for the
+    # next block run under this block's merge network.
+    slot = lax.rem(k, 2)
+
+    @pl.when(k == 0)
+    def _():
+        stage(0, 0)
+
+    @pl.when(k + 1 < nb)
+    def _():
+        stage(k + 1, lax.rem(k + 1, 2))
+
+    for i in range(n_arr):
+        for r in range(n_runs):
+            pltpu.make_async_copy(
+                in_refs[i].at[:, pl.ds(starts_ref[r, k], block)],
+                scr[i].at[pl.ds(slot * n_runs + r, 1), :],
+                sem.at[slot, i, r]).wait()
+
+    # Resident segments, tails masked to the lex-maximal sentinel tuple so
+    # every window is sorted ascending and fills sink past real elements.
+    col = lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    segs = []
+    for r in range(n_runs):
+        cnt = starts_ref[r, k + 1] - starts_ref[r, k]
+        segs.append(tuple(
+            jnp.where(col < cnt, scr[i][pl.ds(slot * n_runs + r, 1), :],
+                      sentinel_for(scr[i].dtype))
+            for i in range(n_arr)))
+
+    # Loser tree at block granularity: pairwise elimination rounds; each
+    # keeps the low `block` of an asc++asc merge. Real (non-fill) elements
+    # of this output block number <= block in total, so no round's
+    # truncation can drop one (anything truncated is sentinel fill or
+    # interchangeable with it).
+    while len(segs) > 1:
+        nxt = []
+        for j in range(0, len(segs) - 1, 2):
+            cat = tuple(jnp.concatenate([a, b], axis=1)
+                        for a, b in zip(segs[j], segs[j + 1]))
+            nxt.append(tuple(m[:, :block]
+                             for m in _merge_network(cat, block)))
+        if len(segs) % 2:
+            nxt.append(segs[-1])
+        segs = nxt
+    for ref, m in zip(out_refs, segs[0]):
+        ref[...] = m
+
+
+@functools.partial(jax.jit, static_argnames=("n_arr", "n_runs", "n_cmp",
+                                             "max_values", "block",
+                                             "interpret"))
+def _kway_merge_jit(*arrs, n_arr, n_runs, n_cmp, max_values, block,
+                    interpret):
+    runs = [list(arrs[r * n_arr:(r + 1) * n_arr]) for r in range(n_runs)]
+    ns = [r[0].shape[0] for r in runs]
+    total = sum(ns)
+    nblocks = -(-total // block)
+
+    ranks = kway_ranks(_cmp_runs(runs, n_cmp, max_values))
+    bounds = jnp.arange(nblocks + 1, dtype=jnp.int32) * block
+    # flat layout: run r's lane at [base_r, base_r + ns[r]), then `block`
+    # sentinel fill slots — every segment DMA reads a full in-bounds window.
+    bases, off = [], 0
+    for n_r in ns:
+        bases.append(off)
+        off += n_r + block
+    starts = jnp.stack([
+        jnp.int32(bases[r])
+        + jnp.searchsorted(ranks[r], bounds, side="left").astype(jnp.int32)
+        for r in range(n_runs)])
+    flat = [jnp.concatenate(
+        [jnp.concatenate([run[i], jnp.full((block,),
+                                           sentinel_for(run[i].dtype),
+                                           run[i].dtype)])
+         for run in runs])[None, :] for i in range(n_arr)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * n_arr,
+        out_specs=tuple(pl.BlockSpec((1, block), lambda k, s: (0, k))
+                        for _ in range(n_arr)),
+        scratch_shapes=[pltpu.VMEM((2 * n_runs, block), x.dtype)
+                        for x in runs[0]]
+        + [pltpu.SemaphoreType.DMA((2, n_arr, n_runs))],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kway_kernel, n_arr=n_arr, n_runs=n_runs,
+                          block=block),
+        out_shape=tuple(jax.ShapeDtypeStruct((1, nblocks * block),
+                                             runs[0][i].dtype)
+                        for i in range(n_arr)),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(starts, *flat)
+    return tuple(o[0, :total] for o in out)
+
+
+def merge_runs_kway_pallas(runs, n_cmp=None, max_values=None,
+                           block: int | None = None,
+                           interpret: bool = False):
+    """Merge k sorted lex-tuple runs (sequences of equal-arity tuples of
+    parallel 1-D arrays, any lengths) in ONE kernel launch.
+
+    ``n_cmp``: rank the split on the leading pre-packed compare lanes
+    (``None`` packs rank keys from all lanes here); ``max_values``: per-lane
+    bounds for that packing (hashable tuple). ``block`` must be a power of
+    two >= 128. Empty runs drop host-side (static shapes); k == 1 returns
+    the run as-is. VMEM holds 2*k segments per lane — practical k is a few
+    dozen; past that, chunk the combine."""
+    runs = [tuple(r) for r in runs]
+    if max_values is not None:
+        max_values = tuple(max_values)  # static under jit: must be hashable
+    if not runs or not runs[0] or any(len(r) != len(runs[0]) for r in runs):
+        raise ValueError("runs must share a non-zero lane arity")
+    if any(x.ndim != 1 for r in runs for x in r):
+        raise ValueError("runs must be tuples of 1-D arrays")
+    block = DEFAULT_KWAY_BLOCK if block is None else block
+    if block < 128 or block & (block - 1):
+        raise ValueError("block must be a power of two >= 128")
+    nonempty = [r for r in runs if r[0].shape[0]]
+    if not nonempty:
+        return runs[0]
+    if len(nonempty) == 1:
+        return nonempty[0]
+    return _kway_merge_jit(*[x for r in nonempty for x in r],
+                           n_arr=len(runs[0]), n_runs=len(nonempty),
+                           n_cmp=n_cmp, max_values=max_values, block=block,
+                           interpret=interpret)
+
+
+def merge_kway_pallas(runs, block: int | None = None,
+                      interpret: bool = False):
+    """Key-only special case of :func:`merge_runs_kway_pallas`."""
+    (out,) = merge_runs_kway_pallas([(r,) for r in runs], block=block,
+                                    interpret=interpret)
+    return out

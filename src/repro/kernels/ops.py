@@ -89,12 +89,14 @@ from .keypack import (merge_take_packed, pack_rank_keys, plan_pack,
 from .lex import lex_merge_take, sentinel_for
 from .oets_kernel import oets_rows_lex_pallas
 from .partition_kernel import partition_rows_pallas
+from .kway_kernel import merge_runs_kway_pallas, merge_runs_kway_take
 from .runmerge_kernel import DEFAULT_MERGE_BLOCK, merge_runs_lex_pallas
 
 __all__ = ["sort", "sort_kv", "sort_lex", "segmented_sort", "distribute",
            "bucketize", "BucketizeResult", "scatter_to_buckets",
            "choose_plan", "choose_lex_engine",
            "merge_sorted", "merge_sorted_lex", "choose_merge_engine",
+           "merge_runs_lex", "choose_kway_engine",
            "pallas_lowering", "execution_provenance",
            "sort_rows", "sort_rows_kv", "sort_rows_lex", "partition_rows"]
 
@@ -408,11 +410,17 @@ def merge_sorted_lex(a_lanes, b_lanes, engine: str = "auto",
     bit-identical to ``lex_merge_take`` across engines. ``engine``: 'packed'
     (rank-key searchsorted ranks + one scatter), 'kernel' (the block-parallel
     Pallas merge-path kernel), 'lanes' (the broadcast oracle), or 'auto'
-    (:func:`choose_merge_engine`). ``n_cmp``: the leading ``n_cmp`` lanes
-    are pre-packed compare lanes to rank on as-is (see
-    ``keypack.merge_take_packed``); ``max_values``: per-lane packing bounds
-    (hashable tuple).
+    (:func:`choose_merge_engine`). 'kway' routes the pair through the k-way
+    front-end :func:`merge_runs_lex` (its 2-run case — one key-sort +
+    gather pass or the streaming kernel per :func:`choose_kway_engine`).
+    ``n_cmp``: the leading ``n_cmp`` lanes are pre-packed compare lanes to
+    rank on as-is (see ``keypack.merge_take_packed``); ``max_values``:
+    per-lane packing bounds (hashable tuple).
     """
+    if engine == "kway":
+        return merge_runs_lex([a_lanes, b_lanes], n_cmp=n_cmp,
+                              max_values=max_values, block_size=block_size,
+                              interpret=interpret)
     a_lanes, b_lanes = tuple(a_lanes), tuple(b_lanes)
     if max_values is not None:
         max_values = tuple(max_values)  # static under jit: must be hashable
@@ -434,6 +442,69 @@ def merge_sorted_lex(a_lanes, b_lanes, engine: str = "auto",
     return merge_runs_lex_pallas(a_lanes, b_lanes, n_cmp=n_cmp,
                                  max_values=max_values, block=block_size,
                                  interpret=_auto_interpret(interpret))
+
+
+def choose_kway_engine(total: int, engine: str = "auto") -> str:
+    """Pick the k-way combine tier — :func:`choose_merge_engine`'s model at
+    k-run granularity. 'take' (one fused key sort + ONE gather per lane,
+    :func:`repro.kernels.kway_kernel.merge_runs_kway_take`) is the jnp
+    fast path everywhere: one data pass, one fused dispatch. The Pallas
+    streaming 'kernel' additionally keeps the combine in VMEM tiles behind
+    double-buffered DMA, which pays off compiled on TPU past one output
+    tile, exactly like the 2-way boundary. Explicit ``engine`` overrides
+    (e.g. conformance forcing 'kernel' under the interpreter)."""
+    if engine != "auto":
+        if engine not in ("take", "kernel"):
+            raise ValueError(f"unknown k-way engine {engine!r}")
+        return engine
+    if jax.default_backend() == "tpu" and total > 2 * DEFAULT_MERGE_BLOCK:
+        return "kernel"
+    return "take"
+
+
+@functools.partial(jax.jit, static_argnames=("n_arr", "n_runs", "n_cmp",
+                                             "max_values"))
+def _kway_take_jit(*arrs, n_arr, n_runs, n_cmp, max_values):
+    runs = [list(arrs[r * n_arr:(r + 1) * n_arr]) for r in range(n_runs)]
+    return merge_runs_kway_take(runs, n_cmp=n_cmp, max_values=max_values)
+
+
+def merge_runs_lex(runs, engine: str = "auto", n_cmp: int | None = None,
+                   max_values=None, block_size: int | None = None,
+                   interpret: bool | None = None):
+    """Merge k *sorted* lex-tuple runs into one sorted run in a SINGLE pass
+    — the streaming replacement for the pipeline tournament's ceil(log2 k)
+    pairwise rounds (each of which re-reads and re-writes all the data).
+
+    ``runs``: sequence of equal-arity tuples of parallel 1-D arrays, any
+    lengths (empty runs drop statically). ``engine``: 'take' (global
+    merge-path ranks + one scatter per lane), 'kernel' (the one-launch
+    streaming Pallas kernel, ``kernels/kway_kernel.py``), or 'auto'
+    (:func:`choose_kway_engine`). ``n_cmp``/``max_values`` follow
+    :func:`merge_sorted_lex`. Output is bit-identical to the tournament and
+    the NumPy lexsort oracle across engines."""
+    runs = [tuple(r) for r in runs]
+    if max_values is not None:
+        max_values = tuple(max_values)  # static under jit: must be hashable
+    if not runs or not runs[0] or any(len(r) != len(runs[0]) for r in runs):
+        raise ValueError("runs must share a non-zero lane arity")
+    if any(x.ndim != 1 for r in runs for x in r):
+        raise ValueError("runs must be tuples of 1-D arrays")
+    nonempty = [r for r in runs if r[0].shape[0]]
+    if not nonempty:
+        return runs[0]
+    if len(nonempty) == 1:
+        return nonempty[0]
+    total = sum(r[0].shape[0] for r in nonempty)
+    eng = choose_kway_engine(total, engine)
+    if eng == "kernel":
+        return merge_runs_kway_pallas(nonempty, n_cmp=n_cmp,
+                                      max_values=max_values,
+                                      block=block_size,
+                                      interpret=_auto_interpret(interpret))
+    return _kway_take_jit(*[x for r in nonempty for x in r],
+                          n_arr=len(runs[0]), n_runs=len(nonempty),
+                          n_cmp=n_cmp, max_values=max_values)
 
 
 def merge_sorted(a, b, engine: str = "auto", block_size: int | None = None,

@@ -21,10 +21,12 @@ Runs carry an explicit length lane so the merge key is the shortlex tuple
 ``(length, lane_0, ..., lane_L-1)`` — packed keys alone order
 byte-lexicographically ("aa" < "z"), not shortlex ("z" < "aa").
 
-The words front-end also overlaps its host work with the device: chunk
-``i+1`` packs on a worker thread while chunk ``i``'s fused launch is in
-flight (async dispatch already queues the device side, so the only serial
-cost left was the packing loop itself).
+Both front-ends overlap their host work with the device through the same
+single-worker double buffer (:func:`_prefetch_map`): the words path packs
+chunk ``i+1`` on the worker thread while chunk ``i``'s fused launch is in
+flight, and the packed path stages chunk ``i+1``'s host->device transfer
+the same way (:func:`_stage_chunk`) — so neither packing nor H2D copies
+sit on the critical path between launches.
 """
 
 from __future__ import annotations
@@ -34,6 +36,7 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -144,13 +147,22 @@ def _ingest_chunk(chunk, chunk_id: int, *, algorithm: str, capacity,
     return run, man
 
 
-def _merged_run(runs, manifests=None, supervisor=None) -> SortedRun:
+def _merged_run(runs, manifests=None, supervisor=None,
+                merge_engine: str = "auto") -> SortedRun:
     if len(runs) == 1:
         return runs[0]
-    merged = merge_runs([r.lanes() for r in runs],
+    merged = merge_runs([r.lanes() for r in runs], engine=merge_engine,
                         cmp_runs=[r.cmp_lanes() for r in runs],
                         manifests=manifests, supervisor=supervisor)
     return SortedRun.from_lanes(merged)
+
+
+def _stage_chunk(chunk):
+    """Stage one pre-packed chunk onto the device. Runs on the prefetch
+    worker thread, so chunk ``i+1``'s host->device transfer overlaps chunk
+    ``i``'s fused launch — the device half of the ingest double buffer (the
+    words front-end overlaps host packing through the same worker)."""
+    return jax.device_put(jnp.asarray(chunk, jnp.uint32))
 
 
 def chunked_sort_packed(keys, chunk_size: int = DEFAULT_CHUNK,
@@ -158,7 +170,8 @@ def chunked_sort_packed(keys, chunk_size: int = DEFAULT_CHUNK,
                         capacity: int | None = None,
                         store=None, supervisor=None,
                         validate: str = "off",
-                        on_overflow: str = "raise") -> SortedRun:
+                        on_overflow: str = "raise",
+                        merge_engine: str = "auto") -> SortedRun:
     """Shortlex-sort a packed (n, lanes) uint32 tensor of any length by
     streaming ``chunk_size`` rows per launch and merging the sorted runs.
 
@@ -184,19 +197,30 @@ def chunked_sort_packed(keys, chunk_size: int = DEFAULT_CHUNK,
       order-independent content digests.
     * ``on_overflow`` — bucket-capacity overflow policy for the per-chunk
       fused program ('raise' | 'retry' | 'clip').
+    * ``merge_engine`` — run-combine strategy, forwarded to
+      ``pipeline.merge.merge_runs``: 'auto'/'kway' (one streaming k-way
+      pass), 'kway_kernel' (force the Pallas tier), or 'tournament' (the
+      legacy pairwise tree).
+
+    Host (NumPy) input stays host-side until its chunk stages: each chunk's
+    H2D transfer runs on the prefetch worker while the previous chunk's
+    launch is in flight (:func:`_stage_chunk`).
     """
     if validate not in _VALIDATE_MODES:
         raise ValueError(f"validate must be one of {_VALIDATE_MODES}")
-    keys = jnp.asarray(keys, jnp.uint32)
+    if not isinstance(keys, jax.Array):
+        keys = np.asarray(keys, dtype=np.uint32)
     n = keys.shape[0]
     if chunk_size < 1:
         raise ValueError("chunk_size must be >= 1")
     if n == 0:
-        return SortedRun(lengths=jnp.zeros((0,), jnp.int32), keys=keys)
+        return SortedRun(lengths=jnp.zeros((0,), jnp.int32),
+                         keys=jnp.asarray(keys, jnp.uint32))
     track = store is not None or validate != "off"
     runs, manifests = [], []
-    for ci, start in enumerate(range(0, n, chunk_size)):
-        chunk = keys[start: start + chunk_size]
+    host_chunks = [keys[start: start + chunk_size]
+                   for start in range(0, n, chunk_size)]
+    for ci, chunk in enumerate(_prefetch_map(_stage_chunk, host_chunks)):
         cap = capacity if capacity is not None else int(chunk.shape[0])
         run, man = _ingest_chunk(
             chunk, ci, algorithm=algorithm, capacity=cap,
@@ -205,7 +229,7 @@ def chunked_sort_packed(keys, chunk_size: int = DEFAULT_CHUNK,
         runs.append(run)
         manifests.append(man)
     merged = _merged_run(runs, manifests=manifests if track else None,
-                         supervisor=supervisor)
+                         supervisor=supervisor, merge_engine=merge_engine)
     if validate != "off":
         check_chunked(runs, manifests, merged, mode=validate)
     return merged
@@ -233,7 +257,8 @@ def chunked_sort_words(words, chunk_size: int = DEFAULT_CHUNK,
                        capacity: int | None = None,
                        store=None, supervisor=None,
                        validate: str = "off",
-                       on_overflow: str = "raise") -> list:
+                       on_overflow: str = "raise",
+                       merge_engine: str = "auto") -> list:
     """Words front-end: chunked device sort + packed-rank-key run merge,
     unpack once (egress). Returns the words in shortlex order —
     bit-identical to ``core.bucketed_sort_words`` but with per-launch device
@@ -241,9 +266,10 @@ def chunked_sort_words(words, chunk_size: int = DEFAULT_CHUNK,
     global width, so all runs share one lane count) on a worker thread while
     the previous chunk's fused launch is in flight.
 
-    ``store`` / ``supervisor`` / ``validate`` / ``on_overflow`` behave as on
-    :func:`chunked_sort_packed` — persisted-run resume, supervised stage
-    retry, the invariant-validation gate, and the bucket-overflow policy."""
+    ``store`` / ``supervisor`` / ``validate`` / ``on_overflow`` /
+    ``merge_engine`` behave as on :func:`chunked_sort_packed` —
+    persisted-run resume, supervised stage retry, the invariant-validation
+    gate, the bucket-overflow policy, and the run-combine strategy."""
     if validate not in _VALIDATE_MODES:
         raise ValueError(f"validate must be one of {_VALIDATE_MODES}")
     words = list(words)
@@ -267,7 +293,7 @@ def chunked_sort_words(words, chunk_size: int = DEFAULT_CHUNK,
         runs.append(run)
         manifests.append(man)
     run = _merged_run(runs, manifests=manifests if track else None,
-                      supervisor=supervisor)
+                      supervisor=supervisor, merge_engine=merge_engine)
     if validate != "off":
         check_chunked(runs, manifests, run, mode=validate)
     return packing.unpack_words(np.asarray(run.keys))

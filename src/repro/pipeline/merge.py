@@ -3,27 +3,33 @@
 A *run* here is a tuple of parallel 1-D arrays already sorted by the
 lane-by-lane lexicographic order (``kernels/lex.py`` conventions — for the
 word pipeline the tuple is ``(length, key_lane_0, ..., key_lane_L-1)``, i.e.
-shortlex). Two runs combine through ``kernels.ops.merge_sorted_lex`` — the
-packed rank-key merge path (``kernels/keypack.py``: searchsorted ranks +
-one scatter, or the Pallas merge-path run kernel on TPU), the same
-primitive ``core/distributed``'s 'take' merge and sample-sort combine use —
-so every round costs O(n log n) gathers instead of ``lex_rank_count``'s
-O(|a|·|b|·L) broadcast. k runs combine as a tournament tree, log2(k) rounds
-of pairwise merges.
+shortlex). The default combine is the ONE-launch streaming k-way merge
+(``kernels.ops.merge_runs_lex`` over ``kernels/kway_kernel.py``): global
+merge-path ranks split the output into blocks once, and the data streams
+through a single pass — one scatter per lane off-TPU, or the
+double-buffered Pallas streaming kernel on TPU.
 
-The tournament works in the *extended* representation: each run's packed
-compare lanes (1-2 uint32 rank keys + keypack's minimal tie-break suffix)
-ride the scatter alongside the data lanes, so later rounds rank without
-re-packing. ``cmp_runs`` lets the chunked ingest hand over rank keys the
-fused bucketize program already computed.
+The pre-PR-9 tournament tree (``engine='tournament'``: ceil(log2 k) rounds
+of pairwise ``merge_sorted_lex``) is kept as the fallback and as the
+differential oracle the tests hold the streaming path against — every round
+is a full pass over all the data, which is exactly the log2(k)x HBM-traffic
+multiple the streaming merge removes.
+
+Both paths work in the *extended* representation: each run's packed compare
+lanes (1-2 uint32 rank keys + keypack's minimal tie-break suffix) ride
+alongside the data lanes, so ranking never re-packs. ``cmp_runs`` lets the
+chunked ingest hand over rank keys the fused bucketize program already
+computed.
 """
 
 from __future__ import annotations
 
 from ..kernels.keypack import packed_cmp_lanes
-from ..kernels.ops import merge_sorted_lex
+from ..kernels.ops import merge_runs_lex, merge_sorted_lex
 
 __all__ = ["merge_two", "merge_runs"]
+
+_ENGINES = ("auto", "kway", "kway_kernel", "tournament")
 
 
 def merge_two(a_lanes, b_lanes, engine: str = "auto", max_values=None):
@@ -36,28 +42,38 @@ def merge_two(a_lanes, b_lanes, engine: str = "auto", max_values=None):
 
 
 def merge_runs(runs, engine: str = "auto", max_values=None, cmp_runs=None,
-               manifests=None, supervisor=None):
-    """Tournament-tree k-way merge: pairwise merge rounds until one run
-    remains. ``runs``: list of sorted lex-tuple runs of equal arity; an
-    empty list returns ``()`` and a single run is returned as-is — both
-    without touching the device. Chunked ingest produces at most two
-    distinct run lengths (full chunks + one tail), so the tree re-traces
-    only O(log k) shapes.
+               manifests=None, supervisor=None,
+               interpret: bool | None = None,
+               block_size: int | None = None):
+    """k-way merge of sorted runs into one. ``runs``: list of sorted
+    lex-tuple runs of equal arity; an empty list returns ``()`` and a single
+    run is returned as-is — both without touching the device.
+
+    ``engine`` picks the combine strategy:
+
+    - ``'kway'`` (and ``'auto'``, which always resolves to it): ONE call
+      into ``ops.merge_runs_lex`` — a single streaming pass for any k,
+      executed through the supervisor stage ``'streaming_combine'``.
+    - ``'kway_kernel'``: same, but forces the Pallas streaming kernel tier
+      even where ``choose_kway_engine`` would pick the jnp scatter (the
+      conformance matrix uses this to run the kernel under the interpreter).
+    - ``'tournament'``: the legacy pairwise tree, ceil(log2 k) rounds each
+      through supervisor stage ``'merge_round'`` — the fallback and the
+      differential oracle; outputs are bit-identical across engines.
 
     ``cmp_runs``: optional parallel list of pre-packed compare-lane lists
     (e.g. ``SortedRun.cmp_lanes()`` — rank keys the fused per-chunk program
     already emitted); ``None`` packs them here via
-    ``keypack.packed_cmp_lanes`` with ``max_values``. Either way the compare
-    lanes are scattered through every round alongside the data, so no round
-    re-packs.
-
-    ``manifests``: optional parallel list of ``RunManifest``-likes; each
-    run's element count is reconciled against its manifest *before* any
-    round runs, so a truncated/stale run (e.g. loaded from a resume store)
-    fails loudly instead of merging short. ``supervisor``: optional
-    ``runtime.SortSupervisor`` — each merge round executes through
-    ``run_stage('merge_round', ...)``, and because rounds are pure functions
-    of their input runs, a failed round simply re-executes."""
+    ``keypack.packed_cmp_lanes`` with ``max_values``. ``manifests``:
+    optional parallel list of ``RunManifest``-likes; each run's element
+    count is reconciled against its manifest *before* any device work, so a
+    truncated/stale run (e.g. loaded from a resume store) fails loudly
+    instead of merging short. ``supervisor``: optional
+    ``runtime.SortSupervisor`` — combine stages are pure functions of their
+    input runs, so a failed stage simply re-executes. ``interpret`` /
+    ``block_size`` forward to the kernel tiers (``None`` = auto)."""
+    if engine not in _ENGINES:
+        raise ValueError(f"unknown merge_runs engine {engine!r}")
     runs = [tuple(r) for r in runs]
     if manifests is not None:
         from .validate import ValidationError
@@ -80,9 +96,23 @@ def merge_runs(runs, engine: str = "auto", max_values=None, cmp_runs=None,
     ext = [tuple(c) + r for c, r in zip(cmp_runs, runs)]
     n_cmp = len(ext[0]) - arity
 
+    if engine != "tournament":
+        ops_engine = "kernel" if engine == "kway_kernel" else "auto"
+
+        def combine(ext_rs):
+            return merge_runs_lex(ext_rs, engine=ops_engine, n_cmp=n_cmp,
+                                  block_size=block_size,
+                                  interpret=interpret)
+
+        if supervisor is None:
+            merged = combine(ext)
+        else:
+            merged = supervisor.run_stage("streaming_combine", combine, ext)
+        return tuple(merged[n_cmp:])
+
     def one_round(ext_rs):
-        nxt = [merge_sorted_lex(ext_rs[i], ext_rs[i + 1], engine=engine,
-                                n_cmp=n_cmp)
+        nxt = [merge_sorted_lex(ext_rs[i], ext_rs[i + 1], n_cmp=n_cmp,
+                                interpret=interpret)
                for i in range(0, len(ext_rs) - 1, 2)]
         if len(ext_rs) % 2:
             nxt.append(ext_rs[-1])

@@ -9,6 +9,11 @@ and each stage has a cheaper recovery than a full restart:
   ----------------- --------------------- ----------------------------------
   ingest_chunk      StageFailure          re-launch the chunk (backoff retry)
   merge_round       StageFailure          re-run the round (rounds are pure)
+  run_exchange      StageFailure          re-run the whole-run exchange (the
+                                          boundary split and slicing are
+                                          pure functions of the runs)
+  streaming_combine StageFailure          re-run the one-launch k-way merge
+                                          (pure function of its input runs)
   exchange          DeviceFailure         shrink mesh, re-run the sample
                                           sort on the survivors
   exchange          CapacityOverflow      double the exchange capacity and
@@ -33,10 +38,17 @@ from typing import Callable, Optional
 
 from .failure import CapacityOverflow, DeviceFailure
 
-__all__ = ["StageFailure", "StageFailureInjector", "RetryPolicy",
-           "StageEvent", "SortSupervisor"]
+__all__ = ["KNOWN_STAGES", "StageFailure", "StageFailureInjector",
+           "RetryPolicy", "StageEvent", "SortSupervisor"]
 
 log = logging.getLogger("repro.runtime")
+
+# The stage names the engine runs through SortSupervisor.run_stage — the
+# valid keys for StageFailureInjector schedules (run_stage itself is generic
+# over names; this tuple documents the wired surface and lets tests catch a
+# schedule keyed on a stage that no longer exists).
+KNOWN_STAGES = ("ingest_chunk", "merge_round", "run_exchange",
+                "streaming_combine", "exchange")
 
 
 class StageFailure(RuntimeError):

@@ -4,7 +4,7 @@ execution-mode axis.
 
 One :class:`OpContract` per front-end op —
 ``sort / sort_kv / sort_lex / segmented_sort / merge_sorted /
-merge_sorted_lex / bucketize / distribute`` — declaring:
+merge_sorted_lex / merge_runs / bucketize / distribute`` — declaring:
 
   * ``engines`` — every engine the op routes between (comparator
     algorithms for the sorts, merge engines for the merges, the capacity
@@ -57,8 +57,9 @@ from ..kernels import ops
 from ..kernels.lex import sentinel_for
 from ..pipeline.validate import (ValidationError, check_lanes_sorted,
                                  order_bits_view)
+from ..pipeline.merge import merge_runs as _pipeline_merge_runs
 from .generators import (applicable, check_mode, default_n, fill_elements,
-                         make_words, sorted_run_sizes)
+                         kway_run_sizes, make_words, sorted_run_sizes)
 from .modes import ExecutionMode, provenance
 
 __all__ = ["Case", "OpContract", "ConformanceRun", "CONTRACTS",
@@ -345,7 +346,7 @@ def _oracle_segmented(case: Case) -> tuple:
 
 # --- merge_sorted / merge_sorted_lex ----------------------------------------
 
-_MERGE_ENGINES = ("packed", "kernel", "lanes")
+_MERGE_ENGINES = ("packed", "kernel", "lanes", "kway")
 
 
 def _merge_dtypes(gen: str) -> tuple:
@@ -413,6 +414,49 @@ def _oracle_merge_lex(case: Case) -> tuple:
     a_lanes, b_lanes = case.arrays
     return _lexsort_all([np.concatenate([a, b])
                          for a, b in zip(a_lanes, b_lanes)])
+
+
+# --- merge_runs (one-launch streaming k-way vs the tournament oracle) --------
+
+# 'kway' = the streaming front-end as routed off-TPU (one global-rank
+# scatter); 'kway_kernel' forces the Pallas streaming kernel under the
+# interpreter (block 128 so the case genuinely spans blocks and exercises
+# the double-buffered segment DMA); 'tournament' = the legacy pairwise tree
+# kept as the differential oracle.
+_KWAY_ENGINES = ("kway", "kway_kernel", "tournament")
+
+
+def _build_merge_runs(gen: str, dtype: str) -> Case:
+    rng = np.random.default_rng(_seed("merge_runs", gen, dtype))
+    data_gen = "random" if gen == "empty_run" else gen
+
+    def run(n):
+        lanes = [fill_elements("dup_heavy", rng, n, dtype),
+                 fill_elements(data_gen, rng, n, dtype),
+                 np.arange(n, dtype=np.int32)]  # payload = final tie-break
+        return _lexsort_all(lanes)  # runs must be sorted by the full tuple
+
+    return Case("merge_runs", gen, dtype,
+                tuple(run(n) for n in kway_run_sizes(gen)))
+
+
+def _run_merge_runs(case: Case, engine: str, mode: ExecutionMode) -> tuple:
+    n_arr = len(case.arrays[0])
+    k = len(case.arrays)
+
+    def call(*arrs):
+        runs = [arrs[i * n_arr:(i + 1) * n_arr] for i in range(k)]
+        return tuple(_pipeline_merge_runs(runs, engine=engine,
+                                          interpret=mode.interpret,
+                                          block_size=_BLOCK))
+
+    fn = _maybe_jit(("merge_runs", engine, mode.name), call, mode.jit)
+    return tuple(fn(*[jnp.asarray(x) for r in case.arrays for x in r]))
+
+
+def _oracle_merge_runs(case: Case) -> tuple:
+    return _lexsort_all([np.concatenate([r[i] for r in case.arrays])
+                         for i in range(len(case.arrays[0]))])
 
 
 # --- distribute / bucketize --------------------------------------------------
@@ -554,6 +598,13 @@ _register(OpContract(
                 "empty", "singleton", "tile_boundary"),
     dtypes_for=lambda gen: ("float32",) if gen == "nan" else ("uint32",),
     build=_build_merge_lex, run=_run_merge_lex, oracle=_oracle_merge_lex))
+
+_register(OpContract(
+    name="merge_runs", engines=_KWAY_ENGINES,
+    generators=("random", "dup_heavy", "sentinel", "nan", "empty_run"),
+    dtypes_for=lambda gen: ("float32",) if gen == "nan" else ("uint32",),
+    build=_build_merge_runs, run=_run_merge_runs,
+    oracle=_oracle_merge_runs))
 
 _register(OpContract(
     name="distribute", engines=("kernel",),

@@ -49,7 +49,8 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = ["ADVERSARIAL", "default_n", "check_mode", "applicable",
-           "fill_elements", "make_words", "sorted_run_sizes"]
+           "fill_elements", "make_words", "sorted_run_sizes",
+           "kway_run_sizes"]
 
 # the canonical generator set, in documentation order
 ADVERSARIAL = ("random", "dup_heavy", "sentinel", "nan", "skewed",
@@ -172,3 +173,14 @@ def sorted_run_sizes(gen: str) -> tuple[int, int]:
     return {"empty": (0, _DEFAULT_N), "singleton": (1, 1),
             "skewed": (120, 8), "tile_boundary": (129, 100),
             }.get(gen, (_DEFAULT_N, 80))
+
+
+def kway_run_sizes(gen: str) -> tuple:
+    """Per-run sizes for a k-way merge case — always five runs (the
+    contract's jitted runner is shape-polymorphic but arity-static), with
+    ``empty_run`` interleaving zero-length runs among real ones (the static
+    empty-drop path) and every size under the interpret-mode compile
+    budget."""
+    if gen == "empty_run":
+        return (48, 0, 33, 0, 17)
+    return (64, 48, 33, 16, 9)

@@ -1,0 +1,203 @@
+"""Out-of-core distributed chunked sort (``distributed_chunked_sort_lex``):
+chunk-per-device ingest -> one exact-count run exchange -> one-launch
+streaming k-way combine per destination. The mesh-scale cases ride the
+8-fake-device subprocess pattern of ``test_distributed_sort.py`` /
+``test_sortfault.py``; every output is held bit-identical to the
+single-process pipeline and the NumPy shortlex oracle.
+
+Sizes stay small (~500 words, per-device chunks of 64): every chunk
+compiles an interpret-mode Pallas program on this CPU container.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import distributed_chunked_sort_lex
+from repro.core.packing import pack_words, unpack_words
+from repro.pipeline import chunked_sort_packed
+
+
+def _run_multidev(script, timeout=600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+_COMMON = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import distributed_chunked_sort_lex
+from repro.core.packing import pack_words, unpack_words
+
+assert len(jax.devices()) == 8
+rng = np.random.default_rng(0)
+alpha = list("abcdefgh")
+words = ["".join(rng.choice(alpha, l)) for l in rng.integers(0, 9, 509)]
+keys = np.asarray(pack_words(words))
+
+def assert_runs_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.keys), np.asarray(b.keys))
+    np.testing.assert_array_equal(np.asarray(a.lengths),
+                                  np.asarray(b.lengths))
+"""
+
+
+def test_distributed_chunked_bit_identical_to_oracle():
+    """509 words over 8 devices: every per-device chunk holds at most 64
+    rows, so the input is larger than any single chunk capacity — and the
+    global result must equal both the single-process chunked pipeline and
+    the NumPy shortlex oracle bit-for-bit, with ``validate='full'`` green."""
+    out = _run_multidev(_COMMON + """
+from repro.pipeline import chunked_sort_packed
+
+run = distributed_chunked_sort_lex(keys, validate="full")
+assert int(run.keys.shape[0]) == 509
+oracle = chunked_sort_packed(jnp.asarray(keys), chunk_size=64)
+assert_runs_equal(run, oracle)
+shortlex = sorted(words, key=lambda w: (len(w.encode()), w.encode()))
+assert unpack_words(np.asarray(run.keys)) == shortlex
+print("DIST_CHUNKED_OK")
+""")
+    assert "DIST_CHUNKED_OK" in out
+
+
+def test_exchange_and_combine_failures_recover_bit_identical():
+    """Injected ``StageFailure`` mid run-exchange and mid streaming-combine:
+    both stages are pure functions of their input runs, so supervised retry
+    must recover output bit-identical to the no-failure run."""
+    out = _run_multidev(_COMMON + """
+from repro.runtime import RetryPolicy, SortSupervisor, StageFailureInjector
+
+oracle = distributed_chunked_sort_lex(keys)
+inj = StageFailureInjector(fail_at={"run_exchange": {0},
+                                    "streaming_combine": {0, 2}})
+sup = SortSupervisor(policy=RetryPolicy(max_retries=3), injector=inj)
+run = distributed_chunked_sort_lex(keys, supervisor=sup, validate="full")
+assert_runs_equal(run, oracle)
+assert ("run_exchange", 0, "transient") in inj.fired
+assert ("streaming_combine", 0, "transient") in inj.fired
+assert [e.action for e in sup.events] == ["retry"] * 3
+print("FAULTS_OK")
+""")
+    assert "FAULTS_OK" in out
+
+
+def test_overflow_policies_raise_retry_clip():
+    """Destination-capacity overflow paths: 'raise' reports the required
+    size, 'retry' doubles capacity (and sample density) until lossless even
+    under unsplittable total skew, 'clip' keeps each destination's capacity
+    smallest elements and stays sorted."""
+    out = _run_multidev(_COMMON + """
+from repro.runtime import CapacityOverflow
+
+try:
+    distributed_chunked_sort_lex(keys, capacity=30, on_overflow="raise")
+    raise SystemExit("expected CapacityOverflow")
+except CapacityOverflow as e:
+    assert e.capacity == 30 and e.required > 30
+
+# unsplittable skew: one word repeated — every splitter equal, one
+# destination takes everything; retry must still terminate (capacity
+# doubling is bounded by n) and come back lossless
+dup = np.asarray(pack_words(["abc"] * 400))
+oracle = distributed_chunked_sort_lex(dup)
+run = distributed_chunked_sort_lex(dup, capacity=80, on_overflow="retry",
+                                   validate="full")
+assert_runs_equal(run, oracle)
+
+clip = distributed_chunked_sort_lex(dup, capacity=30, on_overflow="clip",
+                                    validate="cheap")
+assert int(clip.keys.shape[0]) == 30
+assert np.all(np.diff(np.asarray(clip.lengths)) >= 0)
+print("OVERFLOW_OK")
+""")
+    assert "OVERFLOW_OK" in out
+
+
+def test_store_resume_skips_completed_runs():
+    """PR 6's manifests survive the distributed path: a job killed mid
+    ingest resumes from its persisted per-device runs (only the missing
+    chunks launch), and a fully-persisted store resumes with zero
+    launches — output bit-identical throughout."""
+    out = _run_multidev(_COMMON + """
+import tempfile
+from unittest import mock
+import repro.pipeline.ingest as ingest_mod
+from repro.pipeline import RunStore
+from repro.runtime import (RetryPolicy, SortSupervisor, StageFailure,
+                           StageFailureInjector)
+
+oracle = distributed_chunked_sort_lex(keys)
+td = tempfile.mkdtemp()
+store = RunStore(td)
+inj = StageFailureInjector(fail_at={"ingest_chunk": {2, 3, 4}})
+sup = SortSupervisor(policy=RetryPolicy(max_retries=2), injector=inj)
+try:
+    distributed_chunked_sort_lex(keys, store=store, supervisor=sup)
+    raise SystemExit("expected StageFailure")
+except StageFailure:
+    pass
+assert store.completed() == [0, 1]
+
+launches = []
+real = ingest_mod.sorted_run
+with mock.patch.object(ingest_mod, "sorted_run",
+                       lambda k, **kw: launches.append(1) or real(k, **kw)):
+    run = distributed_chunked_sort_lex(keys, store=store, validate="full")
+assert_runs_equal(run, oracle)
+assert len(launches) == 6  # chunks 0-1 loaded, 2-7 launched
+assert store.completed() == list(range(8))
+
+with mock.patch.object(ingest_mod, "sorted_run",
+                       lambda k, **kw: launches.append(1) or real(k, **kw)):
+    run2 = distributed_chunked_sort_lex(keys, store=store, validate="full")
+assert_runs_equal(run2, oracle)
+assert len(launches) == 6  # pure load, zero new launches
+print("RESUME_OK")
+""")
+    assert "RESUME_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# in-process degenerate cases (one local device)
+# ---------------------------------------------------------------------------
+
+def _words(n, seed, max_len=8):
+    rng = np.random.default_rng(seed)
+    alpha = list("abcdefgh")
+    return ["".join(rng.choice(alpha, l))
+            for l in rng.integers(0, max_len + 1, n)]
+
+
+def test_single_device_degenerate_equals_pipeline():
+    words = _words(150, 1)
+    keys = np.asarray(pack_words(words))
+    run = distributed_chunked_sort_lex(keys, devices=[jax.devices()[0]],
+                                       validate="full")
+    oracle = chunked_sort_packed(jnp.asarray(keys), chunk_size=150)
+    np.testing.assert_array_equal(np.asarray(run.keys),
+                                  np.asarray(oracle.keys))
+    np.testing.assert_array_equal(np.asarray(run.lengths),
+                                  np.asarray(oracle.lengths))
+
+
+def test_empty_input_and_bad_args():
+    empty = np.zeros((0, 2), np.uint32)
+    run = distributed_chunked_sort_lex(empty)
+    assert run.keys.shape[0] == 0 and run.lengths.shape[0] == 0
+    keys = np.asarray(pack_words(_words(20, 2)))
+    with pytest.raises(ValueError, match="validate"):
+        distributed_chunked_sort_lex(keys, validate="bogus")
+    with pytest.raises(ValueError, match="on_overflow"):
+        distributed_chunked_sort_lex(keys, on_overflow="bogus")

@@ -303,6 +303,48 @@ def test_prefetch_map_orders_and_overlaps():
     assert list(_prefetch_map(fn, [])) == []
 
 
+def test_packed_ingest_stages_h2d_on_worker_thread():
+    """The device half of the ingest double buffer: every chunk's
+    host->device staging (``_stage_chunk``) must run through the prefetch
+    worker — never the consumer thread — once per chunk, in order, and the
+    staged result must still sort exactly. Pins the H2D overlap the same way
+    ``test_prefetch_map_orders_and_overlaps`` pins the packing half."""
+    import threading
+
+    import repro.pipeline.ingest as ingest_mod
+    rng = np.random.default_rng(24)
+    words = _word_set("random", 100, rng, max_len=7)
+    keys = np.asarray(pack_words(words))
+    staged = []
+    main = threading.current_thread()
+    real = ingest_mod._stage_chunk
+
+    def spy(chunk):
+        staged.append((int(chunk.shape[0]),
+                       threading.current_thread() is not main))
+        return real(chunk)
+
+    with mock.patch.object(ingest_mod, "_stage_chunk", spy):
+        run = chunked_sort_packed(keys, chunk_size=40)
+    assert [s[0] for s in staged] == [40, 40, 20]  # once per chunk, in order
+    assert all(off_main for _, off_main in staged)
+    assert unpack_words(np.asarray(run.keys)) == _shortlex(words)
+
+
+def test_merge_engine_knob_reaches_run_combine():
+    """The ``merge_engine`` knob threads from the ingest front-ends to
+    ``merge_runs``: every engine yields the identical shortlex result, and
+    an unknown engine fails loudly."""
+    rng = np.random.default_rng(25)
+    words = _word_set("dup", 120, rng, max_len=7)
+    outs = {eng: chunked_sort_words(words, chunk_size=48, merge_engine=eng)
+            for eng in ("auto", "kway", "tournament")}
+    assert outs["auto"] == outs["kway"] == outs["tournament"] \
+        == _shortlex(words)
+    with pytest.raises(ValueError, match="engine"):
+        chunked_sort_words(words, chunk_size=48, merge_engine="bogus")
+
+
 def test_chunked_words_runs_carry_packed_rank_keys():
     """Every per-chunk run ships the fused program's packed shortlex rank
     keys to the merge tier (no re-pack), and the packed lanes order exactly

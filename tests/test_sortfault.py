@@ -61,14 +61,51 @@ def test_chunk_launch_failure_recovers_bit_identical():
 
 
 def test_merge_round_failure_recovers_bit_identical():
+    """The legacy tournament keeps its per-round 'merge_round' stage (the
+    default engine's ONE-launch combine runs as 'streaming_combine' below),
+    so existing fail_at={'merge_round': ...} injection plans stay
+    meaningful — and each re-run round recovers bit-identically."""
     words = _words(300, 1)  # 5 runs -> 3 merge rounds
     oracle = chunked_sort_words(words, chunk_size=64)
     inj = StageFailureInjector(fail_at={"merge_round": {0, 1}})
     sup = _sup(inj)
     out = chunked_sort_words(words, chunk_size=64, supervisor=sup,
-                             validate="full")
+                             merge_engine="tournament", validate="full")
     assert out == oracle
     assert ("merge_round", 0, "transient") in inj.fired
+
+
+def test_streaming_combine_failure_recovers_bit_identical():
+    """The default engine's ONE-launch k-way combine runs as the
+    'streaming_combine' stage — a pure function of its input runs, so an
+    injected failure simply re-executes it and the output stays
+    bit-identical (the k-way analogue of the merge_round case above)."""
+    words = _words(300, 18)
+    oracle = chunked_sort_words(words, chunk_size=64)
+    inj = StageFailureInjector(fail_at={"streaming_combine": {0}})
+    sup = _sup(inj)
+    out = chunked_sort_words(words, chunk_size=64, supervisor=sup,
+                             validate="full")
+    assert out == oracle == _shortlex(words)
+    assert ("streaming_combine", 0, "transient") in inj.fired
+    assert [e.action for e in sup.events] == ["retry"]
+
+
+def test_resume_through_kway_combine(tmp_path):
+    """Store resume composes with the k-way combine: a fully persisted
+    store resumes with zero launches and the streaming merge reproduces the
+    oracle output bit-identically."""
+    words = _words(200, 20)
+    oracle = chunked_sort_words(words, chunk_size=64)
+    store = RunStore(str(tmp_path))
+    chunked_sort_words(words, chunk_size=64, store=store)
+    launches = []
+    real = ingest_mod.sorted_run
+    with mock.patch.object(ingest_mod, "sorted_run",
+                           lambda k, **kw: launches.append(1) or real(k, **kw)):
+        out = chunked_sort_words(words, chunk_size=64, store=store,
+                                 validate="full", merge_engine="kway")
+    assert out == oracle and launches == []
 
 
 def test_retries_exhausted_propagates_stage_failure():
