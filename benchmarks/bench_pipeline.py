@@ -82,9 +82,61 @@ def single_launch_vs_chunked():
              f"runs={nb_runs};vs_single={t_one / t_chk:.2f}x")
 
 
+def shard_spill_overhead():
+    """``pipeline/shard_spill/*`` — the distributed sort's in-memory gather
+    vs spilling every destination shard to disk (atomic snapshot + manifest
+    per destination). The tracked signal is the overhead factor: what
+    crash-anywhere durability costs on top of the same merges. Four
+    repeated local devices keep it mesh-shaped without a subprocess; each
+    timed call gets a FRESH store directory so resume can never shortcut
+    the write path."""
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.core.distributed import distributed_chunked_sort_lex
+    from repro.pipeline import ShardStore
+
+    rng = bench_rng("bench_pipeline", 2)
+    n = 160 if _TINY or os.environ.get("BENCH_CHAOS_SMOKE") else 400
+    words = _words(n, rng, max_len=7)
+    keys = np.asarray(pack_words(words))
+    devs = [jax.devices()[0]] * 4
+
+    t_mem = timeit(
+        lambda k: distributed_chunked_sort_lex(k, devices=devs).keys,
+        keys, iters=2)
+
+    root = tempfile.mkdtemp(prefix="bench_shard_spill_")
+    fresh = iter(range(1000))
+
+    def spill(k):
+        d = os.path.join(root, f"call_{next(fresh)}")
+        res = distributed_chunked_sort_lex(k, devices=devs,
+                                           shard_store=ShardStore(d))
+        return res.count
+
+    try:
+        t_spill = timeit(spill, keys, iters=2)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    emit(f"pipeline/shard_spill/none/n{n}", t_mem * 1e6,
+         "gather, store=None")
+    emit(f"pipeline/shard_spill/store/n{n}", t_spill * 1e6,
+         f"4 shards;overhead={t_spill / t_mem:.2f}x")
+
+
 def main():
+    # BENCH_CHAOS_SMOKE=1: only the shard-spill overhead rows — the CI
+    # bench-gate job's budget for the chaos/durability tier (the other
+    # sweeps have their own smoke knobs)
+    if os.environ.get("BENCH_CHAOS_SMOKE"):
+        shard_spill_overhead()
+        return
     host_vs_device_bucketize()
     single_launch_vs_chunked()
+    shard_spill_overhead()
 
 
 if __name__ == "__main__":

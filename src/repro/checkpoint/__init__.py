@@ -2,8 +2,8 @@
 async save thread, reshard-on-restore for elastic recovery, and manifest
 metadata readable without loading arrays (sorted-run resume discovery)."""
 
-from .manager import (CheckpointManager, latest_step, list_steps,
-                      read_manifest, restore, save)
+from .manager import (CheckpointManager, CorruptSnapshotError, latest_step,
+                      list_steps, read_manifest, restore, save, sweep_tmp)
 
-__all__ = ["CheckpointManager", "save", "restore", "latest_step",
-           "list_steps", "read_manifest"]
+__all__ = ["CheckpointManager", "CorruptSnapshotError", "save", "restore",
+           "latest_step", "list_steps", "read_manifest", "sweep_tmp"]

@@ -23,10 +23,52 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager", "save", "restore", "latest_step",
-           "read_manifest", "list_steps"]
+__all__ = ["CheckpointManager", "CorruptSnapshotError", "save", "restore",
+           "latest_step", "read_manifest", "list_steps", "sweep_tmp"]
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+_TMP_RE = re.compile(r"^\.tmp_(\d+)$")
+
+
+class CorruptSnapshotError(RuntimeError):
+    """A snapshot file is unreadable — truncated, zero-length, or otherwise
+    torn (a kill mid-write *after* the atomic rename can't produce this, but
+    filesystem-level damage or external tampering can). Carries the path so
+    a resuming job can log exactly which artifact to drop and recompute."""
+
+    def __init__(self, path: str, reason: str):
+        super().__init__(f"corrupt snapshot file {path}: {reason}")
+        self.path = path
+        self.reason = reason
+
+
+def sweep_tmp(directory: str) -> list:
+    """Remove leftover ``.tmp_<N>`` droppings (a job killed mid-save before
+    its atomic rename). Returns the swept step numbers. Stores call this on
+    open so half-written snapshots never accumulate and can never be
+    mistaken for landed data."""
+    if not os.path.isdir(directory):
+        return []
+    swept = []
+    for d in os.listdir(directory):
+        if (m := _TMP_RE.match(d)):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+            swept.append(int(m.group(1)))
+    return sorted(swept)
+
+
+def _load_npy(path: str) -> np.ndarray:
+    """``np.load`` with torn-write detection: truncated or zero-length
+    files raise :class:`CorruptSnapshotError` naming the path instead of a
+    bare numpy/EOF exception."""
+    try:
+        if os.path.getsize(path) == 0:
+            raise CorruptSnapshotError(path, "zero-length file")
+        return np.load(path)
+    except CorruptSnapshotError:
+        raise
+    except Exception as e:  # ValueError from a torn header, EOFError, OSError
+        raise CorruptSnapshotError(path, f"unreadable npy ({e})") from e
 
 
 def _leaf_names(tree):
@@ -91,8 +133,12 @@ def read_manifest(directory: str, step: int) -> dict:
     """The snapshot's manifest (leaf specs + any ``extra`` metadata) without
     touching the arrays — how a resuming sort job decides which runs are
     already complete before loading anything."""
-    with open(os.path.join(directory, f"step_{step}", "manifest.json")) as f:
-        return json.load(f)
+    path = os.path.join(directory, f"step_{step}", "manifest.json")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise CorruptSnapshotError(path, f"unreadable manifest ({e})") from e
 
 
 def restore(directory: str, step: int, target: Any, shardings: Any = None) -> Any:
@@ -100,15 +146,21 @@ def restore(directory: str, step: int, target: Any, shardings: Any = None) -> An
     or ShapeDtypeStructs). ``shardings`` (same structure) resharding-places
     every leaf — elastic restore onto a different mesh."""
     path = os.path.join(directory, f"step_{step}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = read_manifest(directory, step)
     by_name = {e["name"]: e for e in manifest["leaves"]}
     names, leaves = _leaf_names(target)
     out = []
     for name, leaf in zip(names, leaves):
         if name not in by_name:
             raise KeyError(f"checkpoint missing leaf {name}")
-        arr = np.load(os.path.join(path, by_name[name]["file"]))
+        leaf_path = os.path.join(path, by_name[name]["file"])
+        arr = _load_npy(leaf_path)
+        if tuple(arr.shape) != tuple(by_name[name]["shape"]):
+            # loadable but short/oversized vs what save() recorded: a torn
+            # or externally damaged file, not a caller shape mistake
+            raise CorruptSnapshotError(
+                leaf_path, f"shape {tuple(arr.shape)} != manifest "
+                f"{tuple(by_name[name]['shape'])}")
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{name}: checkpoint shape {arr.shape} != target {leaf.shape}")
         out.append(arr)

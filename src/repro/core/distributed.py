@@ -666,7 +666,9 @@ def distributed_chunked_sort_lex(keys, mesh=None, axis: str = "data",
                                  validate: str = "off",
                                  on_overflow: str = "raise",
                                  merge_engine: str = "auto",
-                                 oversample: int = 8):
+                                 oversample: int = 8,
+                                 shard_store=None,
+                                 gather: bool | None = None):
     """Out-of-core mesh sort of packed shortlex words — the MPI follow-up's
     bucket->distribute->merge-across-ranks shape composed from the pipeline
     and kernel tiers, host-orchestrated over explicit device placement (so
@@ -702,22 +704,52 @@ def distributed_chunked_sort_lex(keys, mesh=None, axis: str = "data",
     count/histogram/sortedness conservation, 'full' adds content digests)
     applied across ingest, exchange, and combine end to end.
 
-    Returns the globally sorted :class:`~repro.pipeline.ingest.SortedRun`.
+    **Sharded spill** (``shard_store``, a ``pipeline.shards.ShardStore``):
+    each destination's merged output lands as an atomic disk shard the
+    moment its combine completes — per-shard ``RunManifest`` (count,
+    min/max key, additive digest) in the snapshot metadata, so (a) a killed
+    job resumes at shard granularity (a stored shard whose count and summed
+    sub-run digest match the re-exchanged destination *loads* instead of
+    re-merging; torn or mismatched shards recompute), and (b) with
+    ``validate != 'off'`` the ``check_sharded`` gate proves cross-shard
+    boundary ordering + count/histogram(/digest) conservation from
+    manifests alone, no rescan. ``gather`` controls the result form:
+    ``True`` (default without a shard store) concatenates onto the default
+    device and returns a ``SortedRun``; ``False`` (default *with* a shard
+    store) skips the gather entirely — for results that don't fit the home
+    device either — and returns the ``pipeline.shards.ShardedRun`` handle.
+
+    When the ``supervisor`` carries a ``SpeculationPolicy``, each
+    destination combine runs through ``run_speculative`` — a straggling
+    merge gets a backup replica, first successful completion wins, the
+    loser is discarded only after its output digest matches.
+
+    Returns the globally sorted :class:`~repro.pipeline.ingest.SortedRun`,
+    or a :class:`~repro.pipeline.shards.ShardedRun` when ``gather=False``.
     """
     from ..pipeline.ingest import SortedRun, _ingest_chunk
     from ..pipeline.merge import merge_runs
-    from ..pipeline.validate import check_chunked, check_lanes_sorted
+    from ..pipeline.validate import (ValidationError, check_chunked,
+                                     check_lanes_sorted, check_run,
+                                     check_sharded, multiset_digest)
     from ..runtime.failure import CapacityOverflow
     if on_overflow not in ("raise", "retry", "clip"):
         raise ValueError(f"unknown on_overflow policy {on_overflow!r}")
     if validate not in ("off", "cheap", "full"):
         raise ValueError("validate must be one of ('off', 'cheap', 'full')")
+    if gather is None:
+        gather = shard_store is None
+    if not gather and shard_store is None:
+        raise ValueError("gather=False requires a shard_store to spill to")
     devs = _chunk_devices(mesh, axis, devices)
     num = len(devs)
     if not isinstance(keys, jax.Array):
         keys = np.asarray(keys, dtype=np.uint32)
     n = int(keys.shape[0])
     if n == 0:
+        if not gather:
+            from ..pipeline.shards import ShardedRun
+            return ShardedRun(store=shard_store, manifests=())
         return SortedRun(lengths=jnp.zeros((0,), jnp.int32),
                          keys=jnp.zeros(keys.shape, jnp.uint32))
     b = -(-n // num)
@@ -796,26 +828,115 @@ def distributed_chunked_sort_lex(keys, mesh=None, axis: str = "data",
         capacity = new_cap
         oversample *= 2
 
-    # 3. one streaming k-way combine per destination, concatenated in order
-    merged_dests = []
-    for d, (sub_lanes, sub_cmps) in enumerate(per_dest):
-        if not sub_lanes:
-            continue
-        merged = merge_runs(sub_lanes, engine=merge_engine,
-                            cmp_runs=sub_cmps, supervisor=supervisor)
-        if clipped and incoming[d] > capacity:
-            log.warning("run exchange overflow: destination %d clipped "
-                        "%d element(s) past capacity %d", d,
-                        incoming[d] - capacity, capacity)
-            merged = tuple(x[:capacity] for x in merged)
-        merged_dests.append(merged)
+    # 3. one streaming k-way combine per destination — each output spilled
+    # as an atomic shard (when a shard_store is given) the moment it lands,
+    # so a kill between destinations loses only the in-flight one
+    from ..checkpoint.manager import CorruptSnapshotError
+    from ..pipeline.ingest import _run_from_arrays
+    from ..pipeline.manifest import RunManifest
     arity = len(lanes_rs[0])
+    speculative = (supervisor is not None
+                   and getattr(supervisor, "speculation", None) is not None)
+    merged_dests = []        # (gather path) per-destination lane tuples
+    shard_manifests = []     # (spill path) destination-ordered manifests
+    for d, (sub_lanes, sub_cmps) in enumerate(per_dest):
+        # expected shard identity from the exchange alone: incoming count +
+        # summed sub-run key digest (additive, so the merged output's digest
+        # equals the sum — no merge needed to know what "done" looks like)
+        want_digest = None
+        if shard_store is not None:
+            want_digest = sum(multiset_digest(s[1:]) for s in sub_lanes) \
+                % (1 << 64)
+
+        merged = None
+        if shard_store is not None:
+            try:
+                man_d = shard_store.manifest(d)
+            except CorruptSnapshotError as e:
+                log.warning("shard store: shard %d manifest unreadable "
+                            "(%s) — recomputing", d, e)
+                man_d = None
+            if (man_d is not None and man_d.count == incoming[d]
+                    and man_d.digest == want_digest):
+                try:
+                    loaded = _run_from_arrays(*shard_store.load(d))
+                    if validate != "off":
+                        check_run(loaded, man_d, mode=validate)
+                    elif int(loaded.lengths.shape[0]) != man_d.count:
+                        raise ValidationError(
+                            f"shard {d}: loaded {int(loaded.lengths.shape[0])} "
+                            f"row(s) but manifest records {man_d.count}")
+                except (CorruptSnapshotError, ValidationError) as e:
+                    log.warning("shard store: shard %d failed its load "
+                                "gate (%s) — recomputing", d, e)
+                    shard_store.drop(d)
+                else:
+                    merged = loaded.lanes()
+                    shard_manifests.append(man_d)
+            elif man_d is not None:
+                log.warning("shard store: shard %d manifest does not match "
+                            "the exchanged destination (stale or clipped "
+                            "shard) — recomputing", d)
+
+        if merged is None:
+            if not sub_lanes:
+                merged = (jnp.zeros((0,), jnp.int32),
+                          *(jnp.zeros((0,), jnp.uint32)
+                            for _ in range(arity - 1)))
+            elif speculative:
+                # the backup replica re-runs the same pure combine; the
+                # inner merge skips its own stage probe so the speculative
+                # wrapper owns the injector/retry bookkeeping
+                merged = supervisor.run_speculative(
+                    "streaming_combine",
+                    lambda sl=sub_lanes, sc=sub_cmps: merge_runs(
+                        sl, engine=merge_engine, cmp_runs=sc,
+                        supervisor=None),
+                    digest_of=lambda lanes: multiset_digest(list(lanes)))
+            else:
+                merged = merge_runs(sub_lanes, engine=merge_engine,
+                                    cmp_runs=sub_cmps, supervisor=supervisor)
+            if clipped and incoming[d] > capacity:
+                log.warning("run exchange overflow: destination %d clipped "
+                            "%d element(s) past capacity %d", d,
+                            incoming[d] - capacity, capacity)
+                merged = tuple(x[:capacity] for x in merged)
+            if shard_store is not None:
+                run_d = SortedRun.from_lanes(merged)
+                man_d = RunManifest.from_run(run_d, d)
+                shard_store.put(man_d, run_d)
+                shard_manifests.append(man_d)
+        merged_dests.append(merged)
+
+    if shard_store is not None and validate != "off":
+        if clipped:
+            # conservation cannot hold for a clipped output; still prove
+            # the shards concatenate in order (each is internally sorted —
+            # its own merge or load gate proved that)
+            occ = [m for m in shard_manifests if m.count]
+            for a, b in zip(occ, occ[1:]):
+                if tuple(a.max_key) > tuple(b.min_key):
+                    raise ValidationError(
+                        f"shard boundary disorder: shard {a.chunk_id} max "
+                        f"key {a.max_key} > shard {b.chunk_id} min key "
+                        f"{b.min_key}")
+        else:
+            check_sharded(manifests, shard_manifests, mode=validate)
+
+    if not gather:
+        from ..pipeline.shards import ShardedRun
+        return ShardedRun(store=shard_store,
+                          manifests=tuple(shard_manifests))
+
     # destinations live on their own devices; the host-facing result gathers
     # onto the default device (committed arrays never concatenate across)
     home = jax.devices()[0]
+    occupied = [m for m in merged_dests if int(m[0].shape[0])]
     out = tuple(jnp.concatenate([jax.device_put(m[i], home)
-                                 for m in merged_dests])
-                for i in range(arity))
+                                 for m in occupied])
+                for i in range(arity)) if occupied else tuple(
+        jnp.zeros((0,), jnp.int32 if i == 0 else jnp.uint32)
+        for i in range(arity))
     result = SortedRun.from_lanes(out)
 
     if validate != "off":

@@ -35,9 +35,10 @@ __all__ = [
     "DEFAULT_CHUNK", "SortedRun", "sorted_run",
     "chunked_sort_packed", "chunked_sort_words",
     "merge_runs", "merge_two",
-    "RunManifest", "RunStore",
+    "RunManifest", "RunStore", "ShardStore", "ShardedRun",
     "ValidationError", "multiset_digest", "keys_digest",
     "check_lanes_sorted", "check_multiset", "check_run", "check_chunked",
+    "check_sharded",
     "length_histogram", "assign_buckets", "bucket_of", "quantile_bounds",
 ]
 
@@ -50,10 +51,11 @@ _LAZY = {
     "chunked_sort_packed": "ingest", "chunked_sort_words": "ingest",
     "merge_runs": "merge", "merge_two": "merge",
     "RunManifest": "manifest", "RunStore": "manifest",
+    "ShardStore": "shards", "ShardedRun": "shards",
     "ValidationError": "validate", "multiset_digest": "validate",
     "keys_digest": "validate", "check_lanes_sorted": "validate",
     "check_multiset": "validate", "check_run": "validate",
-    "check_chunked": "validate",
+    "check_chunked": "validate", "check_sharded": "validate",
 }
 
 

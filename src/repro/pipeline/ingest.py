@@ -118,7 +118,13 @@ def _ingest_chunk(chunk, chunk_id: int, *, algorithm: str, capacity,
     launching the fused per-chunk sort (through the supervisor's
     ``ingest_chunk`` stage when one is given) and persisting it."""
     if store is not None:
-        man = store.manifest(chunk_id)
+        from ..checkpoint.manager import CorruptSnapshotError
+        try:
+            man = store.manifest(chunk_id)
+        except CorruptSnapshotError as e:
+            log.warning("run store: chunk %d manifest unreadable (%s) — "
+                        "re-ingesting", chunk_id, e)
+            man = None
         if man is not None:
             # A stored run matches iff it holds the same multiset as the
             # incoming chunk — the digest is order-independent, so the
@@ -127,10 +133,25 @@ def _ingest_chunk(chunk, chunk_id: int, *, algorithm: str, capacity,
             # different dataset): recompute instead of merging foreign data.
             if (man.count == int(chunk.shape[0])
                     and man.digest == keys_digest(chunk)):
-                return _run_from_arrays(*store.load(chunk_id)), man
-            log.warning(
-                "run store: chunk %d manifest does not match incoming data "
-                "(stale store?) — re-ingesting", chunk_id)
+                try:
+                    loaded = _run_from_arrays(*store.load(chunk_id))
+                except CorruptSnapshotError as e:
+                    # torn/truncated artifact (kill mid-write never produces
+                    # this — the rename is atomic — but disk damage can):
+                    # the chunk is still in hand, so recompute, don't fail
+                    log.warning("run store: chunk %d unreadable (%s) — "
+                                "re-ingesting", chunk_id, e)
+                else:
+                    if int(loaded.lengths.shape[0]) == man.count:
+                        return loaded, man
+                    log.warning(
+                        "run store: chunk %d loaded %d row(s) but manifest "
+                        "records %d — re-ingesting", chunk_id,
+                        int(loaded.lengths.shape[0]), man.count)
+            else:
+                log.warning(
+                    "run store: chunk %d manifest does not match incoming "
+                    "data (stale store?) — re-ingesting", chunk_id)
 
     def launch():
         return sorted_run(chunk, algorithm=algorithm, capacity=capacity,

@@ -91,6 +91,15 @@ class RunStore:
         import os
         self.directory = directory
         os.makedirs(directory, exist_ok=True)
+        # a job killed mid-save leaves .tmp_<N> droppings short of their
+        # atomic rename; sweep them on open so they never accumulate and a
+        # resume only ever sees fully landed snapshots
+        swept = ckpt.sweep_tmp(directory)
+        if swept:
+            import logging
+            logging.getLogger("repro.pipeline").warning(
+                "%s: swept %d half-written snapshot(s) %s on open",
+                type(self).__name__, len(swept), swept)
 
     def completed(self) -> list:
         """Chunk ids with fully landed runs, ascending."""

@@ -1,0 +1,97 @@
+"""Sharded spill storage for the distributed combine: per-destination
+sorted outputs as atomic disk shards.
+
+``core.distributed.distributed_chunked_sort_lex`` used to funnel every
+destination's merged output back to one home device — fine while the sorted
+result fits that device, fatal beyond it (and a job killed during the
+combine lost every finished destination). :class:`ShardStore` rides the
+same atomic tmp-then-rename snapshots as the ingest
+:class:`~repro.pipeline.manifest.RunStore` (it *is* one, keyed by
+destination index instead of chunk id), so each destination's output lands
+durably the moment its k-way merge completes:
+
+  * the per-shard manifest is a :class:`~repro.pipeline.manifest.
+    RunManifest` — count, shortlex min/max key, per-length histogram, and
+    the order-independent additive content digest — exactly the metadata a
+    resume needs to decide "this shard is done" without loading it, and a
+    global gate (``pipeline.validate.check_sharded``) needs to prove
+    boundary ordering + count/digest conservation without rescanning data;
+  * resume is shard-granular: a killed combine reloads completed shards
+    (matched by incoming count + summed sub-run digest) and recomputes only
+    the in-flight ones — a torn or tampered shard fails its load/validate
+    and silently falls back to recompute;
+  * :class:`ShardedRun` is the spilled result handle: shard-at-a-time
+    access for out-of-core consumers, or :meth:`ShardedRun.to_run` to
+    materialise the full sorted run when it does fit.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+from dataclasses import dataclass
+from typing import Tuple
+
+from .manifest import RunManifest, RunStore
+from .validate import check_run
+
+__all__ = ["ShardStore", "ShardedRun"]
+
+
+class ShardStore(RunStore):
+    """Directory of per-destination output shards, keyed by destination
+    index. Identical snapshot format and atomicity to :class:`~repro.
+    pipeline.manifest.RunStore` (``step_<dest>/manifest.json + *.npy``, one
+    ``os.replace`` per shard, ``.tmp_*`` droppings swept on open); the
+    separate type keeps ingest-run and output-shard directories from being
+    confused for one another in call sites and error messages."""
+
+    def drop(self, shard_id: int) -> None:
+        """Remove one landed shard (e.g. after it failed validation and
+        must recompute, or after a consumer has drained it)."""
+        shutil.rmtree(os.path.join(self.directory, f"step_{shard_id}"),
+                      ignore_errors=True)
+
+
+@dataclass(frozen=True)
+class ShardedRun:
+    """The spilled result of a shard-combining distributed sort: the
+    destination-ordered shard manifests plus the store they landed in. The
+    concatenation of the shards in manifest order is the globally sorted
+    output; consumers stream it shard at a time (:meth:`load_shard`) or
+    materialise it whole (:meth:`to_run`)."""
+
+    store: ShardStore
+    manifests: Tuple[RunManifest, ...]
+
+    @property
+    def count(self) -> int:
+        return sum(m.count for m in self.manifests)
+
+    def load_shard(self, i: int, validate: str = "off"):
+        """Load destination ``i``'s :class:`~repro.pipeline.ingest.
+        SortedRun` (``validate``: ``'off'|'cheap'|'full'`` reconciles it
+        against its manifest via ``check_run`` first)."""
+        from .ingest import _run_from_arrays
+        man = self.manifests[i]
+        run = _run_from_arrays(*self.store.load(man.chunk_id))
+        if validate != "off":
+            check_run(run, man, mode=validate)
+        return run
+
+    def to_run(self, validate: str = "off"):
+        """Materialise the full sorted run (host concat of all shards in
+        destination order) — the gather the spill path deferred, for
+        results that do fit one host after all."""
+        import jax.numpy as jnp
+        import numpy as np
+
+        from .ingest import SortedRun
+        runs = [self.load_shard(i, validate=validate)
+                for i in range(len(self.manifests))]
+        lengths = np.concatenate([np.asarray(r.lengths) for r in runs]) \
+            if runs else np.zeros((0,), np.int32)
+        keys = np.concatenate([np.asarray(r.keys) for r in runs]) \
+            if runs else np.zeros((0, 0), np.uint32)
+        return SortedRun(lengths=jnp.asarray(lengths),
+                         keys=jnp.asarray(keys))

@@ -8,16 +8,25 @@ from .straggler import StragglerMonitor
 
 __all__ = ["DeviceFailure", "CapacityOverflow", "ElasticSupervisor",
            "FailureInjector", "StragglerMonitor",
-           "StageFailure", "StageFailureInjector", "RetryPolicy",
-           "StageEvent", "SortSupervisor"]
+           "StageFailure", "StageTimeout", "ProcessKilled",
+           "SpeculationMismatch", "StageFailureInjector", "RetryPolicy",
+           "StageEvent", "SpeculationPolicy", "SortSupervisor",
+           "ChaosPlan", "make_plan", "apply_damages", "chaos_soak",
+           "SoakReport"]
 
 # ``sortfault``'s supervisor drives the device pipeline, but the module
 # itself is dependency-light; expose it lazily (PEP 562, the
 # ``repro.pipeline`` idiom) so ``kernels``/``core`` can import the failure
-# types above without re-entering this package mid-initialisation.
-_LAZY = {"StageFailure": "sortfault", "StageFailureInjector": "sortfault",
-         "RetryPolicy": "sortfault", "StageEvent": "sortfault",
-         "SortSupervisor": "sortfault"}
+# types above without re-entering this package mid-initialisation. ``chaos``
+# additionally imports the pipeline/device stack, so it must stay lazy.
+_LAZY = {"StageFailure": "sortfault", "StageTimeout": "sortfault",
+         "ProcessKilled": "sortfault", "SpeculationMismatch": "sortfault",
+         "StageFailureInjector": "sortfault", "RetryPolicy": "sortfault",
+         "StageEvent": "sortfault", "SpeculationPolicy": "sortfault",
+         "SortSupervisor": "sortfault",
+         "ChaosPlan": "chaos", "make_plan": "chaos",
+         "apply_damages": "chaos", "chaos_soak": "chaos",
+         "SoakReport": "chaos"}
 
 
 def __getattr__(name):

@@ -62,6 +62,16 @@ class StragglerMonitor:
                     "%d consecutive flags, new mean %.4g",
                     step, self.rebaseline_after, self.mean)
 
+    def cutoff(self) -> Optional[float]:
+        """Speculation cutoff in seconds — how long a task may run before a
+        backup is worth launching: ``None`` during warmup (no baseline to
+        judge against yet), else ``mean * min_ratio``, the same relative
+        floor :meth:`record` applies before flagging. Consumed by
+        ``runtime.sortfault.SortSupervisor.run_speculative``."""
+        if self.count < self.warmup or self.mean <= 0:
+            return None
+        return self.mean * self.min_ratio
+
     def record(self, step: int, duration: float) -> bool:
         """Returns True if this step is flagged as a straggler."""
         self.count += 1

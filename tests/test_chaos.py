@@ -1,0 +1,148 @@
+"""Seeded chaos soak: randomized fault schedules against the out-of-core
+distributed sort. Plan generation is a pure function of the seed (pinned
+here), and the soak contract — every schedule either completes bit-identical
+to the no-fault oracle or dies with a typed error whose store resumes
+bit-identically — is driven over 25 seeds on the 8-fake-device mesh in a
+subprocess (``test_distributed_sort.py``'s pattern).
+
+The soak is the single most expensive test in the suite (25 schedules x 2
+invocations over interpret-mode Pallas chunks); sizes stay at ~200 words /
+chunks of 32 so it holds within the CI chaos-soak budget.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.runtime import ChaosPlan, make_plan
+
+
+def _run_multidev(script, timeout=1800):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# plan generation: deterministic, bounded, recoverable by construction
+# ---------------------------------------------------------------------------
+
+def test_make_plan_deterministic():
+    for seed in (0, 7, 123):
+        a, b = make_plan(seed), make_plan(seed)
+        assert a == b
+        assert isinstance(a, ChaosPlan)
+    assert make_plan(1) != make_plan(2)
+
+
+def test_plans_stay_within_retry_budget():
+    """Per stage, transient + timeout faults must stay under max_retries:
+    a plan with no kill/device/damage faults has to complete invocation 1."""
+    for seed in range(200):
+        p = make_plan(seed)
+        per_stage = {}
+        for stage, _occ in p.fail_at + p.timeout_at:
+            per_stage[stage] = per_stage.get(stage, 0) + 1
+        assert all(n <= p.max_retries for n in per_stage.values()), \
+            f"seed {seed}: unrecoverable schedule {per_stage}"
+
+
+def test_plan_population_covers_required_fault_classes():
+    """Across seeds 0..24 (the CI soak population) the generator must
+    exercise every fault class the acceptance bar names: kills inside
+    ingest, exchange, and combine; store damage of each kind; both
+    validation modes."""
+    plans = [make_plan(s) for s in range(25)]
+    kill_stages = {st for p in plans for st, _ in p.kill_at}
+    assert kill_stages == {"ingest_chunk", "run_exchange",
+                          "streaming_combine"}
+    kinds = {k for p in plans for k, _store in p.damages}
+    assert {"tmp", "truncate", "short_rows", "bitflip"} <= kinds
+    assert {p.validate for p in plans} == {"cheap", "full"}
+    # bitflips only ride 'full' plans (cheap cannot promise to catch a
+    # sortedness-preserving flip) and only target the recomputable shards
+    for p in plans:
+        for kind, store in p.damages:
+            if kind == "bitflip":
+                assert p.validate == "full" and store == "shards"
+
+
+def test_timeouts_ride_dedicated_budget():
+    """Timeout faults are retryable: every generated (stage, occ) pair must
+    be reachable (occ below the per-stage occurrence ceiling)."""
+    from repro.runtime.chaos import _STAGE_OCCS
+    for seed in range(100):
+        p = make_plan(seed)
+        for stage, occ in p.fail_at + p.timeout_at + p.kill_at:
+            assert 0 <= occ < _STAGE_OCCS[stage], (seed, stage, occ)
+
+
+# ---------------------------------------------------------------------------
+# the soak
+# ---------------------------------------------------------------------------
+
+def test_chaos_soak_25_seeds_mesh(tmp_path):
+    """The acceptance bar: 25 seeded schedules on 8 fake devices, each
+    bit-identical to the oracle directly or through a typed-error resume —
+    and the population must actually have killed jobs inside run_exchange
+    and streaming_combine and caught torn-shard damage."""
+    out = _run_multidev(f"""
+import numpy as np, jax
+from repro.core.packing import pack_words
+from repro.runtime import chaos_soak
+
+assert len(jax.devices()) == 8
+rng = np.random.default_rng(0)
+alpha = list("abcdefgh")
+words = ["".join(rng.choice(alpha, l)) for l in rng.integers(0, 9, 200)]
+keys = np.asarray(pack_words(words))
+
+reports = chaos_soak(keys, seeds=range(25), workdir={str(tmp_path)!r},
+                     devices=jax.devices(), num_devices=8)
+bad = [r for r in reports if not r.ok]
+for r in bad:
+    print("BAD seed", r.seed, r.first_error, r.detail)
+assert not bad, f"{{len(bad)}} of 25 schedules broke the soak contract"
+
+fired = [(st, kind) for r in reports for (st, _o, kind) in r.fired]
+kill_stages = {{st for st, kind in fired if kind == "kill"}}
+assert "run_exchange" in kill_stages, "no seed killed the exchange"
+assert "streaming_combine" in kill_stages, "no seed killed the combine"
+assert any(kind == "timeout" for _st, kind in fired)
+damaged_kinds = {{k for r in reports for (k, _path) in r.damaged}}
+assert "truncate" in damaged_kinds, "no seed tore a landed file"
+resumes = sum(1 for r in reports if r.resumed)
+print("SOAK_OK", len(reports), "resumed", resumes,
+      "fired", len(fired), "damaged", sum(len(r.damaged) for r in reports))
+""")
+    assert "SOAK_OK 25" in out
+
+
+def test_single_seed_soak_single_device(tmp_path):
+    """Fast in-process smoke of the same harness (one seed with a kill in
+    its schedule, single repeated device) so soak regressions surface
+    outside the long mesh job too."""
+    import jax
+
+    from repro.core.packing import pack_words
+    from repro.runtime import chaos_soak
+
+    rng = np.random.default_rng(1)
+    alpha = list("abcdefgh")
+    words = ["".join(rng.choice(alpha, l))
+             for l in rng.integers(0, 9, 100)]
+    keys = np.asarray(pack_words(words))
+    seed = next(s for s in range(50) if make_plan(s).kill_at)
+    reports = chaos_soak(keys, seeds=[seed], workdir=str(tmp_path),
+                         devices=[jax.devices()[0]] * 4)
+    assert len(reports) == 1 and reports[0].ok
+    assert reports[0].resumed

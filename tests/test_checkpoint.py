@@ -98,3 +98,89 @@ def test_straggler_monitor_flags_outlier():
     assert mon.record(20, 5.0) is True
     assert flagged == [20]
     assert mon.record(21, 0.1) is False
+
+
+# ---------------------------------------------------------------------------
+# torn-write hardening (CorruptSnapshotError + tmp sweeping)
+# ---------------------------------------------------------------------------
+
+def test_truncated_npy_raises_typed_error_naming_path(tmp_path):
+    """A landed .npy torn by external damage (disk fault, tampering) must
+    raise CorruptSnapshotError carrying the path — not a bare numpy
+    exception the resume logic can't distinguish from a bug."""
+    from repro.checkpoint import CorruptSnapshotError
+
+    t = _tree()
+    save(str(tmp_path), 3, t)
+    victim = os.path.join(str(tmp_path), "step_3", "a.npy")
+    with open(victim, "r+b") as f:
+        f.truncate(os.path.getsize(victim) // 2)
+    with pytest.raises(CorruptSnapshotError) as ei:
+        restore(str(tmp_path), 3, jax.tree.map(lambda x: x, t))
+    assert victim in str(ei.value)
+    assert ei.value.path == victim
+
+
+def test_zero_length_npy_raises_typed_error(tmp_path):
+    from repro.checkpoint import CorruptSnapshotError
+
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    victim = os.path.join(str(tmp_path), "step_1", "a.npy")
+    with open(victim, "wb"):
+        pass
+    with pytest.raises(CorruptSnapshotError, match="zero-length"):
+        restore(str(tmp_path), 1, jax.tree.map(lambda x: x, t))
+
+
+def test_short_rows_vs_manifest_raises_typed_error(tmp_path):
+    """A *loadable* npy holding fewer rows than the snapshot manifest
+    records (rewritten by a confused writer) is torn data, not a caller
+    shape mistake: CorruptSnapshotError, not ValueError."""
+    from repro.checkpoint import CorruptSnapshotError
+
+    t = _tree()
+    save(str(tmp_path), 2, t)
+    victim = os.path.join(str(tmp_path), "step_2", "a.npy")
+    np.save(victim, np.asarray(t["a"])[:1])
+    with pytest.raises(CorruptSnapshotError, match="shape"):
+        restore(str(tmp_path), 2, jax.tree.map(lambda x: x, t))
+
+
+def test_torn_manifest_json_raises_typed_error(tmp_path):
+    from repro.checkpoint import CorruptSnapshotError, read_manifest
+
+    save(str(tmp_path), 5, _tree())
+    man = os.path.join(str(tmp_path), "step_5", "manifest.json")
+    with open(man, "w") as f:
+        f.write('{"step": 5, "leav')   # torn mid-write
+    with pytest.raises(CorruptSnapshotError, match="manifest"):
+        read_manifest(str(tmp_path), 5)
+
+
+def test_sweep_tmp_removes_droppings_and_keeps_landed(tmp_path):
+    from repro.checkpoint import list_steps, sweep_tmp
+
+    save(str(tmp_path), 1, _tree())
+    for n in (2, 9):
+        d = os.path.join(str(tmp_path), f".tmp_{n}")
+        os.makedirs(d)
+        with open(os.path.join(d, "partial.npy"), "wb") as f:
+            f.write(b"\x00" * 8)
+    assert sweep_tmp(str(tmp_path)) == [2, 9]
+    assert not any(x.startswith(".tmp") for x in os.listdir(tmp_path))
+    assert list_steps(str(tmp_path)) == [1]
+    assert sweep_tmp(str(tmp_path)) == []          # idempotent
+    assert sweep_tmp(str(tmp_path / "missing")) == []
+
+
+def test_run_store_sweeps_tmp_on_open(tmp_path):
+    """A job killed mid-save leaves a .tmp_* dir; opening the store must
+    sweep it so a resume only ever discovers fully landed runs."""
+    from repro.pipeline import RunStore
+
+    d = os.path.join(str(tmp_path), ".tmp_4")
+    os.makedirs(d)
+    store = RunStore(str(tmp_path))
+    assert not os.path.exists(d)
+    assert store.completed() == []

@@ -201,3 +201,106 @@ def test_empty_input_and_bad_args():
         distributed_chunked_sort_lex(keys, validate="bogus")
     with pytest.raises(ValueError, match="on_overflow"):
         distributed_chunked_sort_lex(keys, on_overflow="bogus")
+
+
+def test_kill_between_exchange_and_combine_resumes_shard_granular():
+    """A job killed mid streaming-combine (after the exchange, two
+    destinations landed) must resume with ZERO ingest launches — every
+    per-device run reloads from the run store and the exchange replays as a
+    pure function of them — and re-merge only the destinations whose shards
+    never landed. A second resume over the fully landed stores merges
+    nothing at all. Output bit-identical throughout."""
+    out = _run_multidev(_COMMON + """
+import tempfile
+from unittest import mock
+import repro.pipeline.ingest as ingest_mod
+import repro.pipeline.merge as merge_mod
+from repro.pipeline import RunStore, ShardStore
+from repro.runtime import (ProcessKilled, RetryPolicy, SortSupervisor,
+                           StageFailureInjector)
+
+oracle = distributed_chunked_sort_lex(keys)
+run_store = RunStore(tempfile.mkdtemp())
+shard_store = ShardStore(tempfile.mkdtemp())
+
+inj = StageFailureInjector(kill_at={"streaming_combine": {2}})
+sup = SortSupervisor(policy=RetryPolicy(max_retries=2), injector=inj)
+try:
+    distributed_chunked_sort_lex(keys, store=run_store,
+                                 shard_store=shard_store, supervisor=sup)
+    raise SystemExit("expected ProcessKilled")
+except ProcessKilled as e:
+    assert e.stage == "streaming_combine"
+assert run_store.completed() == list(range(8))   # ingest fully landed
+assert shard_store.completed() == [0, 1]         # killed during dest 2
+
+launches, real_ingest = [], ingest_mod.sorted_run
+real_merge = merge_mod.merge_runs
+with mock.patch.object(ingest_mod, "sorted_run",
+                       lambda k, **kw: launches.append(1)
+                       or real_ingest(k, **kw)), \
+     mock.patch.object(merge_mod, "merge_runs",
+                       side_effect=real_merge) as merges:
+    res = distributed_chunked_sort_lex(keys, store=run_store,
+                                       shard_store=shard_store,
+                                       validate="full")
+assert len(launches) == 0       # exchange replayed from reloaded runs
+assert merges.call_count == 6   # only destinations 2-7 re-merged
+assert shard_store.completed() == list(range(8))
+assert_runs_equal(res.to_run(validate="full"), oracle)
+
+with mock.patch.object(merge_mod, "merge_runs",
+                       side_effect=real_merge) as merges2:
+    res2 = distributed_chunked_sort_lex(keys, store=run_store,
+                                        shard_store=shard_store,
+                                        validate="full")
+assert merges2.call_count == 0  # double resume: pure shard reload
+assert_runs_equal(res2.to_run(), oracle)
+print("KILL_RESUME_OK")
+""")
+    assert "KILL_RESUME_OK" in out
+
+
+def test_mesh_shard_spill_bit_identical():
+    """8-device spill mode (``gather=False``): the sharded result's
+    materialisation equals the gathered oracle bit-for-bit, with one shard
+    per destination and the full metadata gate green."""
+    out = _run_multidev(_COMMON + """
+import tempfile
+from repro.pipeline import ShardedRun, ShardStore
+
+oracle = distributed_chunked_sort_lex(keys, validate="full")
+sharded = distributed_chunked_sort_lex(
+    keys, shard_store=ShardStore(tempfile.mkdtemp()), validate="full")
+assert isinstance(sharded, ShardedRun)
+assert len(sharded.manifests) == 8
+assert sharded.count == 509
+assert_runs_equal(sharded.to_run(validate="full"), oracle)
+print("SPILL_MESH_OK")
+""")
+    assert "SPILL_MESH_OK" in out
+
+
+def test_mesh_speculative_combine_bit_identical():
+    """Speculative re-execution on the mesh: a straggling combine
+    destination (injected fire-once slowness) gets a backup replica; the
+    digest-confirmed winner keeps the output bit-identical."""
+    out = _run_multidev(_COMMON + """
+from repro.runtime import (SortSupervisor, SpeculationPolicy,
+                           StageFailureInjector, StragglerMonitor)
+
+oracle = distributed_chunked_sort_lex(keys)
+mon = StragglerMonitor(warmup=3, min_ratio=3.0)
+inj = StageFailureInjector(slow_at={"streaming_combine": {5: 2.0}})
+sup = SortSupervisor(
+    injector=inj,
+    speculation=SpeculationPolicy(monitor=mon, min_wait=0.05))
+run = distributed_chunked_sort_lex(keys, supervisor=sup, validate="full")
+assert_runs_equal(run, oracle)
+assert ("streaming_combine", 5, "slow") in inj.fired
+actions = [e.action for e in sup.events]
+assert "speculate" in actions, actions
+assert "speculation_confirmed" in actions, actions
+print("SPECULATE_OK")
+""")
+    assert "SPECULATE_OK" in out

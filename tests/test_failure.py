@@ -256,3 +256,258 @@ def test_run_distributed_max_recoveries():
         sup.run_distributed(lambda d: d, 8, lambda mesh: mesh,
                             max_recoveries=2)
     assert isinstance(ei.value.__cause__, DeviceFailure)
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy seeded jitter
+# ---------------------------------------------------------------------------
+
+def test_retry_jitter_schedule_pinned():
+    """Full jitter draws from a seeded splitmix64 stream: a pure function
+    of (seed, stream, attempt), pinned here so the schedule can never
+    drift silently — chaos runs replay bit-identically."""
+    from repro.runtime import RetryPolicy
+
+    p = RetryPolicy(max_retries=3, backoff_base=0.5, jitter=1.0, seed=42)
+    assert [p.delay(a, stream=0) for a in (1, 2, 3)] == pytest.approx(
+        [0.13591061335532129, 0.7866412375473091, 1.8628382167494537])
+    # a different stream (another destination retrying the same stage)
+    # decollides: same policy, disjoint delays
+    assert [p.delay(a, stream=1) for a in (1, 2, 3)] == pytest.approx(
+        [0.20080581975595135, 0.027594869490522256, 0.20276720752981037])
+    # replay determinism
+    assert p.delay(2, stream=1) == p.delay(2, stream=1)
+
+
+def test_retry_jitter_bounds_and_legacy_exactness():
+    from repro.runtime import RetryPolicy
+
+    full = RetryPolicy(backoff_base=1.0, jitter=1.0, seed=3)
+    for stream in range(50):
+        d = full.delay(1, stream=stream)
+        assert 0.0 < d <= 1.0          # full jitter: (0, expo]
+    half = RetryPolicy(backoff_base=1.0, jitter=0.5, seed=3)
+    for stream in range(50):
+        assert 0.5 <= half.delay(1, stream=stream) <= 1.0
+    # jitter=0 keeps the legacy exact schedule regardless of stream
+    legacy = RetryPolicy(backoff_base=0.5)
+    assert [legacy.delay(a, stream=9) for a in (1, 2, 3)] == [0.5, 1.0, 2.0]
+
+
+def test_supervisor_streams_decollide_destinations():
+    """Two invocations of the same stage (two combine destinations) must
+    draw different jittered schedules, and a replayed supervisor draws the
+    same ones."""
+    from repro.runtime import RetryPolicy, SortSupervisor, StageFailureInjector
+
+    def delays_of():
+        inj = StageFailureInjector(fail_at={"streaming_combine": {0, 2}})
+        delays = []
+        sup = SortSupervisor(
+            policy=RetryPolicy(max_retries=3, backoff_base=0.5,
+                               jitter=1.0, seed=11),
+            injector=inj, sleep=delays.append)
+        sup.run_stage("streaming_combine", lambda: 1)
+        sup.run_stage("streaming_combine", lambda: 2)
+        return delays
+
+    a = delays_of()
+    assert len(a) == 2 and a[0] != a[1]     # per-destination decollision
+    assert a == delays_of()                 # replay determinism
+
+
+# ---------------------------------------------------------------------------
+# StageTimeout: injected + real deadlines
+# ---------------------------------------------------------------------------
+
+def test_injected_timeout_is_retried_like_transient():
+    from repro.runtime import (RetryPolicy, SortSupervisor,
+                               StageFailureInjector, StageTimeout)
+
+    inj = StageFailureInjector(timeout_at={"streaming_combine": {0}})
+    sup = SortSupervisor(policy=RetryPolicy(max_retries=2), injector=inj)
+    assert sup.run_stage("streaming_combine", lambda: "ok") == "ok"
+    assert inj.fired == [("streaming_combine", 0, "timeout")]
+    assert [e.action for e in sup.events] == ["timeout_retry"]
+    # exhaustion propagates the typed timeout
+    inj2 = StageFailureInjector(timeout_at={"run_exchange": {0, 1, 2}})
+    sup2 = SortSupervisor(policy=RetryPolicy(max_retries=1), injector=inj2)
+    with pytest.raises(StageTimeout):
+        sup2.run_stage("run_exchange", lambda: "never")
+
+
+def test_deadline_converts_hang_to_timeout_and_retry_succeeds():
+    """A stage outliving its wall-clock deadline becomes a retryable
+    StageTimeout; the retry (the hang was injected fire-once slowness)
+    completes. The timed-out launch is abandoned, never joined."""
+    import time as _time
+
+    from repro.runtime import (RetryPolicy, SortSupervisor,
+                               StageFailureInjector)
+
+    inj = StageFailureInjector(slow_at={"streaming_combine": {0: 0.5}})
+    sup = SortSupervisor(policy=RetryPolicy(max_retries=2), injector=inj,
+                         deadlines={"streaming_combine": 0.1})
+    t0 = _time.monotonic()
+    assert sup.run_stage("streaming_combine", lambda: "done") == "done"
+    # the retry must not block on the 0.5s abandoned sleeper
+    assert _time.monotonic() - t0 < 0.45
+    assert inj.fired == [("streaming_combine", 0, "slow")]
+    assert [e.action for e in sup.events] == ["timeout_retry"]
+    assert "deadline" in sup.events[0].detail
+
+
+def test_deadline_exhaustion_raises_stage_timeout():
+    from repro.runtime import (RetryPolicy, SortSupervisor,
+                               StageFailureInjector, StageTimeout)
+
+    inj = StageFailureInjector(
+        slow_at={"run_exchange": {0: 0.3, 1: 0.3}})
+    sup = SortSupervisor(policy=RetryPolicy(max_retries=1), injector=inj,
+                         deadlines={"run_exchange": 0.05})
+    with pytest.raises(StageTimeout) as ei:
+        sup.run_stage("run_exchange", lambda: "never")
+    assert ei.value.stage == "run_exchange"
+    assert ei.value.deadline == pytest.approx(0.05)
+
+
+def test_stages_without_deadline_run_unwrapped():
+    from repro.runtime import SortSupervisor
+
+    sup = SortSupervisor(deadlines={"other_stage": 0.01})
+    import threading
+    main = threading.get_ident()
+    seen = []
+    sup.run_stage("ingest_chunk", lambda: seen.append(threading.get_ident()))
+    assert seen == [main]   # no worker thread without a deadline
+
+
+# ---------------------------------------------------------------------------
+# ProcessKilled: never retried
+# ---------------------------------------------------------------------------
+
+def test_kill_propagates_without_retry():
+    from repro.runtime import (ProcessKilled, RetryPolicy, SortSupervisor,
+                               StageFailureInjector)
+
+    inj = StageFailureInjector(kill_at={"streaming_combine": {1}})
+    sup = SortSupervisor(policy=RetryPolicy(max_retries=5), injector=inj)
+    assert sup.run_stage("streaming_combine", lambda: 0) == 0
+    calls = []
+    with pytest.raises(ProcessKilled) as ei:
+        sup.run_stage("streaming_combine", lambda: calls.append(1))
+    assert ei.value.stage == "streaming_combine" and ei.value.occurrence == 1
+    assert calls == []                 # died at the boundary, fn never ran
+    assert sup.events == []            # no retry was attempted
+    assert inj.fired == [("streaming_combine", 1, "kill")]
+
+
+# ---------------------------------------------------------------------------
+# speculation (StragglerMonitor.cutoff + run_speculative)
+# ---------------------------------------------------------------------------
+
+def _warm_monitor(mean=0.01, warmup=3):
+    mon = StragglerMonitor(warmup=warmup, min_ratio=2.0)
+    for s in range(warmup):
+        mon.record(s, mean)
+    return mon
+
+
+def test_monitor_cutoff_warmup_then_relative_floor():
+    mon = StragglerMonitor(warmup=3, min_ratio=1.5)
+    assert mon.cutoff() is None
+    for s in range(3):
+        mon.record(s, 0.2)
+    assert mon.cutoff() == pytest.approx(0.3, rel=0.05)
+
+
+def test_run_speculative_fast_primary_no_backup():
+    from repro.runtime import SortSupervisor, SpeculationPolicy
+
+    mon = _warm_monitor()
+    sup = SortSupervisor(
+        speculation=SpeculationPolicy(monitor=mon, min_wait=0.2))
+    assert sup.run_speculative("streaming_combine", lambda: "fast") == "fast"
+    assert sup.events == []            # no speculation happened
+    assert mon.count == 4              # completion fed the baseline
+
+
+def test_run_speculative_backup_wins_and_loser_confirmed():
+    """Primary straggling (injected slow) past the cutoff: backup launches,
+    wins, and the loser's digest-equal output confirms the discard."""
+    from repro.runtime import (SortSupervisor, SpeculationPolicy,
+                               StageFailureInjector)
+
+    mon = _warm_monitor(mean=0.01)
+    inj = StageFailureInjector(slow_at={"streaming_combine": {0: 0.6}})
+    sup = SortSupervisor(
+        injector=inj,
+        speculation=SpeculationPolicy(monitor=mon, min_wait=0.05))
+    out = sup.run_speculative("streaming_combine", lambda: 41 + 1,
+                              digest_of=lambda v: v)
+    assert out == 42
+    actions = [e.action for e in sup.events]
+    assert actions == ["speculate", "speculation_confirmed"]
+    assert "backup won" in sup.events[-1].detail
+
+
+def test_run_speculative_digest_mismatch_raises():
+    from repro.runtime import (SortSupervisor, SpeculationMismatch,
+                               SpeculationPolicy, StageFailureInjector)
+
+    mon = _warm_monitor(mean=0.01)
+    inj = StageFailureInjector(slow_at={"streaming_combine": {0: 0.6}})
+    sup = SortSupervisor(
+        injector=inj,
+        speculation=SpeculationPolicy(monitor=mon, min_wait=0.05))
+    results = iter([1, 2])            # impure stage: replicas disagree
+    with pytest.raises(SpeculationMismatch):
+        sup.run_speculative("streaming_combine",
+                            lambda: next(results),
+                            digest_of=lambda v: v)
+
+
+def test_run_speculative_loser_failure_is_recorded_not_fatal():
+    """The slow loser raising after the winner completed must not fail the
+    stage — the winner already proved it computable — but is recorded."""
+    import time as _time
+
+    from repro.runtime import SortSupervisor, SpeculationPolicy
+
+    mon = _warm_monitor(mean=0.01)
+    sup = SortSupervisor(
+        speculation=SpeculationPolicy(monitor=mon, min_wait=0.05))
+    calls = []
+
+    def fn():
+        calls.append(1)
+        if len(calls) == 1:           # primary: slow, then dies
+            _time.sleep(0.4)
+            raise RuntimeError("late failure")
+        return "ok"
+
+    assert sup.run_speculative("streaming_combine", fn,
+                               digest_of=lambda v: v) == "ok"
+    actions = [e.action for e in sup.events]
+    assert actions == ["speculate", "speculation_loser_failed"]
+
+
+def test_run_speculative_transient_failure_uses_retry_budget():
+    from repro.runtime import (RetryPolicy, SortSupervisor,
+                               SpeculationPolicy, StageFailureInjector)
+
+    mon = _warm_monitor(mean=0.05)
+    inj = StageFailureInjector(fail_at={"streaming_combine": {0}})
+    sup = SortSupervisor(policy=RetryPolicy(max_retries=2), injector=inj,
+                         speculation=SpeculationPolicy(monitor=mon))
+    assert sup.run_speculative("streaming_combine", lambda: "ok") == "ok"
+    assert [e.action for e in sup.events] == ["retry"]
+
+
+def test_run_speculative_without_policy_is_run_stage():
+    from repro.runtime import SortSupervisor, StageFailureInjector
+
+    inj = StageFailureInjector(fail_at={"streaming_combine": {0}})
+    sup = SortSupervisor(injector=inj)
+    assert sup.run_speculative("streaming_combine", lambda: 7) == 7
+    assert [e.action for e in sup.events] == ["retry"]

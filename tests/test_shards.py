@@ -1,0 +1,275 @@
+"""Sharded spill combine: ``ShardStore``/``ShardedRun`` storage semantics,
+the metadata-only ``check_sharded`` gate, and the shard-granular resume /
+self-heal of ``distributed_chunked_sort_lex(shard_store=...)``.
+
+Store + gate tests are host-only (hand-built runs, no device launch). The
+end-to-end spill cases run in-process on a single CPU device repeated four
+ways — same code path as a real mesh, no subprocess needed — with sizes
+small enough for interpret-mode Pallas compiles (~120 words).
+"""
+
+import os
+from unittest import mock
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CorruptSnapshotError
+from repro.core.distributed import distributed_chunked_sort_lex
+from repro.core.packing import pack_words, unpack_words
+from repro.pipeline import (RunManifest, ShardedRun, ShardStore,
+                            SortedRun, ValidationError, check_sharded)
+
+
+def _run_of(rows):
+    """Hand-build a SortedRun from shortlex-ordered (length, *lanes) rows."""
+    lengths = jnp.asarray([r[0] for r in rows], jnp.int32)
+    keys = jnp.asarray([list(r[1:]) for r in rows], jnp.uint32) \
+        if rows else jnp.zeros((0, 2), jnp.uint32)
+    return SortedRun(lengths=lengths, keys=keys)
+
+
+def _man(run, dest):
+    return RunManifest.from_run(run, dest)
+
+
+_ROWS = [(1, 0x61000000, 0), (2, 0x61620000, 0), (3, 0x61626300, 0),
+         (4, 0x61626364, 0), (5, 0x61626364, 0x65000000)]
+
+
+# ---------------------------------------------------------------------------
+# ShardStore
+# ---------------------------------------------------------------------------
+
+def test_shard_store_roundtrip_load_and_drop(tmp_path):
+    store = ShardStore(str(tmp_path))
+    a, b = _run_of(_ROWS[:3]), _run_of(_ROWS[3:])
+    store.put(_man(a, 0), a)
+    store.put(_man(b, 1), b)
+    assert store.completed() == [0, 1]
+
+    sharded = ShardedRun(store=store,
+                         manifests=(_man(a, 0), _man(b, 1)))
+    assert sharded.count == 5
+    got = sharded.load_shard(1, validate="full")
+    np.testing.assert_array_equal(np.asarray(got.keys), np.asarray(b.keys))
+    whole = sharded.to_run(validate="full")
+    np.testing.assert_array_equal(
+        np.asarray(whole.lengths),
+        np.concatenate([np.asarray(a.lengths), np.asarray(b.lengths)]))
+
+    store.drop(0)
+    assert store.completed() == [1]
+    store.drop(0)                      # dropping a missing shard is a no-op
+    assert store.completed() == [1]
+
+
+def test_shard_store_sweeps_tmp_droppings_on_open(tmp_path):
+    store = ShardStore(str(tmp_path))
+    run = _run_of(_ROWS[:2])
+    store.put(_man(run, 0), run)
+    torn = tmp_path / ".tmp_3"
+    torn.mkdir()
+    (torn / "keys.npy").write_bytes(b"partial")
+    reopened = ShardStore(str(tmp_path))
+    assert not torn.exists()
+    assert reopened.completed() == [0]
+
+
+def test_load_shard_full_validate_catches_tampering(tmp_path):
+    store = ShardStore(str(tmp_path))
+    run = _run_of(_ROWS)
+    store.put(_man(run, 0), run)
+    victim = os.path.join(str(tmp_path), "step_0", "keys.npy")
+    arr = np.load(victim)
+    arr[2, 0] ^= 1                    # sortedness-preserving content flip
+    np.save(victim, arr)
+    sharded = ShardedRun(store=store, manifests=(_man(run, 0),))
+    with pytest.raises(ValidationError):
+        sharded.load_shard(0, validate="full")
+    # and a torn file surfaces as the typed checkpoint error
+    with open(victim, "r+b") as f:
+        f.truncate(40)
+    with pytest.raises(CorruptSnapshotError):
+        sharded.load_shard(0)
+
+
+def test_empty_sharded_run_materialises_empty(tmp_path):
+    sharded = ShardedRun(store=ShardStore(str(tmp_path)), manifests=())
+    assert sharded.count == 0
+    run = sharded.to_run()
+    assert int(run.keys.shape[0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# check_sharded: the metadata-only conservation + ordering gate
+# ---------------------------------------------------------------------------
+
+def _gate_fixtures():
+    runs = [_run_of(_ROWS[:3]), _run_of(_ROWS[3:])]
+    # shards partition by shortlex order: [rows 0-1] then [rows 2-4]
+    shards = [_run_of(_ROWS[:2]), _run_of(_ROWS[2:])]
+    return ([_man(r, i) for i, r in enumerate(runs)],
+            [_man(s, i) for i, s in enumerate(shards)])
+
+
+def test_check_sharded_accepts_conserving_partition():
+    run_mans, shard_mans = _gate_fixtures()
+    check_sharded(run_mans, shard_mans, mode="cheap")
+    check_sharded(run_mans, shard_mans, mode="full")
+
+
+def test_check_sharded_count_loss():
+    run_mans, shard_mans = _gate_fixtures()
+    with pytest.raises(ValidationError, match="lost or duplicated"):
+        check_sharded(run_mans, shard_mans[:1], mode="cheap")
+
+
+def test_check_sharded_histogram_swap_same_total():
+    run_mans, shard_mans = _gate_fixtures()
+    # same total count, one row moved between length buckets
+    swapped = _run_of([(1, 0x61000000, 0), (1, 0x62000000, 0)])
+    with pytest.raises(ValidationError, match="histogram"):
+        check_sharded(run_mans, [_man(swapped, 0), shard_mans[1]],
+                      mode="cheap")
+
+
+def test_check_sharded_boundary_disorder():
+    run_mans, shard_mans = _gate_fixtures()
+    with pytest.raises(ValidationError, match="boundary"):
+        check_sharded(run_mans, list(reversed(shard_mans)), mode="cheap")
+
+
+def test_check_sharded_digest_mismatch_full_only():
+    run_mans, shard_mans = _gate_fixtures()
+    # flip one key lane bit, same lengths: histogram + boundaries conserve
+    rows = list(_ROWS[2:])
+    rows[1] = (rows[1][0], rows[1][1] ^ 1, rows[1][2])
+    tampered = [_man(_run_of(_ROWS[:2]), 0), _man(_run_of(rows), 1)]
+    check_sharded(run_mans, tampered, mode="cheap")   # cheap can't see it
+    with pytest.raises(ValidationError, match="digest"):
+        check_sharded(run_mans, tampered, mode="full")
+
+
+def test_check_sharded_empty_shards_skip_boundary():
+    run_mans, shard_mans = _gate_fixtures()
+    empty = _man(_run_of([]), 2)
+    check_sharded(run_mans, shard_mans + [empty], mode="full")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end spill on a single repeated device
+# ---------------------------------------------------------------------------
+
+def _words(n=120, seed=0):
+    rng = np.random.default_rng(seed)
+    alpha = list("abcdefgh")
+    return ["".join(rng.choice(alpha, l)) for l in rng.integers(0, 9, n)]
+
+
+def test_spill_bit_identical_to_gather(tmp_path):
+    words = _words()
+    keys = np.asarray(pack_words(words))
+    devs = [jax.devices()[0]] * 4
+    oracle = distributed_chunked_sort_lex(keys, devices=devs,
+                                          validate="full")
+    store = ShardStore(str(tmp_path))
+    sharded = distributed_chunked_sort_lex(keys, devices=devs,
+                                           shard_store=store,
+                                           validate="full")
+    assert isinstance(sharded, ShardedRun)
+    assert len(sharded.manifests) == 4      # one shard per destination
+    assert sharded.count == len(words)
+    run = sharded.to_run(validate="full")
+    np.testing.assert_array_equal(np.asarray(run.keys),
+                                  np.asarray(oracle.keys))
+    shortlex = sorted(words, key=lambda w: (len(w.encode()), w.encode()))
+    assert unpack_words(np.asarray(run.keys)) == shortlex
+
+
+def test_spill_with_gather_returns_run_and_persists_shards(tmp_path):
+    """``gather=True`` alongside a shard store: the caller gets the
+    materialised run AND the shards land durably for resume."""
+    keys = np.asarray(pack_words(_words(90, seed=3)))
+    devs = [jax.devices()[0]] * 4
+    store = ShardStore(str(tmp_path))
+    run = distributed_chunked_sort_lex(keys, devices=devs,
+                                       shard_store=store, gather=True,
+                                       validate="full")
+    assert int(run.keys.shape[0]) == 90
+    assert store.completed() == [0, 1, 2, 3]
+
+
+def test_gather_false_without_store_rejected():
+    with pytest.raises(ValueError, match="shard_store"):
+        distributed_chunked_sort_lex(np.zeros((4, 2), np.uint32),
+                                     devices=[jax.devices()[0]] * 2,
+                                     gather=False)
+
+
+def test_shard_resume_skips_completed_merges(tmp_path):
+    """Second invocation over a fully landed shard store must re-merge
+    nothing: every destination resumes from its shard."""
+    import repro.pipeline.merge as merge_mod
+
+    keys = np.asarray(pack_words(_words()))
+    devs = [jax.devices()[0]] * 4
+    store = ShardStore(str(tmp_path))
+    first = distributed_chunked_sort_lex(keys, devices=devs,
+                                         shard_store=store,
+                                         validate="full")
+    real = merge_mod.merge_runs
+    with mock.patch.object(merge_mod, "merge_runs",
+                           side_effect=real) as spy:
+        again = distributed_chunked_sort_lex(keys, devices=devs,
+                                             shard_store=store,
+                                             validate="full")
+        assert spy.call_count == 0
+    np.testing.assert_array_equal(
+        np.asarray(first.to_run().keys), np.asarray(again.to_run().keys))
+
+
+def test_torn_shard_self_heals_on_resume(tmp_path):
+    """A shard truncated after landing (external damage) fails its load on
+    resume and is recomputed — the resumed result stays bit-identical and
+    the healed shard passes the full gate."""
+    import repro.pipeline.merge as merge_mod
+
+    keys = np.asarray(pack_words(_words()))
+    devs = [jax.devices()[0]] * 4
+    store = ShardStore(str(tmp_path))
+    first = distributed_chunked_sort_lex(keys, devices=devs,
+                                         shard_store=store,
+                                         validate="full")
+    victim = os.path.join(str(tmp_path), "step_2", "keys.npy")
+    with open(victim, "r+b") as f:
+        f.truncate(32)
+    real = merge_mod.merge_runs
+    with mock.patch.object(merge_mod, "merge_runs",
+                           side_effect=real) as spy:
+        healed = distributed_chunked_sort_lex(keys, devices=devs,
+                                              shard_store=store,
+                                              validate="full")
+        assert spy.call_count == 1     # only the damaged destination
+    np.testing.assert_array_equal(
+        np.asarray(first.to_run().keys),
+        np.asarray(healed.to_run(validate="full").keys))
+
+
+def test_stale_shard_store_recomputes(tmp_path):
+    """A shard store left over from a different dataset (counts/digests
+    that don't match the incoming sub-runs) must be ignored, not merged."""
+    devs = [jax.devices()[0]] * 4
+    store = ShardStore(str(tmp_path))
+    old = np.asarray(pack_words(_words(100, seed=1)))
+    distributed_chunked_sort_lex(old, devices=devs, shard_store=store)
+    new_words = _words(120, seed=2)
+    new = np.asarray(pack_words(new_words))
+    sharded = distributed_chunked_sort_lex(new, devices=devs,
+                                           shard_store=store,
+                                           validate="full")
+    shortlex = sorted(new_words,
+                      key=lambda w: (len(w.encode()), w.encode()))
+    assert unpack_words(np.asarray(sharded.to_run().keys)) == shortlex
